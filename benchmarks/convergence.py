@@ -1,0 +1,37 @@
+"""Paper fig. 3/.7/.8: convergence curves — dithered backprop must track the
+baseline loss trajectory (no slowdown in epochs/steps)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs import paper_models as pm
+from repro.core import DitherPolicy
+
+from benchmarks.harness import train_classifier
+
+
+def run(steps: int = 80) -> List[Dict]:
+    model = pm.lenet5()
+    rows = []
+    for name, pol in (
+        ("baseline", None),
+        ("dithered", DitherPolicy(variant="paper", s=2.0)),
+        ("8bit+dith", DitherPolicy(variant="int8", s=2.0)),
+    ):
+        r = train_classifier(model, pol, steps=steps)
+        rows.append({"method": name, "acc": r["acc"],
+                     "final_loss": r["final_loss"],
+                     "us_per_step": r["us_per_step"]})
+    return rows
+
+
+def bench(quick: bool = True):
+    rows = run(steps=40 if quick else 120)
+    base = next(r for r in rows if r["method"] == "baseline")
+    out = []
+    for r in rows:
+        out.append((
+            f"fig3/{r['method']}", r["us_per_step"],
+            f"acc={r['acc']:.1f}% final_loss={r['final_loss']:.3f}"
+            f" dacc={r['acc'] - base['acc']:+.1f}"))
+    return out

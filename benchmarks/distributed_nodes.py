@@ -1,0 +1,60 @@
+"""Paper figs. 5/6/.10/.11: distributed dithered SSGD — as the number of
+nodes N grows (and s is scaled with N), per-node sparsity rises and
+worst-case bit-width falls while final accuracy stays flat."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+
+from repro.configs import paper_models as pm
+from repro.core import DitherPolicy
+from repro.core import stats as statslib
+from repro.data import ClassifConfig, classification_batch
+from repro.distributed import SSGDConfig, make_ssgd_step, shard_batch
+from repro.models.cnn import accuracy
+from repro.optim import OptConfig, init_opt_state
+
+
+def run(node_counts=(1, 2, 4, 8), steps: int = 40, batch: int = 32,
+        seed: int = 0) -> List[Dict]:
+    rows = []
+    for n in node_counts:
+        statslib.reset()
+        model = pm.mlp_mnist(hidden=(256, 256))
+        key = jax.random.PRNGKey(seed)
+        params, _ = model.init(key)
+        opt_cfg = OptConfig(name="sgd", lr=0.05, momentum=0.9,
+                            weight_decay=5e-4, grad_clip=None)
+        dcfg = SSGDConfig(n_nodes=n, s_schedule="sqrt", s_base=2.0)
+        pol = DitherPolicy(variant="paper", collect_stats=True,
+                           stats_tag=f"dist{n}/")
+        step_fn, used_policy = make_ssgd_step(model, opt_cfg, dcfg, pol)
+        state = init_opt_state(params, opt_cfg)
+        data_cfg = ClassifConfig(n_classes=10, img_size=28, channels=1,
+                                 noise=0.5, seed=seed)
+        t0 = time.perf_counter()
+        for i in range(steps):
+            b = classification_batch(data_cfg, i, batch=batch)
+            params, state, _ = step_fn(params, state, shard_batch(b, n), key)
+        us = (time.perf_counter() - t0) / steps * 1e6
+        test = classification_batch(data_cfg, 10**6, batch=512)
+        rows.append({
+            "n_nodes": n,
+            "s": used_policy.s,
+            "acc": float(accuracy(params, model.cfg, test)) * 100,
+            "sparsity": statslib.overall_sparsity() * 100,
+            "max_bits": statslib.overall_max_bits(),
+            "us_per_step": us,
+        })
+    return rows
+
+
+def bench(quick: bool = True):
+    rows = run(node_counts=(1, 2, 4) if quick else (1, 2, 4, 8, 16),
+               steps=30 if quick else 80)
+    return [(
+        f"fig5-6/N={r['n_nodes']}", r["us_per_step"],
+        f"s={r['s']:.2f} acc={r['acc']:.1f}% sparsity={r['sparsity']:.1f}%"
+        f" bits={r['max_bits']:.0f}") for r in rows]

@@ -1,0 +1,93 @@
+"""Shared benchmark utilities: timed training runs with dither telemetry."""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DitherCtx, DitherPolicy
+from repro.core import stats as statslib
+from repro.data import ClassifConfig, classification_batch
+from repro.models.api import Model
+from repro.models.cnn import accuracy
+from repro.optim import OptConfig, apply_updates, init_opt_state
+
+
+def train_classifier(model: Model, policy: Optional[DitherPolicy], *,
+                     steps: int = 60, batch: int = 64, lr: float = 0.05,
+                     seed: int = 0, noise: float = 0.5,
+                     img: Optional[Tuple[int, int]] = None,
+                     n_classes: int = 10) -> Dict[str, float]:
+    """Paper-recipe SGD training on the synthetic classification set.
+
+    Returns acc%, mean dither sparsity%, worst-case bits, us/step.
+    """
+    if policy is not None and policy.collect_stats:
+        statslib.reset()
+    cfg = model.cfg
+    img_size, channels = (cfg.img_size, cfg.in_channels) if img is None else img
+    key = jax.random.PRNGKey(seed)
+    params, _ = model.init(key)
+    opt_cfg = OptConfig(name="sgd", lr=lr, momentum=0.9, weight_decay=5e-4,
+                        grad_clip=None, schedule="step",
+                        step_decay_every=max(steps // 2, 1),
+                        step_decay_rate=0.1)
+    state = init_opt_state(params, opt_cfg)
+    dcfg = ClassifConfig(n_classes=n_classes, img_size=img_size,
+                         channels=channels, noise=noise, seed=seed)
+
+    @jax.jit
+    def step_fn(params, state, b, bk):
+        ctx = (DitherCtx.for_step(bk, state["step"], policy)
+               if policy is not None and policy.enabled else None)
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss(p, b, ctx=ctx))(params)
+        params, state, _ = apply_updates(params, grads, state, opt_cfg)
+        return params, state, loss
+
+    # warmup/compile
+    b0 = classification_batch(dcfg, 0, batch=batch)
+    params, state, _ = step_fn(params, state, b0, key)
+    t0 = time.perf_counter()
+    losses = []
+    for i in range(1, steps):
+        b = classification_batch(dcfg, i, batch=batch)
+        params, state, loss = step_fn(params, state, b, key)
+        losses.append(float(loss))
+    dt_us = (time.perf_counter() - t0) / max(steps - 1, 1) * 1e6
+    test = classification_batch(dcfg, 10**6, batch=512)
+    acc = float(accuracy(params, cfg, test)) * 100
+    out = {"acc": acc, "us_per_step": dt_us,
+           "final_loss": losses[-1] if losses else float("nan")}
+    if policy is not None and policy.collect_stats:
+        out["sparsity"] = statslib.overall_sparsity() * 100
+        out["max_bits"] = statslib.overall_max_bits()
+    return out
+
+
+def measure_baseline_sparsity(model: Model, *, steps: int = 5,
+                              batch: int = 64, noise: float = 0.5,
+                              seed: int = 0) -> float:
+    """Sparsity of the RAW pre-activation gradients (Table-1 'Baseline'
+    sparsity column) via the tap probe."""
+    from repro.core import probe
+    from repro.models.cnn import tap_shapes
+
+    cfg = model.cfg
+    key = jax.random.PRNGKey(seed)
+    params, _ = model.init(key)
+    dcfg = ClassifConfig(n_classes=cfg.n_classes, img_size=cfg.img_size,
+                         channels=cfg.in_channels, noise=noise, seed=seed)
+    shapes = tap_shapes(cfg, batch)
+    sps = []
+    for i in range(steps):
+        b = classification_batch(dcfg, i, batch=batch)
+        taps = probe.make_taps(shapes)
+        grads = probe.grad_wrt_taps(
+            lambda p, taps: model.loss(p, b, taps=taps), taps, params)
+        for name, g in grads.items():
+            sps.append(float(probe.baseline_sparsity(g)))
+    return float(np.mean(sps)) * 100

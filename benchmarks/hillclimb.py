@@ -1,0 +1,121 @@
+"""§Perf hillclimb driver: run one (arch x shape) cell under a named list of
+variants (sharding-rule mutations, dither policy, model config patches),
+and print the before/after roofline terms + per-collective breakdown.
+
+Each variant is a HYPOTHESIS about the dominant roofline term; the output
+is the 'measure' step of the hypothesis -> change -> measure -> validate
+loop recorded in EXPERIMENTS.md §Perf.
+
+Run as a module *only from a fresh process* (it imports repro.launch.dryrun
+which pins 512 host devices):
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell qwen2.5-32b:train_4k
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+from typing import Callable, Dict, List, Optional
+
+
+def variants_for(arch: str, shape: str) -> Dict[str, dict]:
+    """Named variant registry. Keys map to EXPERIMENTS.md §Perf entries."""
+    from repro.core.policy import DitherPolicy
+    from repro.launch import costmodel
+    from repro.launch.dryrun import make_rules
+
+    V: Dict[str, dict] = {"baseline(paper)": {}}
+
+    V["dither-off"] = {"policy": None}
+    V["dither-int8-bwd"] = {"policy": DitherPolicy(variant="int8", s=2.0)}
+    V["dither-row"] = {"policy": DitherPolicy(variant="row")}
+
+    # sharding mutations
+    def rules_seqshard(mesh, case, arch_id):
+        r = make_rules(mesh, case, arch_id)
+        r.mapping["cache_seq"] = "model"
+        return r
+
+    def rules_fsdp(mesh, case, arch_id):
+        r = make_rules(mesh, case, arch_id)
+        r.mapping["embed"] = "data" if "data" in mesh.shape else None
+        return r
+
+    def rules_no_act_constraints(mesh, case, arch_id):
+        r = make_rules(mesh, case, arch_id)
+        for k in list(r.mapping):
+            if k.startswith("act_"):
+                r.mapping[k] = None
+        return r
+
+    def rules_seq_parallel_train(mesh, case, arch_id):
+        r = make_rules(mesh, case, arch_id)
+        r.mapping["seq"] = "model"
+        return r
+
+    if shape.startswith("decode") or shape.startswith("long"):
+        V["kv-seq-sharded"] = {"rules": rules_seqshard}
+        V["weights-fsdp"] = {"rules": rules_fsdp}
+    else:
+        V["no-act-constraints"] = {"rules": rules_no_act_constraints}
+        V["seq-parallel"] = {"rules": rules_seq_parallel_train}
+
+    return V
+
+
+def run_variants(arch: str, shape: str, names: Optional[List[str]] = None,
+                 extra: Optional[Dict[str, dict]] = None):
+    from repro.core.policy import DitherPolicy
+    from repro.launch import dryrun
+
+    V = variants_for(arch, shape)
+    if extra:
+        V.update(extra)
+    rows = []
+    for name, spec in V.items():
+        if names and name not in names and name != "baseline(paper)":
+            continue
+        # default: the paper-faithful policy; variants may override (or None)
+        policy = spec["policy"] if "policy" in spec \
+            else DitherPolicy(variant="paper", s=2.0)
+        res = dryrun.run_cell(
+            arch, shape,
+            policy=policy,
+            rules_override=spec.get("rules"),
+            model_override=spec.get("model"),
+            verbose=False)
+        row = {"variant": name, "status": res.status,
+               "compile_s": round(res.compile_s, 1)}
+        if res.report:
+            r = res.report
+            row.update({
+                "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+                "collective_s": r["collective_s"], "dominant": r["dominant"],
+                "frac": r["roofline_fraction"],
+                "useful": r["useful_ratio"],
+                "by_op": r["collectives_by_op"],
+            })
+        else:
+            row["reason"] = res.reason
+        rows.append(row)
+        print(json.dumps(row, default=str))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--variants", default="", help="comma list (default all)")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+    names = [v for v in args.variants.split(",") if v] or None
+    rows = run_variants(arch, shape, names)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

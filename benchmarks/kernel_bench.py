@@ -1,0 +1,58 @@
+"""Kernel micro-benchmarks.
+
+Wall-clock here is interpret-mode (CPU) and NOT indicative of TPU perf; the
+meaningful derived metric is the *work-skipped fraction* (tiles masked off)
+and the dense-vs-kernel FLOP ratio, which transfer to hardware. The numbers
+feed EXPERIMENTS.md §Perf alongside the dry-run roofline terms.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nsd
+from repro.core.rowdither import row_dither_compact
+from repro.kernels.ops import dithered_backward_matmuls, nsd_quantize_kernel
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench(quick: bool = True) -> List[Tuple[str, float, str]]:
+    key = jax.random.PRNGKey(0)
+    out = []
+    T, K, N = (512, 512, 512) if quick else (2048, 1024, 2048)
+    g = jax.random.normal(key, (T, N), jnp.float32) * 0.01
+    x = jax.random.normal(jax.random.fold_in(key, 1), (T, K))
+    w = jax.random.normal(jax.random.fold_in(key, 2), (K, N)) * 0.02
+
+    for s in (2.0, 8.0):
+        us = _time(lambda: nsd_quantize_kernel(g, key, s, bm=128, bn=128))
+        k_q, delta, nnz = nsd_quantize_kernel(g, key, s, bm=128, bn=128)
+        sp = float(jnp.mean(k_q == 0))
+        tiles_skipped = float(jnp.mean(nnz == 0))
+        out.append((f"kern/nsd_quant_s{s:g}", us,
+                    f"elem_sparsity={sp:.3f} tile_skip={tiles_skipped:.3f}"))
+
+    us = _time(lambda: dithered_backward_matmuls(
+        g, x, w, key, 2.0, int8_operands=True))
+    out.append(("kern/dithered_bwd_int8", us,
+                f"shape=({T},{K},{N}) both products int8-MXU path"))
+
+    # structured row dither: fraction of rows (=MXU work) removed
+    for alpha in (1.0, 2.0):
+        c = row_dither_compact(g, key, alpha, capacity=T)
+        kept = float(c.n_rows) / T
+        us = _time(lambda: row_dither_compact(g, key, alpha, capacity=T))
+        out.append((f"kern/row_dither_a{alpha:g}", us,
+                    f"rows_kept={kept:.3f} contraction_flops_x{kept:.3f}"))
+    return out

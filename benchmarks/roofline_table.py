@@ -1,0 +1,65 @@
+"""Roofline table reader: renders the dry-run grid JSON (produced by
+``python -m repro.launch.dryrun --all --both-meshes --out <json>``) as the
+EXPERIMENTS.md §Roofline table."""
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Tuple
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                            "results", "dryrun_grid.json")
+OPTIMIZED_PATH = os.path.join(os.path.dirname(__file__), "..",
+                              "results", "dryrun_grid_optimized.json")
+
+
+def load(path: str = DEFAULT_PATH):
+    with open(path) as f:
+        return json.load(f)
+
+
+def render(cells, mesh: str = "16x16") -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'comp_s':>9s} {'mem_s':>9s} "
+           f"{'coll_s':>9s} {'dom':>10s} {'useful':>7s} {'frac':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for c in cells:
+        if c["mesh"] != mesh:
+            continue
+        if c["status"] == "SKIPPED":
+            lines.append(f"{c['arch']:22s} {c['shape']:12s} "
+                         f"SKIPPED: {c['reason']}")
+            continue
+        if c["status"] == "FAILED":
+            lines.append(f"{c['arch']:22s} {c['shape']:12s} "
+                         f"FAILED: {c['reason'][:60]}")
+            continue
+        r = c["report"]
+        lines.append(
+            f"{c['arch']:22s} {c['shape']:12s} {r['compute_s']:9.4f} "
+            f"{r['memory_s']:9.4f} {r['collective_s']:9.4f} "
+            f"{r['dominant']:>10s} {r['useful_ratio']:7.3f} "
+            f"{r['roofline_fraction']:7.4f}")
+    return "\n".join(lines)
+
+
+def bench(quick: bool = True) -> List[Tuple[str, float, str]]:
+    out = []
+    for tag, path in (("baseline", DEFAULT_PATH),
+                      ("optimized", OPTIMIZED_PATH)):
+        if not os.path.exists(path):
+            out.append((f"roofline/{tag}", 0.0,
+                        "grid not found - run repro.launch.dryrun --all"))
+            continue
+        for c in load(path):
+            # multi-pod cells skip the scan-cost anchor correction (they
+            # exist to prove the pod axis lowers), so only single-pod rows
+            # carry valid roofline terms
+            if c["status"] != "OK" or c["mesh"] != "16x16":
+                continue
+            r = c["report"]
+            out.append((
+                f"roofline-{tag}/{c['arch']}/{c['shape']}",
+                max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+                f"dom={r['dominant']} frac={r['roofline_fraction']:.4f} "
+                f"useful={r['useful_ratio']:.3f}"))
+    return out

@@ -1,0 +1,62 @@
+"""Benchmark runner — one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only table1,...]
+
+Prints ``name,us_per_call,derived`` CSV rows. Paper mapping:
+  table1     -> Table 1 (acc + sparsity, 4 methods x models)
+  fig3       -> Fig 3/.7/.8 (convergence parity)
+  fig4       -> Fig 4/.9 (dither vs meProp at matched sparsity)
+  fig5-6     -> Fig 5/6/.10/.11 (distributed: s(N) scaling)
+  kern       -> kernel microbenches (tile-skip & int8 path)
+  roofline   -> dry-run roofline table (deliverable g)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full model set + longer runs")
+    ap.add_argument("--only", default="",
+                    help="comma list: table1,fig3,fig4,fig5-6,kern,roofline")
+    args = ap.parse_args()
+    quick = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (complexity, convergence, distributed_nodes,
+                            kernel_bench, meprop_compare, roofline_table,
+                            table1_sparsity)
+
+    suites = {
+        "table1": table1_sparsity.bench,
+        "fig3": convergence.bench,
+        "fig4": meprop_compare.bench,
+        "fig4-hard": meprop_compare.bench_hard,
+        "fig5-6": distributed_nodes.bench,
+        "kern": kernel_bench.bench,
+        "complexity": complexity.bench,
+        "roofline": roofline_table.bench,
+    }
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in suites.items():
+        if only is not None and name not in only:
+            continue
+        try:
+            for row_name, us, derived in fn(quick=quick):
+                print(f"{row_name},{us:.1f},{derived}")
+                sys.stdout.flush()
+        except Exception:
+            failed += 1
+            traceback.print_exc()
+            print(f"{name},nan,SUITE_FAILED")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Paper Table 1: accuracy + pre-activation-gradient sparsity for
+{Baseline, Dithered, 8-bit, 8-bit+Dithered} across the paper's models
+(on the synthetic offline stand-in datasets; see EXPERIMENTS.md)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs import paper_models as pm
+from repro.core import DitherPolicy
+
+from benchmarks.harness import measure_baseline_sparsity, train_classifier
+
+QUICK_MODELS = ("mlp-mnist", "lenet300100", "lenet5")
+FULL_MODELS = QUICK_MODELS + ("alexnet-c10", "vgg11-c10", "resnet18-c10")
+
+
+def _model(name: str):
+    return {
+        "mlp-mnist": lambda: pm.mlp_mnist(hidden=(500, 500)),
+        "lenet300100": pm.lenet300100,
+        "lenet5": pm.lenet5,
+        "alexnet-c10": pm.alexnet_cifar,
+        "vgg11-c10": pm.vgg11_cifar,
+        "resnet18-c10": pm.resnet18_cifar,
+    }[name]()
+
+
+def run(quick: bool = True, steps: int = 50) -> List[Dict]:
+    rows = []
+    names = QUICK_MODELS if quick else FULL_MODELS
+    for name in names:
+        model = _model(name)
+        base_sp = measure_baseline_sparsity(model, steps=3)
+        res_base = train_classifier(model, None, steps=steps)
+        methods = {
+            "dithered": DitherPolicy(variant="paper", s=2.0,
+                                     collect_stats=True, stats_tag=f"{name}/d/"),
+            "int8+dith": DitherPolicy(variant="int8", s=2.0,
+                                      collect_stats=True,
+                                      stats_tag=f"{name}/i/"),
+        }
+        row = {
+            "model": name,
+            "baseline_acc": res_base["acc"],
+            "baseline_sparsity": base_sp,
+            "us_per_step_baseline": res_base["us_per_step"],
+        }
+        for mname, pol in methods.items():
+            r = train_classifier(model, pol, steps=steps)
+            row[f"{mname}_acc"] = r["acc"]
+            row[f"{mname}_sparsity"] = r.get("sparsity", float("nan"))
+            row[f"{mname}_bits"] = r.get("max_bits", float("nan"))
+            row[f"us_per_step_{mname}"] = r["us_per_step"]
+        rows.append(row)
+    return rows
+
+
+def bench(quick: bool = True):
+    """CSV rows for benchmarks.run: name,us_per_call,derived."""
+    out = []
+    for row in run(quick=quick):
+        derived = (f"acc_base={row['baseline_acc']:.1f}%"
+                   f" acc_dith={row['dithered_acc']:.1f}%"
+                   f" sp_base={row['baseline_sparsity']:.1f}%"
+                   f" sp_dith={row['dithered_sparsity']:.1f}%"
+                   f" bits={row['dithered_bits']:.0f}"
+                   f" acc_8bit_dith={row['int8+dith_acc']:.1f}%"
+                   f" sp_8bit_dith={row['int8+dith_sparsity']:.1f}%")
+        out.append((f"table1/{row['model']}",
+                    row["us_per_step_dithered"], derived))
+    return out

@@ -1,0 +1,57 @@
+"""Quickstart: dithered backprop in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Trains a 2-layer MLP with the paper's NSD-quantized backward pass and prints
+the induced pre-activation-gradient sparsity + worst-case bit-width — the
+two quantities of paper Table 1.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import DitherCtx, DitherPolicy, dense
+from repro.core import stats as statslib
+
+key = jax.random.PRNGKey(0)
+k1, k2, k3 = jax.random.split(key, 3)
+
+# toy regression task
+X = jax.random.normal(k1, (256, 64))
+W_true = jax.random.normal(k2, (64, 1))
+Y = X @ W_true + 0.1 * jax.random.normal(k3, (256, 1))
+
+params = {
+    "w1": jax.random.normal(k1, (64, 128)) * 0.1,
+    "w2": jax.random.normal(k2, (128, 1)) * 0.1,
+}
+
+# ONE knob: Delta = s * std(grad). collect_stats feeds the telemetry sink.
+policy = DitherPolicy(variant="paper", s=2.0, collect_stats=True,
+                      stats_tag="quickstart/")
+
+
+def loss_fn(p, ctx):
+    h = jax.nn.relu(dense(X, p["w1"], ctx=ctx, name="fc1"))
+    pred = dense(h, p["w2"], ctx=ctx, name="fc2")
+    return jnp.mean((pred - Y) ** 2)
+
+
+@jax.jit
+def step(p, i):
+    ctx = DitherCtx.for_step(key, i, policy)
+    loss, g = jax.value_and_grad(loss_fn)(p, ctx)
+    return jax.tree.map(lambda w, gw: w - 0.05 * gw, p, g), loss
+
+
+for i in range(200):
+    params, loss = step(params, i)
+    if i % 50 == 0:
+        print(f"step {i:4d} loss {float(loss):.4f}")
+
+print(f"final loss {float(loss):.4f}")
+summ = statslib.summary()
+for layer, s in summ.items():
+    print(f"{layer}: mean sparsity {s['mean_sparsity']*100:.1f}% "
+          f"worst-case bits {s['max_bits']:.0f}")
+print(f"overall sparsity: {statslib.overall_sparsity()*100:.1f}% "
+      f"(paper reports 75-99% across models)")

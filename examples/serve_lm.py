@@ -1,0 +1,37 @@
+"""Serve a small LM with batched requests through the slot engine.
+
+    PYTHONPATH=src python examples/serve_lm.py --requests 6 --new-tokens 12
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_model
+from repro.serve import Engine, Request, ServeConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    args = ap.parse_args()
+
+    model = get_smoke_model(args.arch)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, ServeConfig(max_batch=4, max_len=128))
+    rng = np.random.default_rng(0)
+    vocab = model.cfg.vocab
+    for uid in range(args.requests):
+        eng.submit(Request(uid=uid, prompt=rng.integers(0, vocab, size=5),
+                           max_new_tokens=args.new_tokens))
+    done = eng.run(max_ticks=args.new_tokens * 4)
+    for uid in sorted(done):
+        print(f"req {uid}: {done[uid]}")
+    print(f"served {len(done)}/{args.requests} with "
+          f"{min(4, args.requests)}-wide continuous batching")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""hymba-1.5b [hybrid]: 32L d1600 25H (GQA kv=5) ff5504 V=32001,
+parallel attn+mamba heads, ssm_state=16, meta tokens, SWA + 3 global.
+[arXiv:2411.13676]"""
+import jax.numpy as jnp
+from repro.models.api import hybrid_model
+from repro.models.hybrid import HybridConfig
+
+ARCH_ID = "hymba-1.5b"
+
+
+def config():
+    return hybrid_model(HybridConfig(
+        name=ARCH_ID, n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5,
+        d_ff=5504, vocab=32001, head_dim=64, d_state=16, expand=2,
+        window=1024, n_meta_tokens=128, dtype=jnp.bfloat16,
+    ))
+
+
+def smoke():
+    return hybrid_model(HybridConfig(
+        name=ARCH_ID + "-smoke", n_layers=3, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab=512, head_dim=16, d_state=8,
+        expand=2, window=8, n_meta_tokens=4, dtype=jnp.float32, remat=False,
+    ))

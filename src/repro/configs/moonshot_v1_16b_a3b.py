@@ -1,0 +1,29 @@
+"""moonshot-v1-16b-a3b [moe]: 48L d2048 16H (MHA kv=16) ff1408/expert
+V=163840, 64 experts top-6 + 2 shared (DeepSeek-style).
+[hf:moonshotai/Moonlight-16B-A3B]"""
+import jax.numpy as jnp
+from repro.models.api import lm_model
+from repro.models.moe import MoEConfig
+from repro.models.transformer import LMConfig
+
+ARCH_ID = "moonshot-v1-16b-a3b"
+
+
+def config():
+    return lm_model(LMConfig(
+        name=ARCH_ID, n_layers=48, d_model=2048, n_heads=16, n_kv_heads=16,
+        d_ff=1408, vocab=163840, head_dim=128, act="swiglu",
+        tie_embeddings=False, rope_theta=50_000.0, dtype=jnp.bfloat16,
+        moe=MoEConfig(n_experts=64, top_k=6, d_ff_expert=1408, n_shared=2,
+                      a2a_int8=True),  # §Perf dbrx/It2
+    ), family="moe")
+
+
+def smoke():
+    return lm_model(LMConfig(
+        name=ARCH_ID + "-smoke", n_layers=2, d_model=128, n_heads=4,
+        n_kv_heads=4, d_ff=64, vocab=512, head_dim=32, act="swiglu",
+        tie_embeddings=False, dtype=jnp.float32, remat=False,
+        moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=32, n_shared=1,
+                      dispatch="einsum"),
+    ), family="moe")

@@ -1,0 +1,37 @@
+"""The paper's own experiment models (Table 1 / fig 4): MLP-(500,500),
+LeNet-300-100, LeNet5, AlexNet-CIFAR (hidden 2048), VGG11-CIFAR (FC 512),
+ResNet18 — built on synthetic stand-ins for MNIST/CIFAR (offline container).
+"""
+from repro.models.api import cnn_model
+from repro.models.cnn import CNNConfig
+
+
+def mlp_mnist(hidden=(500, 500)):
+    return cnn_model(CNNConfig(name="mlp-mnist", arch="mlp", n_classes=10,
+                               in_channels=1, img_size=28, hidden=hidden))
+
+
+def lenet300100():
+    return cnn_model(CNNConfig(name="lenet300100", arch="lenet300100",
+                               n_classes=10, in_channels=1, img_size=28,
+                               hidden=(300, 100)))
+
+
+def lenet5():
+    return cnn_model(CNNConfig(name="lenet5", arch="lenet5", n_classes=10,
+                               in_channels=1, img_size=28))
+
+
+def alexnet_cifar(n_classes=10):
+    return cnn_model(CNNConfig(name=f"alexnet-c{n_classes}", arch="alexnet",
+                               n_classes=n_classes, in_channels=3, img_size=32))
+
+
+def vgg11_cifar(n_classes=10):
+    return cnn_model(CNNConfig(name=f"vgg11-c{n_classes}", arch="vgg11",
+                               n_classes=n_classes, in_channels=3, img_size=32))
+
+
+def resnet18_cifar(n_classes=10):
+    return cnn_model(CNNConfig(name=f"resnet18-c{n_classes}", arch="resnet18",
+                               n_classes=n_classes, in_channels=3, img_size=32))

@@ -1,0 +1,37 @@
+"""The assigned input-shape grid (4 shapes x 10 archs = 40 cells)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    kind: str  # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCase("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeCase("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeCase("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeCase("long_500k", "decode", 524_288, 1),
+}
+
+# long_500k requires sub-quadratic attention (run: ssm / hybrid / sliding-
+# window-dominant; skip: pure full-attention archs — see DESIGN.md §5).
+LONG_CTX_ARCHS = ("mamba2-370m", "hymba-1.5b", "gemma3-4b")
+
+
+def applicable(arch_id: str, shape_name: str, has_decode: bool) -> Optional[str]:
+    """None if the cell runs; otherwise a skip reason (recorded in the grid)."""
+    case = SHAPES[shape_name]
+    if case.kind == "decode" and not has_decode:
+        return "encoder-only arch: no decode step"
+    if shape_name == "long_500k" and arch_id not in LONG_CTX_ARCHS:
+        if arch_id == "whisper-small":
+            return "decoder context is 448 by construction; 500k n/a"
+        return "pure full-attention arch: 500k dense KV is the quadratic regime"
+    return None

@@ -1,0 +1,39 @@
+"""Core: the paper's contribution — NSD quantization + dithered backprop."""
+from repro.core.nsd import (
+    QuantStats,
+    QuantizedGrad,
+    compute_delta,
+    dither_noise,
+    expected_sparsity_gaussian,
+    nsd_indices,
+    nsd_quantize,
+    nsd_quantize_int8,
+    quant_stats,
+)
+from repro.core.policy import (
+    OFF,
+    VARIANT_INT8,
+    VARIANT_MEPROP,
+    VARIANT_OFF,
+    VARIANT_PAPER,
+    VARIANT_ROW,
+    DitherCtx,
+    DitherPolicy,
+)
+from repro.core.dithered import (
+    conv2d,
+    dense,
+    dithered_einsum,
+    quantize_cotangent,
+)
+from repro.core import int8, meprop, probe, rowdither, stats
+
+__all__ = [
+    "QuantStats", "QuantizedGrad", "compute_delta", "dither_noise",
+    "expected_sparsity_gaussian", "nsd_indices", "nsd_quantize",
+    "nsd_quantize_int8", "quant_stats",
+    "OFF", "VARIANT_INT8", "VARIANT_MEPROP", "VARIANT_OFF", "VARIANT_PAPER",
+    "VARIANT_ROW", "DitherCtx", "DitherPolicy",
+    "conv2d", "dense", "dithered_einsum", "quantize_cotangent",
+    "int8", "meprop", "probe", "rowdither", "stats",
+]

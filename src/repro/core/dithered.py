@@ -1,0 +1,287 @@
+"""Dithered backprop as composable JAX ops (the paper's eqs. 7-9).
+
+Every weight-bearing contraction in the framework goes through ``dense`` /
+``conv2d`` / ``dithered_einsum`` below. Forward is exact; the backward pass
+intercepts the pre-activation cotangent ``g`` (= delta_z in the paper),
+applies the policy's quantizer once, and reuses the quantized tensor for
+BOTH backward products:
+
+    delta_a = g~ . W^T        (activation gradient, eq. 8)
+    delta_W = a^T . g~        (weight gradient,     eq. 9)
+
+Bias gradients (a cheap reduction, not a matmul) use the exact cotangent.
+
+Variants (policy.variant):
+  off     plain backprop
+  paper   NSD in f32, products in the layer dtype      [faithful baseline]
+  int8    NSD to (int8 k, Delta) + absmax-int8 x/w, both products on the
+          int8 MXU path, rescaled on exit              [beyond paper, TPU]
+  row     structured row dither                        [beyond paper, TPU]
+  meprop  top-k magnitude comparator                   [paper's baseline]
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import int8 as int8lib
+from repro.core import meprop as meproplib
+from repro.core import nsd
+from repro.core import rowdither
+from repro.core import stats as statslib
+from repro.core.policy import (
+    VARIANT_INT8,
+    VARIANT_KERNEL,
+    VARIANT_MEPROP,
+    VARIANT_PAPER,
+    VARIANT_ROW,
+    DitherCtx,
+    DitherPolicy,
+)
+
+
+# --------------------------------------------------------------------------
+# cotangent quantization dispatch
+# --------------------------------------------------------------------------
+
+def quantize_cotangent(
+    g: jax.Array, key: jax.Array, policy: DitherPolicy, name: str
+) -> jax.Array:
+    """Apply the policy's quantizer to a pre-activation cotangent."""
+    if policy.variant in (VARIANT_PAPER, VARIANT_INT8, VARIANT_KERNEL):
+        delta = nsd.compute_delta(g, policy.s)
+        k = nsd.nsd_indices(g, key, delta)
+        if policy.collect_stats:
+            statslib.emit(policy.stats_tag + name, nsd.quant_stats(k, delta))
+        return (k.astype(jnp.float32) * delta).astype(g.dtype)
+    if policy.variant == VARIANT_ROW:
+        out = rowdither.row_dither(g, key, policy.row_alpha)
+        if policy.collect_stats:
+            zero = 1.0 - jnp.mean((out != 0).astype(jnp.float32))
+            statslib.emit(
+                policy.stats_tag + name,
+                nsd.QuantStats(zero, jnp.float32(32), jnp.float32(0)),
+            )
+        return out
+    if policy.variant == VARIANT_MEPROP:
+        out = meproplib.meprop_sparsify(g, policy.meprop_k_frac)
+        if policy.collect_stats:
+            zero = 1.0 - jnp.mean((out != 0).astype(jnp.float32))
+            statslib.emit(
+                policy.stats_tag + name,
+                nsd.QuantStats(zero, jnp.float32(32), jnp.float32(0)),
+            )
+        return out
+    return g
+
+
+# --------------------------------------------------------------------------
+# generic dithered op: works for any two-operand primal (conv, einsum, ...)
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _make_dithered_op(primal_fn: Callable) -> Callable:
+    """Wrap ``primal_fn(x, w) -> y`` so its bwd quantizes the cotangent once
+    and pushes it through the *exact* vjp of the primal — this is precisely
+    the paper's recipe and is correct for any linear primal."""
+
+    @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+    def op(x, w, key, policy, name):
+        return primal_fn(x, w)
+
+    def fwd(x, w, key, policy, name):
+        return primal_fn(x, w), (x, w, key)
+
+    def bwd(policy, name, res, g):
+        x, w, key = res
+        gq = quantize_cotangent(g, key, policy, name)
+        _, vjp = jax.vjp(primal_fn, x, w)
+        dx, dw = vjp(gq)
+        return dx, dw, None
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+# --------------------------------------------------------------------------
+# dense (the paper's fully-connected case) with an explicit int8 backward
+# --------------------------------------------------------------------------
+
+def _plain_matmul(x, w):
+    return jax.lax.dot_general(
+        x, w, dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=x.dtype,
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _dithered_dense(x, w, key, policy, name):
+    return _plain_matmul(x, w)
+
+
+def _dd_fwd(x, w, key, policy, name):
+    return _plain_matmul(x, w), (x, w, key)
+
+
+def _kernel_shapes_ok(g2d, x2d, w, block=128):
+    return (g2d.shape[0] % block == 0 and g2d.shape[1] % block == 0
+            and x2d.shape[1] % block == 0)
+
+
+def _dd_bwd(policy, name, res, g):
+    x, w, key = res
+    kdim = x.shape[-1]
+    x2d = x.reshape(-1, kdim)
+    g2d = g.reshape(-1, g.shape[-1])
+
+    if policy.variant == VARIANT_KERNEL and _kernel_shapes_ok(g2d, x2d, w):
+        # Pallas path: fused NSD quantize + tile-skipping int8 matmuls
+        # (interpret mode on CPU; compiled VMEM kernels on TPU). Falls back
+        # to the jnp paper path for non-128-aligned layers.
+        from repro.kernels.ops import dithered_backward_matmuls
+
+        if policy.collect_stats:
+            delta = nsd.compute_delta(g2d, policy.s)
+            k = nsd.nsd_indices(g2d, key, delta)
+            statslib.emit(policy.stats_tag + name, nsd.quant_stats(k, delta))
+        dx2d, dw = dithered_backward_matmuls(
+            g2d, x2d, w, key, policy.s, int8_operands=True)
+        return dx2d.reshape(x.shape), dw, None
+
+    if policy.variant == VARIANT_INT8:
+        # NSD indices ARE an int8 tensor; x and w get absmax int8. Both
+        # backward products then run on the int8 MXU path (2x bf16 on v5e).
+        delta = nsd.compute_delta(g2d, policy.s)
+        k = nsd.nsd_indices(g2d, key, delta).astype(jnp.int8)
+        if policy.collect_stats:
+            statslib.emit(policy.stats_tag + name, nsd.quant_stats(k, delta))
+        xq = int8lib.quantize_int8(x2d)
+        wq = int8lib.quantize_int8(w)
+        # dx = g~ @ W^T : contract over the output dim
+        dx2d = jax.lax.dot_general(
+            k, wq.q, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        ).astype(jnp.float32) * (delta * wq.scale)
+        # dW = x^T @ g~ : contract over the row (token) dim
+        dw = jax.lax.dot_general(
+            xq.q, k, dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        ).astype(jnp.float32) * (xq.scale * delta)
+        return (
+            dx2d.astype(x.dtype).reshape(x.shape),
+            dw.astype(w.dtype),
+            None,
+        )
+
+    gq = quantize_cotangent(g2d, key, policy, name)
+    dx2d = jax.lax.dot_general(
+        gq, w, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=gq.dtype,
+    )
+    dw = jax.lax.dot_general(
+        x2d, gq, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=x2d.dtype,
+    )
+    return dx2d.astype(x.dtype).reshape(x.shape), dw.astype(w.dtype), None
+
+
+_dithered_dense.defvjp(_dd_fwd, _dd_bwd)
+
+
+def dense(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    ctx: Optional[DitherCtx] = None,
+    name: str = "dense",
+) -> jax.Array:
+    """y = x @ w (+ b); dithered backward when the ctx policy covers ``name``.
+
+    When ctx is None (inference / serving / baseline) this is a plain matmul
+    with no custom_vjp in the trace at all.
+    """
+    if ctx is not None and ctx.policy.applies_to(name):
+        y = _dithered_dense(x, w, ctx.key_for(name), ctx.policy, name)
+    else:
+        y = _plain_matmul(x, w)
+    if b is not None:
+        y = y + b
+    return y
+
+
+# --------------------------------------------------------------------------
+# conv2d (the paper's convolutional case) — exact vjp of the quantized
+# cotangent via the generic wrapper
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _conv_primal(strides, padding, lhs_dilation, rhs_dilation, feature_group_count):
+    def primal(x, w):  # NHWC x HWIO -> NHWC
+        return jax.lax.conv_general_dilated(
+            x, w,
+            window_strides=strides,
+            padding=padding,
+            lhs_dilation=lhs_dilation,
+            rhs_dilation=rhs_dilation,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=feature_group_count,
+        )
+    return primal
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    strides=(1, 1),
+    padding="SAME",
+    lhs_dilation=(1, 1),
+    rhs_dilation=(1, 1),
+    feature_group_count: int = 1,
+    ctx: Optional[DitherCtx] = None,
+    name: str = "conv",
+) -> jax.Array:
+    primal = _conv_primal(
+        tuple(strides), padding if isinstance(padding, str) else tuple(padding),
+        tuple(lhs_dilation), tuple(rhs_dilation), feature_group_count,
+    )
+    if ctx is not None and ctx.policy.applies_to(name):
+        op = _make_dithered_op(primal)
+        y = op(x, w, ctx.key_for(name), ctx.policy, name)
+    else:
+        y = primal(x, w)
+    if b is not None:
+        y = y + b
+    return y
+
+
+# --------------------------------------------------------------------------
+# two-operand einsum (expert FFNs, attention projections with fused heads)
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _einsum_primal(spec: str):
+    def primal(x, w):
+        return jnp.einsum(spec, x, w)
+    return primal
+
+
+def dithered_einsum(
+    spec: str,
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    ctx: Optional[DitherCtx] = None,
+    name: str = "einsum",
+) -> jax.Array:
+    """einsum('...,...->...', x, w) with dithered backward on the cotangent."""
+    primal = _einsum_primal(spec)
+    if ctx is not None and ctx.policy.applies_to(name):
+        op = _make_dithered_op(primal)
+        return op(x, w, ctx.key_for(name), ctx.policy, name)
+    return primal(x, w)

@@ -1,0 +1,92 @@
+"""8-bit forward-pass training, after Banner et al. 2018 (paper §3.5).
+
+Per-tensor symmetric absmax int8 quantization of activations and weights;
+the matmul itself runs int8 x int8 -> int32 (the MXU-native path on TPU) and
+is rescaled on exit. Gradients flow through a straight-through estimator.
+Combined with dithered backprop this reproduces the paper's
+"8bit + dith. backprop" Table-1 column, and on TPU it is also the mechanism
+that turns the paper's bit-width claim into real FLOP savings (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class QuantTensor(NamedTuple):
+    q: jax.Array  # int8
+    scale: jax.Array  # f32 scalar: value ~= q * scale
+
+
+def absmax_scale(x: jax.Array) -> jax.Array:
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    return jnp.maximum(amax, jnp.finfo(jnp.float32).tiny) / 127.0
+
+
+def quantize_int8(x: jax.Array, key: Optional[jax.Array] = None) -> QuantTensor:
+    """Absmax int8; stochastic rounding when ``key`` is given (grad-friendly)."""
+    scale = absmax_scale(x)
+    v = x.astype(jnp.float32) / scale
+    if key is not None:
+        v = v + jax.random.uniform(key, x.shape, jnp.float32, -0.5, 0.5)
+    q = jnp.clip(jnp.round(v), -127, 127).astype(jnp.int8)
+    return QuantTensor(q=q, scale=scale)
+
+
+def int8_matmul(xq: QuantTensor, wq: QuantTensor,
+                out_dtype=jnp.float32) -> jax.Array:
+    """(int8, int8) -> int32 accumulate -> rescale. MXU-native on TPU."""
+    acc = jax.lax.dot_general(
+        xq.q, wq.q,
+        dimension_numbers=(((xq.q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return (acc.astype(jnp.float32) * (xq.scale * wq.scale)).astype(out_dtype)
+
+
+@jax.custom_vjp
+def int8_dense_ste(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Forward in int8, backward straight-through (exact f32 grads).
+
+    This is the Banner-style forward; pairing it with dithered backprop on
+    the *same* layer happens in ``core.dithered.dense`` which owns the bwd.
+    """
+    return int8_matmul(quantize_int8(x), quantize_int8(w), out_dtype=x.dtype)
+
+
+def _fwd(x, w):
+    return int8_dense_ste(x, w), (x, w)
+
+
+def _bwd(res, g):
+    x, w = res
+    x2d = x.reshape(-1, x.shape[-1])
+    g2d = g.reshape(-1, g.shape[-1])
+    dx = (g2d @ w.T.astype(g2d.dtype)).reshape(x.shape)
+    dw = (x2d.T @ g2d).astype(w.dtype)
+    return dx.astype(x.dtype), dw
+
+
+int8_dense_ste.defvjp(_fwd, _bwd)
+
+
+def range_batchnorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+                    axis=0, eps: float = 1e-5) -> jax.Array:
+    """Range-BN (Banner et al.): normalize by the batch *range*, not std.
+
+    range/(sqrt(2 ln n)) is a consistent robust estimator of sigma for
+    Gaussian data and is much friendlier to low-precision arithmetic.
+    """
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=axis, keepdims=True)
+    centered = xf - mean
+    rng = jnp.max(centered, axis=axis, keepdims=True) - jnp.min(
+        centered, axis=axis, keepdims=True
+    )
+    n = x.shape[axis] if isinstance(axis, int) else int(
+        jnp.prod(jnp.array([x.shape[a] for a in axis]))
+    )
+    denom = rng / jnp.sqrt(2.0 * jnp.log(max(n, 2))) + eps
+    return (gamma * centered / denom + beta).astype(x.dtype)

@@ -1,0 +1,37 @@
+"""meProp comparator baseline (Sun et al. 2017), per the paper's §4.2.
+
+meProp sparsifies the pre-activation gradient by keeping only the top-k
+entries by magnitude. This is a *deterministic* operator on each vector, so
+the resulting weight-update estimates are biased — exactly the property the
+paper contrasts dithered backprop against (fig. 4 / fig. .9).
+
+We implement the "unified" per-row variant: for gradient rows g (one row per
+example/token), keep the k = ceil(frac * n) largest |g| entries per row.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def meprop_sparsify(g: jax.Array, k_frac: float) -> jax.Array:
+    """Keep the top-``k_frac`` fraction of each row of ``g`` by magnitude."""
+    if g.ndim < 1:
+        return g
+    n = g.shape[-1]
+    k = max(1, int(round(k_frac * n)))
+    if k >= n:
+        return g
+    flat = g.reshape(-1, n)
+    mag = jnp.abs(flat.astype(jnp.float32))
+    # threshold per row = k-th largest magnitude
+    thresh = jax.lax.top_k(mag, k)[0][:, -1:]
+    mask = mag >= thresh
+    out = jnp.where(mask, flat, jnp.zeros_like(flat))
+    return out.reshape(g.shape)
+
+
+def meprop_sparsity(g: jax.Array, k_frac: float) -> jax.Array:
+    """Realized sparsity of the meProp mask (ties can keep a few extra)."""
+    out = meprop_sparsify(g, k_frac)
+    return 1.0 - jnp.mean((out != 0).astype(jnp.float32))

@@ -1,0 +1,97 @@
+"""Dither policy — the single knob surface for the paper's technique.
+
+The paper has exactly one global hyperparameter: the scale factor ``s`` in
+``Delta = s * std(grad)``. The policy object carries that plus the framework
+concerns around it (which layers participate, which backward variant runs,
+whether telemetry is collected). It is a frozen (hashable) dataclass so it
+can ride through ``jax.custom_vjp`` as a static argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import zlib
+
+
+# Backward-pass variants. "paper" is the faithful baseline; everything else
+# is a beyond-paper optimization kept strictly opt-in (see DESIGN.md §2).
+VARIANT_OFF = "off"  # plain backprop (the paper's "Baseline" column)
+VARIANT_PAPER = "paper"  # NSD on preactivation grads, matmuls in input dtype
+VARIANT_INT8 = "int8"  # NSD + int8 MXU backward matmuls (8bit+dither column)
+VARIANT_ROW = "row"  # structured row-dither (TPU-native, beyond paper)
+VARIANT_MEPROP = "meprop"  # top-k comparator baseline from the paper
+VARIANT_KERNEL = "kernel"  # Pallas kernel path: fused NSD + tile-skip matmuls
+VARIANTS = (VARIANT_OFF, VARIANT_PAPER, VARIANT_INT8, VARIANT_ROW,
+            VARIANT_MEPROP, VARIANT_KERNEL)
+
+
+@dataclasses.dataclass(frozen=True)
+class DitherPolicy:
+    """Per-run configuration of dithered backprop."""
+
+    variant: str = VARIANT_PAPER
+    s: float = 2.0  # Delta = s * std(grad); the paper's global knob
+    meprop_k_frac: float = 0.1  # fraction of entries kept by the meProp baseline
+    row_alpha: float = 1.0  # row-dither aggressiveness (higher -> sparser)
+    collect_stats: bool = False  # io_callback telemetry (single-host only)
+    exclude: tuple = ()  # layer-name substrings exempted from dithering
+    stats_tag: str = ""  # prefix for telemetry records
+
+    def __post_init__(self):
+        if self.variant not in VARIANTS:
+            raise ValueError(f"unknown variant {self.variant!r}; one of {VARIANTS}")
+
+    @property
+    def enabled(self) -> bool:
+        return self.variant != VARIANT_OFF
+
+    def applies_to(self, name: str) -> bool:
+        if not self.enabled:
+            return False
+        return not any(pat in name for pat in self.exclude)
+
+    def replace(self, **kw) -> "DitherPolicy":
+        return dataclasses.replace(self, **kw)
+
+
+# A do-nothing policy: models built with ctx=None or this policy run plain
+# backprop, which keeps inference/serving traces free of custom_vjp machinery.
+OFF = DitherPolicy(variant=VARIANT_OFF)
+
+
+def name_salt(name: str) -> int:
+    """Stable 31-bit salt for folding a layer name into the step RNG key."""
+    return zlib.crc32(name.encode()) & 0x7FFFFFFF
+
+
+@dataclasses.dataclass
+class DitherCtx:
+    """Threaded through model ``apply`` — step RNG + policy.
+
+    ``key`` must differ per optimization step (fold the step index in); each
+    layer folds its own name in so dither noise is i.i.d. across layers,
+    steps, and (via the caller folding in a worker id) data-parallel workers,
+    which is what makes the distributed averaging argument of paper §3.6 hold.
+    """
+
+    key: jax.Array
+    policy: DitherPolicy = dataclasses.field(default_factory=DitherPolicy)
+
+    def key_for(self, name: str) -> jax.Array:
+        return jax.random.fold_in(self.key, name_salt(name))
+
+    @staticmethod
+    def for_step(base_key: jax.Array, step: jax.Array, policy: DitherPolicy,
+                 worker: int | jax.Array = 0) -> "DitherCtx":
+        k = jax.random.fold_in(base_key, step)
+        k = jax.random.fold_in(k, worker)
+        return DitherCtx(key=k, policy=policy)
+
+
+def maybe_ctx(ctx: Optional[DitherCtx], name: str) -> Optional[DitherCtx]:
+    """Convenience: returns ctx only if the policy covers ``name``."""
+    if ctx is None or not ctx.policy.applies_to(name):
+        return None
+    return ctx

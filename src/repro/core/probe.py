@@ -1,0 +1,56 @@
+"""Pre-activation gradient probe (the "tap" trick).
+
+To measure the paper's Table-1 sparsity numbers we need the raw
+pre-activation gradients delta_z per layer. Rather than instrumenting the
+backward pass, models accept an optional ``taps`` pytree of zeros that are
+*added* to each pre-activation; d(loss)/d(tap) is then exactly delta_z at
+that site. This keeps measurement orthogonal to the training path.
+
+Usage:
+    taps = make_taps({"fc1": (B, 500), "fc2": (B, 500)})
+    grads = grad_wrt_taps(loss_fn, params, taps, batch)
+    # grads["fc1"] is delta_z of fc1
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nsd
+
+
+def make_taps(shapes: Dict[str, Tuple[int, ...]], dtype=jnp.float32):
+    return {k: jnp.zeros(s, dtype) for k, s in shapes.items()}
+
+
+def tap(x: jax.Array, taps, name: str) -> jax.Array:
+    """Add the named tap (a zeros tensor) to a pre-activation, if present."""
+    if taps is None or name not in taps:
+        return x
+    t = taps[name]
+    return x + t.astype(x.dtype).reshape(x.shape)
+
+
+def grad_wrt_taps(
+    loss_fn: Callable, taps, *args, **kwargs
+):
+    """d(loss)/d(taps): exact per-layer pre-activation gradients."""
+
+    def f(tp):
+        return loss_fn(*args, taps=tp, **kwargs)
+
+    return jax.grad(f)(taps)
+
+
+def layer_nsd_stats(delta_z: jax.Array, key: jax.Array, s: float) -> nsd.QuantStats:
+    """NSD stats that WOULD result from dithering this gradient tensor."""
+    delta = nsd.compute_delta(delta_z, s)
+    k = nsd.nsd_indices(delta_z, key, delta)
+    return nsd.quant_stats(k, delta)
+
+
+def baseline_sparsity(delta_z: jax.Array) -> jax.Array:
+    """Sparsity of the raw (undithered) gradient — Table 1 'Baseline' column."""
+    return 1.0 - jnp.mean((delta_z != 0).astype(jnp.float32))

@@ -1,0 +1,96 @@
+"""Telemetry sink for dither statistics (sparsity / bit-width / delta).
+
+The paper's Table 1 reports the average sparsity of the pre-activation
+gradients over all layers and training iterations, and fig. 6b the
+worst-case bit-width. Those numbers are produced *inside* the backward pass,
+so we surface them with ``jax.experimental.io_callback`` into a process-local
+sink. This is a single-host debugging/telemetry path — the policy flag
+``collect_stats`` defaults to False and stays off for pjit multi-device runs.
+"""
+from __future__ import annotations
+
+import threading
+from collections import defaultdict
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.nsd import QuantStats
+
+_LOCK = threading.Lock()
+# tag -> list of (sparsity, bits, delta) rows
+_SINK: Dict[str, List[np.ndarray]] = defaultdict(list)
+
+
+def reset() -> None:
+    with _LOCK:
+        _SINK.clear()
+
+
+def _record(tag: str, row: np.ndarray) -> np.ndarray:
+    with _LOCK:
+        _SINK[tag].append(np.asarray(row))
+    return np.zeros((), np.int32)
+
+
+def emit(tag: str, stats: QuantStats) -> None:
+    """Call from inside a (possibly jitted) backward pass."""
+    row = jnp.stack(
+        [stats.sparsity, stats.max_bitwidth, stats.delta.astype(jnp.float32)]
+    )
+    jax.experimental.io_callback(
+        lambda r, _tag=tag: _record(_tag, r),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        row,
+        ordered=False,
+    )
+
+
+def rows(tag: str) -> np.ndarray:
+    """(n, 3) array of [sparsity, bits, delta] records for a tag."""
+    with _LOCK:
+        if not _SINK[tag]:
+            return np.zeros((0, 3), np.float32)
+        return np.stack(_SINK[tag])
+
+
+def tags() -> List[str]:
+    with _LOCK:
+        return sorted(_SINK.keys())
+
+
+def summary() -> Dict[str, Dict[str, float]]:
+    """Per-tag mean sparsity, worst-case bits — the Table-1 aggregation."""
+    out = {}
+    for tag in tags():
+        r = rows(tag)
+        if len(r) == 0:
+            continue
+        out[tag] = {
+            "mean_sparsity": float(r[:, 0].mean()),
+            "max_bits": float(r[:, 1].max()),
+            "mean_bits": float(r[:, 1].mean()),
+            "n_records": int(len(r)),
+        }
+    return out
+
+
+def overall_sparsity() -> float:
+    """Average sparsity over every recorded layer x step, as in Table 1."""
+    all_rows = [rows(t) for t in tags()]
+    all_rows = [r for r in all_rows if len(r)]
+    if not all_rows:
+        return float("nan")
+    cat = np.concatenate(all_rows, axis=0)
+    return float(cat[:, 0].mean())
+
+
+def overall_max_bits() -> float:
+    all_rows = [rows(t) for t in tags()]
+    all_rows = [r for r in all_rows if len(r)]
+    if not all_rows:
+        return float("nan")
+    cat = np.concatenate(all_rows, axis=0)
+    return float(cat[:, 1].max())

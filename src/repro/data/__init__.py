@@ -1,0 +1,8 @@
+from repro.data.synthetic import (
+    ClassifConfig, TokenStreamConfig, classification_batch,
+    classification_eval_set, token_batch,
+)
+from repro.data.pipeline import ShardedLoader
+
+__all__ = ["ClassifConfig", "TokenStreamConfig", "classification_batch",
+           "classification_eval_set", "token_batch", "ShardedLoader"]

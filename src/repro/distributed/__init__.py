@@ -1,0 +1,7 @@
+from repro.distributed.ssgd import (
+    SSGDConfig, ErrorFeedbackState, int8_allreduce_sim, make_ssgd_step,
+    shard_batch, topk_error_feedback,
+)
+
+__all__ = ["SSGDConfig", "ErrorFeedbackState", "int8_allreduce_sim",
+           "make_ssgd_step", "shard_batch", "topk_error_feedback"]

@@ -1,0 +1,122 @@
+"""Synchronous SGD with per-node dithered backprop (paper §3.6 / §4.3).
+
+The paper's argument: NSD noise is zero-mean with bounded variance, so with
+N data-parallel workers the server-side average cancels most of it — the
+dither scale ``s`` can GROW with N (more per-node sparsity, fewer per-node
+ops) at constant final accuracy. We reproduce the experiment by simulating
+N nodes: per-node sub-batches, per-node dither keys (folded from the worker
+index), gradient averaging, shared parameters.
+
+Also provides the communication-side analogues for real clusters
+(int8-quantized and top-k+error-feedback gradient reduction).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nsd
+from repro.core.policy import DitherCtx, DitherPolicy
+from repro.models.api import Model
+from repro.optim import OptConfig, apply_updates, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class SSGDConfig:
+    n_nodes: int = 4
+    s_schedule: str = "sqrt"  # fixed | linear | sqrt: how s scales with N
+    s_base: float = 1.0
+
+    def s_for_n(self) -> float:
+        if self.s_schedule == "fixed":
+            return self.s_base
+        if self.s_schedule == "linear":
+            return self.s_base * self.n_nodes
+        return self.s_base * float(jnp.sqrt(self.n_nodes))
+
+
+def make_ssgd_step(model: Model, opt_cfg: OptConfig, dcfg: SSGDConfig,
+                   base_policy: DitherPolicy):
+    """One SSGD step: N per-node dithered grads -> server average -> update.
+
+    The batch leaves must have a leading (n_nodes, per_node_batch, ...) axis.
+    Per-node dither keys are folded from (step, worker) so noise is i.i.d.
+    across nodes — the cancellation the paper relies on.
+    """
+    policy = base_policy.replace(s=dcfg.s_for_n())
+
+    def node_grad(params, node_batch, base_key, step, worker):
+        ctx = DitherCtx.for_step(base_key, step, policy, worker=worker)
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss(p, node_batch, ctx=ctx))(params)
+        return loss, grads
+
+    def ssgd_step(params, opt_state, sharded_batch, base_key):
+        step = opt_state["step"]
+        workers = jnp.arange(dcfg.n_nodes)
+        losses, grads = jax.vmap(
+            lambda b, w: node_grad(params, b, base_key, step, w),
+            in_axes=(0, 0))(sharded_batch, workers)
+        # parameter server: average the (already noisy) node gradients
+        grads = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
+        params, opt_state, metrics = apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics["loss"] = jnp.mean(losses)
+        return params, opt_state, metrics
+
+    return jax.jit(ssgd_step), policy
+
+
+def shard_batch(batch: Dict[str, jax.Array], n_nodes: int
+                ) -> Dict[str, jax.Array]:
+    def reshape(x):
+        b = x.shape[0]
+        assert b % n_nodes == 0, (b, n_nodes)
+        return x.reshape((n_nodes, b // n_nodes) + x.shape[1:])
+
+    return {k: reshape(v) for k, v in batch.items()}
+
+
+# ---------------------------------------------------------------------------
+# gradient compression for the wire (real-cluster comm analogues)
+# ---------------------------------------------------------------------------
+
+def int8_allreduce_sim(grads_per_node: List, key: jax.Array):
+    """Each node NSD-quantizes its gradient to (int8, delta) before the
+    reduce — the comm-side use of the paper's operator. Returns the average
+    of dequantized tensors (what a quantized ring all-reduce would yield)."""
+    n = len(grads_per_node)
+    acc = None
+    for i, g in enumerate(grads_per_node):
+        q = nsd.nsd_quantize_int8(g, jax.random.fold_in(key, i), s=1.0)
+        deq = q.dequantize()
+        acc = deq if acc is None else acc + deq
+    return acc / n
+
+
+@dataclasses.dataclass
+class ErrorFeedbackState:
+    residual: jax.Array
+
+
+def topk_error_feedback(g: jax.Array, state: Optional[ErrorFeedbackState],
+                        k_frac: float = 0.01
+                        ) -> Tuple[jax.Array, ErrorFeedbackState]:
+    """Top-k sparsification with error feedback (memory of dropped mass).
+
+    Unbiasedness is restored asymptotically by the residual accumulator;
+    composes with dithered backprop (which controls the *compute* side).
+    """
+    flat = g.reshape(-1)
+    if state is not None:
+        flat = flat + state.residual
+    k = max(1, int(k_frac * flat.size))
+    mag = jnp.abs(flat)
+    thresh = jax.lax.top_k(mag, k)[0][-1]
+    mask = mag >= thresh
+    sent = jnp.where(mask, flat, 0)
+    residual = flat - sent
+    return sent.reshape(g.shape), ErrorFeedbackState(residual=residual)

@@ -1,0 +1,128 @@
+"""Block-sparse quantized matmul kernels (Pallas, TPU target).
+
+TPU adaptation of the paper's sparse backward products (DESIGN.md §4):
+element-granular sparsity cannot skip MACs on a 128x128 systolic MXU, so we
+skip at *tile* granularity. The NSD kernel emits a (M/bm, K/bk) tile-
+occupancy map; here, the k-loop body is wrapped in ``pl.when(mask != 0)`` so
+fully-zero tiles of the quantized gradient contribute neither MXU issue
+cycles nor (with the index-map trick below) HBM->VMEM traffic for the B
+operand — the win that unstructured sparsity alone cannot deliver on TPU.
+
+Two variants:
+  * ``bsp_matmul``      — A is (int8 k, Delta) NSD output, B stays bf16/f32;
+                          A is dequantized in VMEM before the dot.
+  * ``bsp_matmul_int8`` — both operands int8, int32 MXU accumulation,
+                          rescale on exit: the paper's "8bit + dithered"
+                          column mapped onto the 2x-throughput int8 MXU path.
+
+The mask rides in scalar-prefetch SMEM (PrefetchScalarGridSpec) so it is
+available to the grid index maps *before* tiles are fetched.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bsp_kernel_dequant(mask_ref, a_ref, b_ref, delta_ref, o_ref, acc_ref):
+    i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(mask_ref[i, k] != 0)
+    def _accum():
+        a = a_ref[...].astype(jnp.float32)
+        b = b_ref[...].astype(jnp.float32)
+        acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...] * delta_ref[0, 0]).astype(o_ref.dtype)
+
+
+def _bsp_kernel_int8(mask_ref, a_ref, b_ref, scale_ref, o_ref, acc_ref):
+    i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(mask_ref[i, k] != 0)
+    def _accum():
+        # int8 x int8 -> int32: the MXU-native 2x-throughput path on v5e
+        acc_ref[...] += jax.lax.dot_general(
+            a_ref[...], b_ref[...],
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...].astype(jnp.float32)
+                      * scale_ref[0, 0]).astype(o_ref.dtype)
+
+
+def _grid_spec(M, K, N, bm, bk, bn, acc_dtype):
+    return pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(M // bm, N // bn, K // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k, mask: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k, mask: (k, j)),
+            pl.BlockSpec((1, 1), lambda i, j, k, mask: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, mask: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
+    )
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bk", "bn", "out_dtype",
+                                    "interpret"))
+def bsp_matmul(k_q: jax.Array, delta: jax.Array, b: jax.Array,
+               mask: jax.Array, *, bm: int = 128, bk: int = 128,
+               bn: int = 128, out_dtype=jnp.float32,
+               interpret: bool = True) -> jax.Array:
+    """(dequant(k_q) @ b) with tile skipping.
+
+    k_q: (M, K) int8 NSD indices; delta: scalar; b: (K, N) f32/bf16;
+    mask: (M//bm, K//bk) int32 tile-occupancy (0 = all-zero tile).
+    """
+    M, K = k_q.shape
+    K2, N = b.shape
+    assert K == K2 and M % bm == 0 and K % bk == 0 and N % bn == 0
+    delta2d = jnp.reshape(delta.astype(jnp.float32), (1, 1))
+    return pl.pallas_call(
+        _bsp_kernel_dequant,
+        grid_spec=_grid_spec(M, K, N, bm, bk, bn, jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        interpret=interpret,
+    )(mask.astype(jnp.int32), k_q, b, delta2d)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bk", "bn", "out_dtype",
+                                    "interpret"))
+def bsp_matmul_int8(k_q: jax.Array, b_q: jax.Array, scale: jax.Array,
+                    mask: jax.Array, *, bm: int = 128, bk: int = 128,
+                    bn: int = 128, out_dtype=jnp.float32,
+                    interpret: bool = True) -> jax.Array:
+    """Full int8 MXU path: (k_q @ b_q) * scale with tile skipping.
+
+    scale = delta_A * scale_B (per-tensor product of the two quant scales).
+    """
+    M, K = k_q.shape
+    K2, N = b_q.shape
+    assert K == K2 and M % bm == 0 and K % bk == 0 and N % bn == 0
+    scale2d = jnp.reshape(scale.astype(jnp.float32), (1, 1))
+    return pl.pallas_call(
+        _bsp_kernel_int8,
+        grid_spec=_grid_spec(M, K, N, bm, bk, bn, jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        interpret=interpret,
+    )(mask.astype(jnp.int32), k_q, b_q, scale2d)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the block-sparse quantized matmul kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _apply_tile_mask(a: jax.Array, mask: jax.Array, bm: int, bk: int
+                     ) -> jax.Array:
+    """Zero out the tiles the kernel would skip (mask semantics oracle)."""
+    M, K = a.shape
+    m = jnp.repeat(jnp.repeat(mask != 0, bm, axis=0), bk, axis=1)
+    return jnp.where(m, a, jnp.zeros_like(a))
+
+
+def bsp_matmul_ref(k_q: jax.Array, delta: jax.Array, b: jax.Array,
+                   mask: jax.Array, *, bm: int = 128, bk: int = 128,
+                   bn: int = 128, out_dtype=jnp.float32) -> jax.Array:
+    a = _apply_tile_mask(k_q.astype(jnp.float32), mask, bm, bk)
+    out = (a * delta.astype(jnp.float32)) @ b.astype(jnp.float32)
+    return out.astype(out_dtype)
+
+
+def bsp_matmul_int8_ref(k_q: jax.Array, b_q: jax.Array, scale: jax.Array,
+                        mask: jax.Array, *, bm: int = 128, bk: int = 128,
+                        bn: int = 128, out_dtype=jnp.float32) -> jax.Array:
+    a = _apply_tile_mask(k_q.astype(jnp.int32), mask, bm, bk)
+    acc = jax.lax.dot_general(
+        a, b_q.astype(jnp.int32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * scale.astype(jnp.float32)).astype(
+        out_dtype)

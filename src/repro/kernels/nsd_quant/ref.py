@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused NSD quantization kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def nsd_quantize_blocked_ref(x: jax.Array, noise: jax.Array,
+                             delta: jax.Array, *, bm: int = 128,
+                             bn: int = 512):
+    """Exact reference semantics of kernels.nsd_quant.nsd_quantize_blocked."""
+    M, N = x.shape
+    xf = x.astype(jnp.float32)
+    nu = noise.astype(jnp.float32)
+    d = delta.astype(jnp.float32)
+    safe = jnp.maximum(d, jnp.finfo(jnp.float32).tiny)
+    k = jnp.floor((xf + nu) / safe + 0.5)
+    k = jnp.clip(k, -127.0, 127.0)
+    k = jnp.where(d > 0.0, k, jnp.zeros_like(k)).astype(jnp.int8)
+    tiles = (k != 0).astype(jnp.int32).reshape(M // bm, bm, N // bn, bn)
+    nnz = jnp.sum(tiles, axis=(1, 3))
+    return k, nnz

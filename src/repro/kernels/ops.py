@@ -1,0 +1,87 @@
+"""High-level jit'd wrappers over the Pallas kernels.
+
+``dithered_backward_matmuls`` is the full TPU-native backward pass of one
+dense layer (DESIGN.md §4): one fused NSD pass over the pre-activation
+gradient, then both backward products as tile-skipping int8 matmuls. The
+pure-jnp fallback path (interpret=False unavailable off-TPU) matches
+``repro.core.dithered`` semantics; tests assert kernel == oracle == core.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import int8 as int8lib
+from repro.core import nsd
+from repro.kernels.bsp_matmul.bsp_matmul import bsp_matmul, bsp_matmul_int8
+from repro.kernels.nsd_quant.nsd_quant import nsd_quantize_blocked
+
+
+def _pad_to(x: jax.Array, m: int, n: int) -> jax.Array:
+    M, N = x.shape
+    pm, pn = (-M) % m, (-N) % n
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+def nsd_quantize_kernel(g: jax.Array, key: jax.Array, s: float, *,
+                        bm: int = 128, bn: int = 512,
+                        interpret: bool = True):
+    """NSD via the Pallas kernel. g: (M, N). Returns (k, delta, nnz_map).
+
+    delta/std are global reductions (outside the kernel); dither noise comes
+    from the framework RNG so results are bit-identical to repro.core.nsd
+    given the same key.
+    """
+    M, N = g.shape
+    delta = nsd.compute_delta(g, s)
+    noise = nsd.dither_noise(key, g.shape, delta)
+    gp = _pad_to(g, bm, bn)
+    np_ = _pad_to(noise, bm, bn)
+    k, nnz = nsd_quantize_blocked(gp, np_, delta, bm=bm, bn=bn,
+                                  interpret=interpret)
+    return k[:M, :N], delta, nnz
+
+
+def dithered_backward_matmuls(
+    g: jax.Array, x: jax.Array, w: jax.Array, key: jax.Array, s: float, *,
+    block: int = 128, int8_operands: bool = True, interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """TPU-native backward for y = x @ w given cotangent g.
+
+    g: (T, N) pre-activation gradient; x: (T, K); w: (K, N).
+    Returns (dx (T, K), dw (K, N)) using the fused NSD kernel + the
+    tile-skipping quantized matmul kernels.
+    """
+    T, N = g.shape
+    K = x.shape[-1]
+    assert T % block == 0 and N % block == 0 and K % block == 0, \
+        (g.shape, x.shape, w.shape, block)
+    k_q, delta, _ = nsd_quantize_kernel(g, key, s, bm=block, bn=block,
+                                        interpret=interpret)
+    nnz = (k_q != 0).astype(jnp.int32).reshape(
+        T // block, block, N // block, block).sum((1, 3))
+    mask_g = (nnz > 0).astype(jnp.int32)  # (T/b, N/b)
+
+    if int8_operands:
+        wq = int8lib.quantize_int8(w)
+        xq = int8lib.quantize_int8(x.reshape(-1, K))
+        # dx = g~ @ w^T : tiles of g~ index rows; mask transposes with g~
+        dx = bsp_matmul_int8(
+            k_q, wq.q.T, delta * wq.scale, mask_g,
+            bm=block, bk=block, bn=block, interpret=interpret)
+        # dw = x^T @ g~ = (g~^T @ x)^T; mask for g~^T is mask_g^T
+        dw_t = bsp_matmul_int8(
+            k_q.T, xq.q, delta * xq.scale, mask_g.T,
+            bm=block, bk=block, bn=block, interpret=interpret)
+        return dx.astype(x.dtype), dw_t.T.astype(w.dtype)
+
+    dx = bsp_matmul(k_q, delta, w.T.astype(jnp.float32), mask_g,
+                    bm=block, bk=block, bn=block, interpret=interpret)
+    dw_t = bsp_matmul(k_q.T, delta, x.reshape(-1, K).astype(jnp.float32),
+                      mask_g.T, bm=block, bk=block, bn=block,
+                      interpret=interpret)
+    return dx.astype(x.dtype), dw_t.T.astype(w.dtype)

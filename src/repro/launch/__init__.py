@@ -1,0 +1,8 @@
+"""Launchers: mesh construction, dry-run, training and serving CLIs.
+
+NOTE: do not import repro.launch.dryrun from library code — importing it
+sets XLA_FLAGS for 512 host devices (dry-run only).
+"""
+from repro.launch.mesh import host_device_mesh, make_mesh, make_production_mesh
+
+__all__ = ["host_device_mesh", "make_mesh", "make_production_mesh"]

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax initialization).
+
+Target hardware: TPU v5e pods — 256 chips/pod, (16, 16) 2D slice per pod;
+multi-pod adds a leading "pod" axis over DCN. Per-chip constants used by the
+roofline harness live in repro.launch.roofline.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    """Arbitrary mesh (elastic re-mesh after failures uses this)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def host_device_mesh(n_model: int = 1, n_data: Optional[int] = None) -> Mesh:
+    """Mesh over however many (host) devices exist — used by tests."""
+    n = jax.device_count()
+    if n_data is None:
+        n_data = n // n_model
+    return make_mesh((n_data, n_model), ("data", "model"))

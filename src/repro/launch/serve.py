@@ -1,0 +1,50 @@
+"""Serving launcher: batched greedy decoding with the slot engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b \
+        --preset smoke --requests 4 --new-tokens 8
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_model, get_smoke_model
+from repro.serve import Engine, Request, ServeConfig
+from repro.utils import get_logger
+
+log = get_logger("serve-cli")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--preset", choices=["smoke", "full"], default="smoke")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args()
+
+    model = (get_smoke_model if args.preset == "smoke" else get_model)(
+        args.arch)
+    if model.decode_step is None:
+        raise SystemExit(f"{args.arch} has no decode step")
+    params, _ = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params,
+                 ServeConfig(max_batch=max(args.requests, 2),
+                             max_len=args.max_len))
+    rng = np.random.default_rng(0)
+    vocab = getattr(model.cfg, "vocab", 512)
+    for uid in range(args.requests):
+        eng.submit(Request(uid=uid,
+                           prompt=rng.integers(0, vocab, size=4),
+                           max_new_tokens=args.new_tokens))
+    done = eng.run(max_ticks=args.new_tokens * 2 + 8)
+    for uid, toks in sorted(done.items()):
+        log.info("request %d -> %s", uid, toks)
+    print(f"served {len(done)}/{args.requests} requests")
+
+
+if __name__ == "__main__":
+    main()

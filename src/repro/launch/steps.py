@@ -1,0 +1,75 @@
+"""Train / serve step factories shared by the trainer, server and dry-run."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import DitherCtx, DitherPolicy
+from repro.models.api import Model
+from repro.optim import OptConfig, apply_updates, init_opt_state
+
+
+def make_train_step(model: Model, opt_cfg: OptConfig,
+                    policy: Optional[DitherPolicy] = None):
+    """(params, opt_state, batch, base_key) -> (params, opt_state, metrics).
+
+    The dither key is folded from (base_key, step) so noise is fresh each
+    step; under pjit the per-layer fold-ins give i.i.d. noise across the
+    whole pre-activation tensor regardless of sharding.
+    """
+
+    def train_step(params, opt_state, batch, base_key):
+        step = opt_state["step"]
+        ctx = None
+        if policy is not None and policy.enabled:
+            ctx = DitherCtx.for_step(base_key, step, policy)
+
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch, ctx=ctx))(params)
+        params, opt_state, metrics = apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    def eval_step(params, batch):
+        return model.loss(params, batch)
+
+    return eval_step
+
+
+def make_prefill_step(model: Model):
+    """Forward over the full prompt (the prefill_32k shape cells).
+
+    For LM families this is the logits pass (cache construction is the
+    serving engine's job); cost-wise it is the attention+MLP forward at
+    full sequence length, which is what the roofline measures.
+    """
+
+    def prefill_step(params, batch):
+        out = model.forward(params, batch)
+        return out[0] if isinstance(out, tuple) else out
+
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    """One new token against a seq_len-deep KV cache (decode shape cells)."""
+
+    def serve_step(params, cache, token, t):
+        logits, new_cache = model.decode_step(params, cache, token, t)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], new_cache
+
+    return serve_step
+
+
+def init_train_state(model: Model, opt_cfg: OptConfig, key: jax.Array):
+    params, specs = model.init(key)
+    opt_state = init_opt_state(params, opt_cfg)
+    return params, opt_state, specs

@@ -1,0 +1,102 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-370m \
+        --preset smoke --steps 50 --dither paper --s 2.0
+
+Presets:
+    smoke  — the arch's reduced config, tiny batch (CPU-runnable)
+    full   — the assigned full config (needs a real cluster; on CPU this is
+             only useful with --dry-run-first to validate the mesh)
+
+On a multi-host cluster, call jax.distributed.initialize() via
+--distributed (standard TPU pod env) before anything touches devices.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ARCH_IDS, get_model, get_smoke_model
+from repro.core.policy import DitherPolicy
+from repro.data import TokenStreamConfig, token_batch
+from repro.optim import OptConfig
+from repro.train import Trainer, TrainerConfig
+from repro.utils import get_logger
+
+log = get_logger("train")
+
+
+def batch_fn_for(model, batch: int, seq: int):
+    cfg = model.cfg
+    vocab = getattr(cfg, "vocab", 512)
+    tcfg = TokenStreamConfig(vocab=vocab, seq_len=seq, batch=batch)
+
+    def fn(step: int):
+        b = token_batch(tcfg, step)
+        if model.family == "audio":
+            import jax.numpy as jnp
+            import numpy as np
+            rng = np.random.default_rng(step)
+            b["frames"] = jnp.asarray(rng.normal(
+                0, 1, (batch, cfg.n_frames, cfg.d_model)).astype(np.float32))
+        if model.family == "vlm" and cfg.vlm_patches:
+            import jax.numpy as jnp
+            import numpy as np
+            rng = np.random.default_rng(step)
+            b["patch_embeds"] = jnp.asarray(rng.normal(
+                0, 1, (batch, cfg.vlm_patches, cfg.vit_dim)).astype(np.float32))
+        return b
+
+    return fn
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--preset", choices=["smoke", "full"], default="smoke")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--dither", choices=["off", "paper", "int8", "row",
+                                         "meprop"], default="paper")
+    ap.add_argument("--s", type=float, default=2.0)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--distributed", action="store_true")
+    args = ap.parse_args()
+
+    if args.distributed:
+        jax.distributed.initialize()
+
+    model = (get_smoke_model if args.preset == "smoke" else get_model)(
+        args.arch)
+    policy = (None if args.dither == "off"
+              else DitherPolicy(variant=args.dither, s=args.s))
+    trainer = Trainer(
+        model,
+        OptConfig(name="adamw", lr=args.lr, schedule="cosine",
+                  warmup_steps=max(args.steps // 20, 1),
+                  total_steps=args.steps),
+        TrainerConfig(total_steps=args.steps, grad_accum=args.grad_accum,
+                      log_every=max(args.steps // 10, 1),
+                      ckpt_dir=args.ckpt_dir,
+                      ckpt_every=args.ckpt_every),
+        policy=policy,
+    )
+    fn = batch_fn_for(model, args.batch, args.seq)
+    counter = iter(range(10**9))
+
+    def it():
+        while True:
+            yield fn(next(counter))
+
+    out = trainer.fit(it())
+    log.info("final loss: %.4f",
+             out["history"][-1]["loss"] if out["history"] else float("nan"))
+
+
+if __name__ == "__main__":
+    main()

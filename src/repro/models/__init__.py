@@ -1,0 +1,7 @@
+"""Model zoo: LM transformers (dense/MoE/VLM), SSM, hybrid, enc-dec, CNNs."""
+from repro.models.api import (
+    Model, lm_model, ssm_model, hybrid_model, encdec_model, cnn_model,
+)
+
+__all__ = ["Model", "lm_model", "ssm_model", "hybrid_model", "encdec_model",
+           "cnn_model"]

@@ -1,0 +1,182 @@
+"""Uniform model interface over the zoo families.
+
+Every architecture config builds a ``Model`` whose members close over the
+family's functional implementation. The launcher, trainer, serving engine
+and dry-run only ever talk to this interface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import cnn as cnn_mod
+from repro.models import encdec as encdec_mod
+from repro.models import hybrid as hybrid_mod
+from repro.models import mamba as mamba_mod
+from repro.models import transformer as tf_mod
+
+
+@dataclasses.dataclass
+class Model:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio | cnn
+    cfg: Any
+    init: Callable  # (key) -> (params, specs)
+    loss: Callable  # (params, batch, ctx=None, taps=None) -> scalar
+    forward: Callable  # (params, batch, ctx=None) -> outputs
+    # serving (None for encoder-only / cnn)
+    init_cache: Optional[Callable] = None  # (batch, max_len) -> cache
+    cache_specs: Optional[Callable] = None
+    decode_step: Optional[Callable] = None  # (params, cache, token, t)
+    # dry-run/meta
+    param_count: int = 0
+    active_param_count: int = 0
+    sub_quadratic: bool = False  # may run long_500k
+    has_decode: bool = True
+
+    def train_batch_specs(self, batch: int, seq: int) -> Dict[str, Any]:
+        """ShapeDtypeStructs for one training batch (dry-run inputs)."""
+        raise NotImplementedError
+
+
+def lm_model(cfg: tf_mod.LMConfig, family: str) -> Model:
+    def loss(params, batch, ctx=None, taps=None):
+        return tf_mod.loss_fn(params, cfg, batch, ctx=ctx, taps=taps)
+
+    def forward(params, batch, ctx=None):
+        return tf_mod.forward(params, cfg, batch["tokens"], ctx=ctx,
+                              patch_embeds=batch.get("patch_embeds"))
+
+    m = Model(
+        name=cfg.name, family=family, cfg=cfg,
+        init=lambda key: tf_mod.init_lm(key, cfg),
+        loss=loss, forward=forward,
+        init_cache=lambda b, s: tf_mod.init_cache(cfg, b, s),
+        cache_specs=lambda b, s: tf_mod.cache_specs(cfg, b, s),
+        decode_step=lambda p, c, tok, t, ctx=None: tf_mod.decode_step(
+            p, cfg, c, tok, t, ctx=ctx),
+        param_count=cfg.param_count,
+        active_param_count=cfg.active_param_count,
+        sub_quadratic=(cfg.window is not None),
+    )
+
+    def train_specs(batch: int, seq: int):
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        }
+        if cfg.vlm_patches:
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (batch, cfg.vlm_patches, cfg.vit_dim), jnp.float32)
+            # text positions shrink so total stays at seq
+            specs["tokens"] = jax.ShapeDtypeStruct(
+                (batch, seq - cfg.vlm_patches), jnp.int32)
+            specs["labels"] = jax.ShapeDtypeStruct(
+                (batch, seq - cfg.vlm_patches), jnp.int32)
+        return specs
+
+    m.train_batch_specs = train_specs
+    return m
+
+
+def ssm_model(cfg: mamba_mod.SSMLMConfig) -> Model:
+    def loss(params, batch, ctx=None, taps=None):
+        return mamba_mod.loss_fn(params, cfg, batch, ctx=ctx, taps=taps)
+
+    def forward(params, batch, ctx=None):
+        return mamba_mod.forward(params, cfg, batch["tokens"], ctx=ctx)
+
+    m = Model(
+        name=cfg.name, family="ssm", cfg=cfg,
+        init=lambda key: mamba_mod.init_ssm_lm(key, cfg),
+        loss=loss, forward=forward,
+        init_cache=lambda b, s: mamba_mod.init_cache(cfg, b, s),
+        cache_specs=lambda b, s: mamba_mod.cache_specs(cfg, b, s),
+        decode_step=lambda p, c, tok, t, ctx=None: mamba_mod.decode_step(
+            p, cfg, c, tok, t, ctx=ctx),
+        param_count=cfg.param_count,
+        active_param_count=cfg.active_param_count,
+        sub_quadratic=True,
+    )
+    m.train_batch_specs = lambda b, s: {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    return m
+
+
+def hybrid_model(cfg: hybrid_mod.HybridConfig) -> Model:
+    def loss(params, batch, ctx=None, taps=None):
+        return hybrid_mod.loss_fn(params, cfg, batch, ctx=ctx, taps=taps)
+
+    def forward(params, batch, ctx=None):
+        return hybrid_mod.forward(params, cfg, batch["tokens"], ctx=ctx)
+
+    m = Model(
+        name=cfg.name, family="hybrid", cfg=cfg,
+        init=lambda key: hybrid_mod.init_hybrid_lm(key, cfg),
+        loss=loss, forward=forward,
+        init_cache=lambda b, s: hybrid_mod.init_cache(cfg, b, s),
+        cache_specs=lambda b, s: hybrid_mod.cache_specs(cfg, b, s),
+        decode_step=lambda p, c, tok, t, ctx=None: hybrid_mod.decode_step(
+            p, cfg, c, tok, t, ctx=ctx),
+        param_count=cfg.param_count,
+        active_param_count=cfg.active_param_count,
+        sub_quadratic=True,
+    )
+    m.train_batch_specs = lambda b, s: {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    return m
+
+
+def encdec_model(cfg: encdec_mod.EncDecConfig) -> Model:
+    def loss(params, batch, ctx=None, taps=None):
+        return encdec_mod.loss_fn(params, cfg, batch, ctx=ctx, taps=taps)
+
+    def forward(params, batch, ctx=None):
+        return encdec_mod.forward(params, cfg, batch, ctx=ctx)
+
+    m = Model(
+        name=cfg.name, family="audio", cfg=cfg,
+        init=lambda key: encdec_mod.init_encdec(key, cfg),
+        loss=loss, forward=forward,
+        init_cache=lambda b, s: encdec_mod.init_cache(cfg, b, s),
+        cache_specs=lambda b, s: encdec_mod.cache_specs(cfg, b, s),
+        decode_step=lambda p, c, tok, t, ctx=None: encdec_mod.decode_step(
+            p, cfg, c, tok, t, ctx=ctx),
+        param_count=cfg.param_count,
+        active_param_count=cfg.active_param_count,
+        sub_quadratic=False,
+    )
+    m.train_batch_specs = lambda b, s: {
+        "frames": jax.ShapeDtypeStruct((b, cfg.n_frames, cfg.d_model),
+                                       jnp.float32),
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    return m
+
+
+def cnn_model(cfg: cnn_mod.CNNConfig) -> Model:
+    def loss(params, batch, ctx=None, taps=None):
+        return cnn_mod.loss_fn(params, cfg, batch, ctx=ctx, taps=taps)
+
+    def forward(params, batch, ctx=None):
+        return cnn_mod.cnn_forward(params, cfg, batch["images"], ctx=ctx)
+
+    m = Model(
+        name=cfg.name, family="cnn", cfg=cfg,
+        init=lambda key: cnn_mod.init_cnn(key, cfg),
+        loss=loss, forward=forward, has_decode=False,
+    )
+    m.train_batch_specs = lambda b, s: {
+        "images": jax.ShapeDtypeStruct(
+            (b, cfg.img_size, cfg.img_size, cfg.in_channels), jnp.float32),
+        "labels": jax.ShapeDtypeStruct((b,), jnp.int32),
+    }
+    return m

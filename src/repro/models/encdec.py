@@ -1,0 +1,254 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+Per the assignment the conv/mel frontend is a STUB: ``input_specs`` feeds
+precomputed frame embeddings (B, n_frames, d_model) straight into the
+encoder. Encoder = bidirectional pre-LN blocks with sinusoidal positions;
+decoder = causal self-attn + cross-attn + GELU MLP with learned positions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dense
+from repro.core.policy import DitherCtx
+from repro.models import layers as L
+from repro.models.transformer import _attend_with_mask
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    n_layers: int  # per stack (encoder AND decoder)
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    n_frames: int = 1500  # encoder positions (mel frontend output length)
+    max_target: int = 448
+    act: str = "gelu"
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    scan_unroll: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.d_model // self.n_heads
+
+    def attn_cfg(self, causal: bool) -> L.AttnConfig:
+        return L.AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.hd, causal=causal,
+            rope_theta=0.0)
+
+    @property
+    def param_count(self) -> int:
+        d, f = self.d_model, self.d_ff
+        attn = 4 * d * d
+        mlp = 2 * d * f
+        enc_layer = attn + mlp + 4 * d
+        dec_layer = 2 * attn + mlp + 6 * d
+        return (self.n_layers * (enc_layer + dec_layer) + self.vocab * d +
+                self.max_target * d + 2 * d)
+
+    @property
+    def active_param_count(self) -> int:
+        return self.param_count
+
+
+def _sinusoid(n_pos: int, d: int) -> np.ndarray:
+    pos = np.arange(n_pos)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    inv = 1.0 / (10000 ** (dim / max(d // 2 - 1, 1)))
+    ang = pos * inv
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=1).astype(np.float32)
+
+
+def _init_block(key, cfg: EncDecConfig, cross: bool):
+    ini = L.Init(key, cfg.dtype)
+    attn_p, attn_s = L.init_attention(ini.next_key(), cfg.attn_cfg(True),
+                                      cfg.dtype)
+    sub = L.Init(jax.random.PRNGKey(0), cfg.dtype)
+    sub.params, sub.specs = attn_p, attn_s
+    ini.sub("attn", sub)
+    if cross:
+        x_p, x_s = L.init_attention(ini.next_key(), cfg.attn_cfg(False),
+                                    cfg.dtype)
+        sub = L.Init(jax.random.PRNGKey(0), cfg.dtype)
+        sub.params, sub.specs = x_p, x_s
+        ini.sub("xattn", sub)
+        ini.ones("lnx_s", (cfg.d_model,), (None,))
+        ini.zeros("lnx_b", (cfg.d_model,), (None,))
+    mlp_p, mlp_s = L.init_mlp(
+        ini.next_key(), L.MLPConfig(cfg.d_model, cfg.d_ff, cfg.act), cfg.dtype)
+    sub = L.Init(jax.random.PRNGKey(0), cfg.dtype)
+    sub.params, sub.specs = mlp_p, mlp_s
+    ini.sub("mlp", sub)
+    for nm in ("ln1", "ln2"):
+        ini.ones(f"{nm}_s", (cfg.d_model,), (None,))
+        ini.zeros(f"{nm}_b", (cfg.d_model,), (None,))
+    return ini.build()
+
+
+def init_encdec(key: jax.Array, cfg: EncDecConfig) -> Tuple[L.Params, L.Specs]:
+    keys = jax.random.split(key, 2 * cfg.n_layers + 3)
+    enc = [_init_block(keys[i], cfg, cross=False) for i in range(cfg.n_layers)]
+    dec = [_init_block(keys[cfg.n_layers + i], cfg, cross=True)
+           for i in range(cfg.n_layers)]
+    enc_p, enc_s = L.stack_layers(enc)
+    dec_p, dec_s = L.stack_layers(dec)
+    emb_p, emb_s = L.init_embedding(keys[-3], cfg.vocab, cfg.d_model, cfg.dtype)
+    ini = L.Init(keys[-2], cfg.dtype)
+    ini.normal("dec_pos", (cfg.max_target, cfg.d_model), (None, "embed"),
+               stddev=0.01)
+    ini.ones("ln_enc_s", (cfg.d_model,), (None,))
+    ini.zeros("ln_enc_b", (cfg.d_model,), (None,))
+    ini.ones("ln_dec_s", (cfg.d_model,), (None,))
+    ini.zeros("ln_dec_b", (cfg.d_model,), (None,))
+    head_p, head_s = ini.build()
+    return ({"enc": enc_p, "dec": dec_p, "embed": emb_p, "head": head_p},
+            {"enc": enc_s, "dec": dec_s, "embed": emb_s, "head": head_s})
+
+
+def _ln(x, p, name):
+    return L.layer_norm(x, p[f"{name}_s"], p[f"{name}_b"])
+
+
+def encode(params, cfg: EncDecConfig, frames: jax.Array, *,
+           ctx: Optional[DitherCtx] = None) -> jax.Array:
+    """frames: (B, n_frames, d_model) precomputed embeddings (frontend stub)."""
+    B, S, _ = frames.shape
+    pos = jnp.asarray(_sinusoid(S, cfg.d_model))
+    x = frames.astype(cfg.dtype) + pos[None].astype(cfg.dtype)
+    pos_b = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    acfg = cfg.attn_cfg(causal=False)
+
+    def body(x, p):
+        h = _ln(x, p, "ln1")
+        y, _ = _attend_with_mask(p["attn"], h, pos_b, acfg, None, ctx, "enc.attn")
+        x = x + y
+        h = _ln(x, p, "ln2")
+        return x + L.mlp(p["mlp"], h,
+                         L.MLPConfig(cfg.d_model, cfg.d_ff, cfg.act),
+                         ctx=ctx, name="enc.mlp"), None
+
+    f = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(f, x, params["enc"],
+                        unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    return _ln(x, params["head"], "ln_enc")
+
+
+def decode_train(params, cfg: EncDecConfig, tokens: jax.Array,
+                 enc_out: jax.Array, *, ctx=None) -> jax.Array:
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    pos_table = params["head"]["dec_pos"]
+    n_pos = pos_table.shape[0]
+    pos_idx = jnp.minimum(jnp.arange(S), n_pos - 1)
+    x = x + pos_table[pos_idx][None].astype(x.dtype)
+    pos_b = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    acfg = cfg.attn_cfg(causal=True)
+    mask = L.attention_mask(pos_b, pos_b, acfg)
+
+    def body(x, p):
+        h = _ln(x, p, "ln1")
+        y, _ = _attend_with_mask(p["attn"], h, pos_b, acfg, mask, ctx,
+                                 "dec.attn")
+        x = x + y
+        h = _ln(x, p, "lnx")
+        y, _ = L.attention(p["xattn"], h, pos_b, cfg.attn_cfg(False),
+                           ctx=ctx, name="dec.xattn", x_kv=enc_out)
+        x = x + y
+        h = _ln(x, p, "ln2")
+        return x + L.mlp(p["mlp"], h,
+                         L.MLPConfig(cfg.d_model, cfg.d_ff, cfg.act),
+                         ctx=ctx, name="dec.mlp"), None
+
+    f = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(f, x, params["dec"],
+                        unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    x = _ln(x, params["head"], "ln_dec")
+    return L.unembed(params["embed"], x, ctx=ctx)
+
+
+def forward(params, cfg: EncDecConfig, batch: Dict[str, jax.Array], *,
+            ctx=None, taps=None):
+    enc_out = encode(params, cfg, batch["frames"], ctx=ctx)
+    logits = decode_train(params, cfg, batch["tokens"], enc_out, ctx=ctx)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg: EncDecConfig, batch, *, ctx=None, taps=None):
+    logits, _ = forward(params, cfg, batch, ctx=ctx)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# serving: encoder runs once (prefill); decoder steps with self-KV + enc-KV
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: EncDecConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    kvshape = (batch, max_len, cfg.n_kv_heads, cfg.hd)
+    enc_shape = (batch, cfg.n_frames, cfg.n_kv_heads, cfg.hd)
+    return [{
+        "self": (jnp.zeros(kvshape, dtype), jnp.zeros(kvshape, dtype)),
+        "cross": (jnp.zeros(enc_shape, dtype), jnp.zeros(enc_shape, dtype)),
+    } for _ in range(cfg.n_layers)]
+
+
+def cache_specs(cfg: EncDecConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    kv = jax.ShapeDtypeStruct((batch, max_len, cfg.n_kv_heads, cfg.hd), dtype)
+    ekv = jax.ShapeDtypeStruct((batch, cfg.n_frames, cfg.n_kv_heads, cfg.hd),
+                               dtype)
+    return [{"self": (kv, kv), "cross": (ekv, ekv)}
+            for _ in range(cfg.n_layers)]
+
+
+def precompute_cross_kv(params, cfg: EncDecConfig, enc_out: jax.Array):
+    out = []
+    for i in range(cfg.n_layers):
+        p = L.layer_slice(params["dec"], i)
+        k = dense(enc_out, p["xattn"]["wk"])
+        v = dense(enc_out, p["xattn"]["wv"])
+        B, S = enc_out.shape[0], enc_out.shape[1]
+        out.append((k.reshape(B, S, cfg.n_kv_heads, cfg.hd),
+                    v.reshape(B, S, cfg.n_kv_heads, cfg.hd)))
+    return out
+
+
+def decode_step(params, cfg: EncDecConfig, cache, token: jax.Array,
+                t: jax.Array, *, ctx=None):
+    x = L.embed(params["embed"], token)
+    pos_table = params["head"]["dec_pos"]
+    pos_idx = jnp.minimum(t, pos_table.shape[0] - 1)
+    x = x + jax.lax.dynamic_slice_in_dim(
+        pos_table, pos_idx, 1, axis=0)[None].astype(x.dtype)
+    positions = jnp.zeros((1,), jnp.int32) + t
+    new_cache = []
+    for i in range(cfg.n_layers):
+        p = L.layer_slice(params["dec"], i)
+        h = _ln(x, p, "ln1")
+        y, kv = L.attention(p["attn"], h, positions, cfg.attn_cfg(True),
+                            name=f"dec{i}.attn", kv_cache=cache[i]["self"],
+                            cache_index=t)
+        x = x + y
+        h = _ln(x, p, "lnx")
+        y = L.cross_attention_cached(p["xattn"], h, cache[i]["cross"],
+                                     cfg.attn_cfg(False), name=f"dec{i}.xattn")
+        x = x + y
+        h = _ln(x, p, "ln2")
+        x = x + L.mlp(p["mlp"], h, L.MLPConfig(cfg.d_model, cfg.d_ff, cfg.act),
+                      name=f"dec{i}.mlp")
+        new_cache.append({"self": kv, "cross": cache[i]["cross"]})
+    x = _ln(x, params["head"], "ln_dec")
+    logits = L.unembed(params["embed"], x)
+    return logits, new_cache

@@ -1,0 +1,236 @@
+"""Hymba-style hybrid-head model (arXiv:2411.13676): every layer runs an
+attention branch and a Mamba/SSM branch *in parallel* on the same input,
+normalizes each branch output and averages them. Sliding-window attention on
+all but 3 layers (first / middle / last are global), plus learnable meta
+tokens prepended to the sequence.
+
+Sub-quadratic by construction (window + O(1) SSM state) → carries long_500k.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dense
+from repro.core.policy import DitherCtx
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models.transformer import _attend_with_mask
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 64
+    d_state: int = 16
+    expand: int = 2
+    window: int = 1024
+    n_meta_tokens: int = 128
+    rope_theta: float = 10_000.0
+    act: str = "swiglu"
+    dtype: Any = jnp.bfloat16
+    tie_embeddings: bool = True
+    remat: bool = True
+    scan_unroll: bool = False
+
+    @property
+    def ssm(self) -> M.SSMConfig:
+        return M.SSMConfig(
+            d_model=self.d_model, d_inner=self.expand * self.d_model,
+            head_dim=self.head_dim, d_state=self.d_state)
+
+    def global_layers(self) -> Tuple[int, ...]:
+        return (0, self.n_layers // 2, self.n_layers - 1)
+
+    def layer_is_local(self, i: int) -> bool:
+        return i not in self.global_layers()
+
+    def attn_cfg(self, window, prefix_len=0) -> L.AttnConfig:
+        return L.AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.head_dim,
+            rope_theta=self.rope_theta, window=window,
+            prefix_len=prefix_len, causal=True)
+
+    @property
+    def param_count(self) -> int:
+        d, hd = self.d_model, self.head_dim
+        attn = d * (self.n_heads * hd) * 2 + d * (self.n_kv_heads * hd) * 2
+        c = self.ssm
+        ssm = (d * c.d_in_proj + c.d_conv * c.conv_dim + c.d_inner * d +
+               3 * c.n_heads + 2 * c.d_inner)
+        nff = 3 if self.act in ("swiglu", "geglu") else 2
+        per_layer = attn + ssm + nff * d * self.d_ff + 4 * d
+        return (self.n_layers * per_layer + self.vocab * d + d +
+                self.n_meta_tokens * d)
+
+    @property
+    def active_param_count(self) -> int:
+        return self.param_count
+
+
+def _init_block(key: jax.Array, cfg: HybridConfig) -> Tuple[L.Params, L.Specs]:
+    ini = L.Init(key, cfg.dtype)
+    attn_p, attn_s = L.init_attention(
+        ini.next_key(), cfg.attn_cfg(cfg.window), cfg.dtype)
+    sub = L.Init(jax.random.PRNGKey(0), cfg.dtype)
+    sub.params, sub.specs = attn_p, attn_s
+    ini.sub("attn", sub)
+    mix_p, mix_s = M.init_mamba_mixer(ini.next_key(), cfg.ssm, cfg.dtype)
+    sub = L.Init(jax.random.PRNGKey(0), cfg.dtype)
+    sub.params, sub.specs = mix_p, mix_s
+    ini.sub("mixer", sub)
+    mlp_p, mlp_s = L.init_mlp(
+        ini.next_key(), L.MLPConfig(cfg.d_model, cfg.d_ff, cfg.act), cfg.dtype)
+    sub = L.Init(jax.random.PRNGKey(0), cfg.dtype)
+    sub.params, sub.specs = mlp_p, mlp_s
+    ini.sub("mlp", sub)
+    ini.ones("ln1", (cfg.d_model,), (None,))
+    ini.ones("ln2", (cfg.d_model,), (None,))
+    # per-branch output norms + learnable mixing scales (Hymba beta)
+    ini.ones("norm_attn", (cfg.d_model,), (None,))
+    ini.ones("norm_ssm", (cfg.d_model,), (None,))
+    return ini.build()
+
+
+def init_hybrid_lm(key: jax.Array, cfg: HybridConfig) -> Tuple[L.Params, L.Specs]:
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    emb_p, emb_s = L.init_embedding(keys[0], cfg.vocab, cfg.d_model, cfg.dtype)
+    blocks = [_init_block(keys[1 + i], cfg) for i in range(cfg.n_layers)]
+    stacked_p, stacked_s = L.stack_layers(blocks)
+    ini = L.Init(keys[-1], cfg.dtype)
+    ini.ones("ln_f", (cfg.d_model,), (None,))
+    ini.normal("meta_tokens", (cfg.n_meta_tokens, cfg.d_model),
+               (None, "embed"), stddev=0.02)
+    head_p, head_s = ini.build()
+    return ({"embed": emb_p, "layers": stacked_p, "head": head_p},
+            {"embed": emb_s, "layers": stacked_s, "head": head_s})
+
+
+def _block(cfg: HybridConfig, p, x, pos_b, is_local, ctx, tag):
+    h = L.rms_norm(x, p["ln1"])
+    acfg_local = cfg.attn_cfg(cfg.window, cfg.n_meta_tokens)
+    acfg_full = cfg.attn_cfg(None)
+    m_local = L.attention_mask(pos_b, pos_b, acfg_local)
+    m_full = L.attention_mask(pos_b, pos_b, acfg_full)
+    mask = jnp.where(is_local, m_local, m_full)
+    attn_y, _ = _attend_with_mask(p["attn"], h, pos_b, acfg_full, mask, ctx,
+                                  f"{tag}.attn")
+    ssm_y = M.mamba_mixer(p["mixer"], h, cfg.ssm, ctx=ctx, name=f"{tag}.ssm")
+    mixed = 0.5 * (L.rms_norm(attn_y, p["norm_attn"]) +
+                   L.rms_norm(ssm_y, p["norm_ssm"]))
+    x = x + mixed
+    h = L.rms_norm(x, p["ln2"])
+    y = L.mlp(p["mlp"], h, L.MLPConfig(cfg.d_model, cfg.d_ff, cfg.act),
+              ctx=ctx, name=f"{tag}.mlp")
+    return x + y
+
+
+def forward(params, cfg: HybridConfig, tokens: jax.Array, *,
+            ctx: Optional[DitherCtx] = None, taps=None):
+    x = L.embed(params["embed"], tokens)
+    B = x.shape[0]
+    meta = jnp.broadcast_to(
+        params["head"]["meta_tokens"][None],
+        (B, cfg.n_meta_tokens, cfg.d_model)).astype(x.dtype)
+    x = jnp.concatenate([meta, x], axis=1)
+    S_tot = x.shape[1]
+    pos_b = jnp.broadcast_to(jnp.arange(S_tot)[None, :], (B, S_tot))
+    local_flags = jnp.asarray(
+        [cfg.layer_is_local(i) for i in range(cfg.n_layers)])
+
+    def body(x, inp):
+        p, is_local = inp
+        return _block(cfg, p, x, pos_b, is_local, ctx, "L"), None
+
+    f = body
+    if cfg.remat:
+        f = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(f, x, (params["layers"], local_flags),
+                        unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    x = x[:, cfg.n_meta_tokens:, :]  # drop meta positions
+    x = L.rms_norm(x, params["head"]["ln_f"])
+    logits = L.unembed(params["embed"], x, ctx=ctx)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg: HybridConfig, batch, *, ctx=None, taps=None):
+    logits, _ = forward(params, cfg, batch["tokens"], ctx=ctx, taps=taps)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def cache_buf_len(cfg: HybridConfig, i: int, max_len: int) -> int:
+    total = max_len + cfg.n_meta_tokens
+    if cfg.layer_is_local(i):
+        return min(cfg.window + cfg.n_meta_tokens, total)
+    return total
+
+
+def init_cache(cfg: HybridConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    cache = []
+    for i in range(cfg.n_layers):
+        s_buf = cache_buf_len(cfg, i, max_len)
+        cache.append({
+            "kv": (jnp.zeros((batch, s_buf, cfg.n_kv_heads, cfg.head_dim), dtype),
+                   jnp.zeros((batch, s_buf, cfg.n_kv_heads, cfg.head_dim), dtype)),
+            "ssm": M.MambaCache.init(cfg.ssm, batch, dtype),
+        })
+    return cache
+
+
+def cache_specs(cfg: HybridConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    out = []
+    for i in range(cfg.n_layers):
+        s_buf = cache_buf_len(cfg, i, max_len)
+        kv = jax.ShapeDtypeStruct(
+            (batch, s_buf, cfg.n_kv_heads, cfg.head_dim), dtype)
+        out.append({"kv": (kv, kv),
+                    "ssm": M.MambaCache.specs(cfg.ssm, batch, dtype)})
+    return out
+
+
+def decode_step(params, cfg: HybridConfig, cache, token: jax.Array,
+                t: jax.Array, *, ctx=None):
+    """t is the position over (meta + text); callers start at n_meta_tokens."""
+    x = L.embed(params["embed"], token)
+    positions = jnp.zeros((1,), jnp.int32) + t
+    new_cache = []
+    for i in range(cfg.n_layers):
+        p = L.layer_slice(params["layers"], i)
+        h = L.rms_norm(x, p["ln1"])
+        local = cfg.layer_is_local(i)
+        acfg = cfg.attn_cfg(cfg.window if local else None,
+                            cfg.n_meta_tokens if local else 0)
+        attn_y, kv = L.attention(
+            p["attn"], h, positions, acfg, ctx=ctx, name=f"L{i}.attn",
+            kv_cache=cache[i]["kv"], cache_index=t)
+        ssm_y, ssm_state = M.mamba_decode_step(
+            p["mixer"], h, cache[i]["ssm"], cfg.ssm, name=f"L{i}.ssm")
+        mixed = 0.5 * (L.rms_norm(attn_y, p["norm_attn"]) +
+                       L.rms_norm(ssm_y, p["norm_ssm"]))
+        x = x + mixed
+        h = L.rms_norm(x, p["ln2"])
+        y = L.mlp(p["mlp"], h, L.MLPConfig(cfg.d_model, cfg.d_ff, cfg.act),
+                  name=f"L{i}.mlp")
+        x = x + y
+        new_cache.append({"kv": kv, "ssm": ssm_state})
+    x = L.rms_norm(x, params["head"]["ln_f"])
+    logits = L.unembed(params["embed"], x)
+    return logits, new_cache

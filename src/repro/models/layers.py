@@ -1,0 +1,387 @@
+"""Shared neural-net layers: initializers, norms, rotary, attention, MLPs.
+
+All weight-bearing contractions route through ``repro.core.dense`` /
+``dithered_einsum`` so dithered backprop covers them uniformly (paper eq. 7-9
+applied at every layer). Activations get logical-axis sharding constraints
+via ``repro.parallel.axes.shard_act``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dense
+from repro.core.policy import DitherCtx
+from repro.parallel.axes import shard_act
+
+Params = Dict[str, Any]
+Specs = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# parameter construction
+# ---------------------------------------------------------------------------
+
+class Init:
+    """Key-splitting parameter initializer that also builds the spec tree."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.float32):
+        self._key = key
+        self.dtype = dtype
+        self.params: Params = {}
+        self.specs: Specs = {}
+
+    def next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def normal(self, name: str, shape, axes, *, stddev: Optional[float] = None,
+               fan_in: Optional[int] = None, dtype=None) -> None:
+        if stddev is None:
+            fi = fan_in if fan_in is not None else shape[0]
+            stddev = 1.0 / np.sqrt(max(fi, 1))
+        self.params[name] = (
+            jax.random.normal(self.next_key(), shape, jnp.float32) * stddev
+        ).astype(dtype or self.dtype)
+        self.specs[name] = tuple(axes)
+
+    def zeros(self, name: str, shape, axes, dtype=None) -> None:
+        self.params[name] = jnp.zeros(shape, dtype or self.dtype)
+        self.specs[name] = tuple(axes)
+
+    def ones(self, name: str, shape, axes, dtype=None) -> None:
+        self.params[name] = jnp.ones(shape, dtype or self.dtype)
+        self.specs[name] = tuple(axes)
+
+    def const(self, name: str, value: jax.Array, axes) -> None:
+        self.params[name] = value.astype(self.dtype)
+        self.specs[name] = tuple(axes)
+
+    def sub(self, name: str, init: "Init") -> None:
+        self.params[name] = init.params
+        self.specs[name] = init.specs
+
+    def build(self) -> Tuple[Params, Specs]:
+        return self.params, self.specs
+
+
+def stack_layers(layer_trees):
+    """Stack per-layer (params, specs) into scanned (L, ...) params."""
+    params = jax.tree.map(lambda *xs: jnp.stack(xs), *[p for p, _ in layer_trees])
+    specs = jax.tree.map(
+        lambda s: (None,) + tuple(s),
+        layer_trees[0][1],
+        is_leaf=lambda s: isinstance(s, tuple) and all(
+            a is None or isinstance(a, str) for a in s),
+    )
+    return params, specs
+
+
+def layer_slice(stacked: Params, l: int) -> Params:
+    """Static per-layer view of scanned (L, ...) params (decode path)."""
+    return jax.tree.map(lambda a: a[l], stacked)
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
+             zero_centered: bool = False) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    s = (1.0 + scale.astype(jnp.float32)) if zero_centered else scale.astype(jnp.float32)
+    return (y * s).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {
+        "gelu": jax.nn.gelu,
+        "silu": jax.nn.silu,
+        "relu": jax.nn.relu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+        "tanh": jnp.tanh,
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0,
+               scaling: float = 1.0) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S).
+
+    theta <= 0 disables rotary (absolute/learned-position models, whisper)."""
+    if theta <= 0:
+        return x
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)
+    ang = positions[..., None].astype(jnp.float32) / scaling * freqs  # (..., S, D/2)
+    ang = ang[..., None, :]  # add head dim
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, optional sliding window, train/prefill + decode)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    rope_scaling: float = 1.0
+    window: Optional[int] = None  # sliding-window size (None = full)
+    softcap: Optional[float] = None
+    prefix_len: int = 0  # meta/visual tokens always attendable
+    causal: bool = True
+
+
+def init_attention(key: jax.Array, cfg: AttnConfig, dtype) -> Tuple[Params, Specs]:
+    ini = Init(key, dtype)
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ini.normal("wq", (d, H * hd), ("embed", "q_heads"), fan_in=d)
+    ini.normal("wk", (d, KV * hd), ("embed", "kv_heads"), fan_in=d)
+    ini.normal("wv", (d, KV * hd), ("embed", "kv_heads"), fan_in=d)
+    ini.normal("wo", (H * hd, d), ("q_heads", "embed"), fan_in=H * hd)
+    if cfg.qkv_bias:
+        ini.zeros("bq", (H * hd,), ("q_heads",))
+        ini.zeros("bk", (KV * hd,), ("kv_heads",))
+        ini.zeros("bv", (KV * hd,), ("kv_heads",))
+    return ini.build()
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def attention_mask(q_pos: jax.Array, k_pos: jax.Array, cfg: AttnConfig,
+                   valid_k: Optional[jax.Array] = None) -> jax.Array:
+    """(..., Sq, Sk) boolean mask. q_pos/k_pos are position indices."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    if cfg.causal:
+        m = kp <= qp
+    else:
+        m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if cfg.window is not None:
+        in_window = kp > (qp - cfg.window)
+        if cfg.prefix_len > 0:
+            in_window = in_window | (kp < cfg.prefix_len)
+        m = m & in_window
+    if valid_k is not None:
+        m = m & valid_k[..., None, :]
+    return m
+
+
+def _sdpa(q, k, v, mask, softcap=None):
+    """Grouped-query SDPA. q: (B,Sq,H,D); k/v: (B,Sk,KV,D) with KV | H.
+
+    The query heads are grouped against their KV head directly (einsum over
+    a (KV, G) split) — K/V are NEVER materialized at H heads, which matters
+    enormously for GQA decode (a 40:8 model would otherwise touch 5x the
+    cache bytes). mask: (B,Sq,Sk) or (Sq,Sk).
+    """
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, D)
+    scale = 1.0 / np.sqrt(D)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    if mask is not None:
+        if mask.ndim == 2:
+            mask = mask[None]
+        logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, H, D)
+
+
+def ring_write_slot(t: jax.Array, s_buf: int, prefix: int) -> jax.Array:
+    """Buffer slot for absolute position t. Slots [0, prefix) are pinned to
+    the prefix (meta/visual tokens); the rest is a ring of size s_buf-prefix."""
+    ring = s_buf - prefix
+    return jnp.where(t < prefix, t, prefix + (t - prefix) % ring)
+
+
+def ring_slot_positions(t: jax.Array, s_buf: int, prefix: int):
+    """(abs_pos, valid) per slot, given the newest written position is t."""
+    slot = jnp.arange(s_buf)
+    ring = s_buf - prefix
+    rel = prefix + (t - prefix) % ring  # slot just written (when t >= prefix)
+    abs_ring = t - ((rel - slot) % ring)
+    in_prefix = slot < prefix
+    pos = jnp.where(in_prefix, slot, abs_ring)
+    valid = jnp.where(
+        in_prefix, slot <= t, (abs_ring >= prefix) & (abs_ring <= t)
+    )
+    return pos, valid
+
+
+def attention(params: Params, x: jax.Array, positions: jax.Array,
+              cfg: AttnConfig, *, ctx: Optional[DitherCtx] = None,
+              name: str = "attn",
+              kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+              cache_index: Optional[jax.Array] = None,
+              x_kv: Optional[jax.Array] = None):
+    """Attention layer (GQA; optional sliding window; optional cross-attn).
+
+    Train/prefill: kv_cache None -> self-attend over x. Returns (y, (k, v)).
+    Decode: kv_cache=(K, V) with buffer layout (B, S_buf, KV, hd); x is the
+    new token (B, 1, d); cache_index is the scalar absolute position t.
+    Windowed layers use a ring buffer (S_buf = window + prefix_len).
+    Cross-attention: pass x_kv (encoder states), kv_cache=None.
+    """
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    src = x if x_kv is None else x_kv
+
+    q = dense(x, params["wq"], params.get("bq"), ctx=ctx, name=f"{name}.q")
+    k = dense(src, params["wk"], params.get("bk"), ctx=ctx, name=f"{name}.k")
+    v = dense(src, params["wv"], params.get("bv"), ctx=ctx, name=f"{name}.v")
+    q = _split_heads(q, H, hd)
+    k = _split_heads(k, KV, hd)
+    v = _split_heads(v, KV, hd)
+    q = shard_act(q, ("batch", "seq", "act_heads", None))
+    k = shard_act(k, ("batch", "seq", "act_heads", None))
+    v = shard_act(v, ("batch", "seq", "act_heads", None))
+
+    if x_kv is None:  # rope only for self-attention
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_scaling)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_scaling)
+
+    if kv_cache is not None:
+        K, V = kv_cache  # (B, S_buf, KV, hd)
+        s_buf = K.shape[1]
+        t = jnp.asarray(cache_index, jnp.int32)
+        write_at = ring_write_slot(t, s_buf, cfg.prefix_len)
+        K = jax.lax.dynamic_update_slice(K, k.astype(K.dtype), (0, write_at, 0, 0))
+        V = jax.lax.dynamic_update_slice(V, v.astype(V.dtype), (0, write_at, 0, 0))
+        k_pos, valid = ring_slot_positions(t, s_buf, cfg.prefix_len)
+        k_pos_b = jnp.broadcast_to(k_pos, (B, s_buf))
+        valid_b = jnp.broadcast_to(valid, (B, s_buf))
+        q_pos_b = jnp.broadcast_to(t, (B, 1))
+        mask = attention_mask(q_pos_b, k_pos_b, cfg, valid_k=valid_b)
+        y = _sdpa(q, K.astype(q.dtype), V.astype(q.dtype), mask, cfg.softcap)
+        out_cache = (K, V)
+    else:
+        pos_b = jnp.broadcast_to(positions, (B,) + positions.shape[-1:])
+        if x_kv is None:
+            mask = attention_mask(pos_b, pos_b, cfg)
+        else:
+            mask = None  # cross-attention: attend over all encoder states
+        y = _sdpa(q, k, v, mask, cfg.softcap)
+        out_cache = (k, v)
+
+    y = y.reshape(B, y.shape[1], H * hd)
+    y = shard_act(y, ("batch", "seq", "act_heads"))
+    y = dense(y, params["wo"], ctx=ctx, name=f"{name}.o")
+    y = shard_act(y, ("batch", "seq", "act_embed"))
+    return y, out_cache
+
+
+def cross_attention_cached(params: Params, x: jax.Array,
+                           enc_kv: Tuple[jax.Array, jax.Array],
+                           cfg: AttnConfig, *, ctx=None, name="xattn"):
+    """Decode-time cross-attention over precomputed encoder K/V (no write)."""
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _split_heads(dense(x, params["wq"], params.get("bq"), ctx=ctx,
+                           name=f"{name}.q"), H, hd)
+    K, V = enc_kv
+    y = _sdpa(q, K.astype(q.dtype), V.astype(q.dtype), None, cfg.softcap)
+    y = y.reshape(B, y.shape[1], H * hd)
+    return dense(y, params["wo"], ctx=ctx, name=f"{name}.o")
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    d_model: int
+    d_ff: int
+    kind: str = "swiglu"  # swiglu | geglu | relu2 | gelu
+
+
+def init_mlp(key: jax.Array, cfg: MLPConfig, dtype) -> Tuple[Params, Specs]:
+    ini = Init(key, dtype)
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.kind in ("swiglu", "geglu"):
+        ini.normal("w_gate", (d, f), ("embed", "mlp"), fan_in=d)
+        ini.normal("w_up", (d, f), ("embed", "mlp"), fan_in=d)
+    else:
+        ini.normal("w_up", (d, f), ("embed", "mlp"), fan_in=d)
+    ini.normal("w_down", (f, d), ("mlp", "embed"), fan_in=f)
+    return ini.build()
+
+
+def mlp(params: Params, x: jax.Array, cfg: MLPConfig, *,
+        ctx: Optional[DitherCtx] = None, name: str = "mlp") -> jax.Array:
+    if cfg.kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.kind == "swiglu" else jax.nn.gelu
+        g = dense(x, params["w_gate"], ctx=ctx, name=f"{name}.gate")
+        u = dense(x, params["w_up"], ctx=ctx, name=f"{name}.up")
+        h = act(g) * u
+    else:
+        h = act_fn(cfg.kind)(dense(x, params["w_up"], ctx=ctx, name=f"{name}.up"))
+    h = shard_act(h, ("batch", "seq", "act_mlp"))
+    y = dense(h, params["w_down"], ctx=ctx, name=f"{name}.down")
+    return shard_act(y, ("batch", "seq", "act_embed"))
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def init_embedding(key: jax.Array, vocab: int, d_model: int, dtype
+                   ) -> Tuple[Params, Specs]:
+    ini = Init(key, dtype)
+    ini.normal("table", (vocab, d_model), ("vocab", "embed"), stddev=0.02)
+    return ini.build()
+
+
+def embed(params: Params, tokens: jax.Array) -> jax.Array:
+    y = params["table"][tokens]
+    return shard_act(y, ("batch", "seq", "act_embed"))
+
+
+def unembed(params: Params, x: jax.Array, *, ctx: Optional[DitherCtx] = None,
+            name: str = "lm_head", table: Optional[jax.Array] = None) -> jax.Array:
+    w = (table if table is not None else params["table"]).T
+    logits = dense(x, w.astype(x.dtype), ctx=ctx, name=name)
+    return shard_act(logits, ("batch", "seq", "act_vocab"))

@@ -1,0 +1,427 @@
+"""Decoder-only LM transformer family.
+
+Covers the dense LMs (qwen2.5, gemma, gemma3, minitron), the MoE LMs (dbrx,
+moonshot) and the VLM backbone (internvl2: text decoder + projected visual
+prefix). Layers are stacked and scanned (``lax.scan``) for train/prefill so
+compile time is O(1) in depth; decode unrolls layers in Python because
+windowed and global layers carry different cache shapes.
+
+Every projection goes through ``repro.core.dense`` → dithered backprop
+coverage is total (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dense
+from repro.core.policy import DitherCtx
+from repro.core.probe import tap
+from repro.models import layers as L
+from repro.models.moe import MoEConfig, init_moe, moe_layer
+from repro.parallel.axes import shard_act
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    act: str = "swiglu"
+    norm: str = "rmsnorm"
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10_000.0
+    rope_scaling: float = 1.0
+    window: Optional[int] = None  # sliding-window size for local layers
+    window_pattern: int = 0  # N -> every (N+1)th layer is global; 0 -> all global
+    softcap: Optional[float] = None
+    embed_scale: bool = False  # gemma multiplies embeddings by sqrt(d)
+    moe: Optional[MoEConfig] = None
+    # VLM (internvl2): visual prefix fed as precomputed patch embeddings
+    vlm_patches: int = 0
+    vit_dim: int = 0
+    dtype: Any = jnp.bfloat16
+    remat: bool = True  # activation checkpointing per block in training
+    scan_unroll: bool = False  # unroll layers (dry-run cost accounting)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    def attn_cfg(self, window: Optional[int]) -> L.AttnConfig:
+        return L.AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.hd,
+            qkv_bias=self.qkv_bias, rope_theta=self.rope_theta,
+            rope_scaling=self.rope_scaling, window=window,
+            softcap=self.softcap, causal=True,
+        )
+
+    def layer_is_local(self, i: int) -> bool:
+        if self.window is None:
+            return False
+        if self.window_pattern == 0:
+            return True
+        return (i + 1) % (self.window_pattern + 1) != 0
+
+    @property
+    def param_count(self) -> int:
+        """Total parameters (for roofline MODEL_FLOPS = 6 N D)."""
+        d, f, V, hd = self.d_model, self.d_ff, self.vocab, self.hd
+        attn = d * (self.n_heads * hd) * 2 + d * (self.n_kv_heads * hd) * 2
+        if self.moe is None:
+            nff = 3 if self.act in ("swiglu", "geglu") else 2
+            mlp = nff * d * f
+        else:
+            m = self.moe
+            mlp = 3 * m.n_experts * d * m.d_ff_expert + d * m.n_experts
+            if m.n_shared:
+                mlp += 3 * d * m.d_ff_expert * m.n_shared
+        per_layer = attn + mlp + 2 * d
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        proj = self.vlm_patches and (self.vit_dim * d + d * d) or 0
+        return self.n_layers * per_layer + emb + d + proj
+
+    @property
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top_k + shared experts)."""
+        if self.moe is None:
+            return self.param_count
+        m = self.moe
+        d = self.d_model
+        dense_total = self.param_count - self.n_layers * 3 * m.n_experts * d * m.d_ff_expert
+        active_mlp = self.n_layers * 3 * m.top_k * d * m.d_ff_expert
+        return dense_total + active_mlp
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key: jax.Array, cfg: LMConfig) -> Tuple[L.Params, L.Specs]:
+    ini = L.Init(key, cfg.dtype)
+    ka, km = jax.random.split(ini.next_key())
+    attn_p, attn_s = L.init_attention(ka, cfg.attn_cfg(cfg.window), cfg.dtype)
+    sub = L.Init(jax.random.PRNGKey(0), cfg.dtype)
+    sub.params, sub.specs = attn_p, attn_s
+    ini.sub("attn", sub)
+    if cfg.moe is not None:
+        moe_p, moe_s = init_moe(km, cfg.d_model, cfg.moe, cfg.dtype)
+        msub = L.Init(jax.random.PRNGKey(0), cfg.dtype)
+        msub.params, msub.specs = moe_p, moe_s
+        ini.sub("moe", msub)
+    else:
+        mlp_p, mlp_s = L.init_mlp(
+            km, L.MLPConfig(cfg.d_model, cfg.d_ff, cfg.act), cfg.dtype)
+        msub = L.Init(jax.random.PRNGKey(0), cfg.dtype)
+        msub.params, msub.specs = mlp_p, mlp_s
+        ini.sub("mlp", msub)
+    ini.ones("ln1", (cfg.d_model,), (None,))
+    ini.ones("ln2", (cfg.d_model,), (None,))
+    return ini.build()
+
+
+def init_lm(key: jax.Array, cfg: LMConfig) -> Tuple[L.Params, L.Specs]:
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    emb_p, emb_s = L.init_embedding(keys[0], cfg.vocab, cfg.d_model, cfg.dtype)
+    blocks = [_init_block(keys[1 + i], cfg) for i in range(cfg.n_layers)]
+    stacked_p, stacked_s = L.stack_layers(blocks)
+    params: Dict[str, Any] = {"embed": emb_p, "layers": stacked_p}
+    specs: Dict[str, Any] = {"embed": emb_s, "layers": stacked_s}
+    ini = L.Init(keys[-2], cfg.dtype)
+    ini.ones("ln_f", (cfg.d_model,), (None,))
+    if not cfg.tie_embeddings:
+        ini.normal("lm_head", (cfg.d_model, cfg.vocab), ("embed", "vocab"),
+                   stddev=0.02)
+    if cfg.vlm_patches:
+        ini.normal("vit_proj1", (cfg.vit_dim, cfg.d_model), (None, "embed"),
+                   fan_in=cfg.vit_dim)
+        ini.normal("vit_proj2", (cfg.d_model, cfg.d_model), ("embed", "embed"),
+                   fan_in=cfg.d_model)
+    head_p, head_s = ini.build()
+    params["head"] = head_p
+    specs["head"] = head_s
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill) — scanned blocks
+# ---------------------------------------------------------------------------
+
+def _block(cfg: LMConfig, p: L.Params, x: jax.Array, positions: jax.Array,
+           is_local, ctx: Optional[DitherCtx], layer_tag: str,
+           taps=None) -> Tuple[jax.Array, jax.Array, Tuple]:
+    """One transformer block. is_local: traced bool for the window pattern.
+
+    The residual stream is pinned (batch-sharded, model-replicated) at the
+    block edges and around each norm so XLA cannot re-shard the f32 norm
+    interior across the model axis (it did: 2.6 GB/layer f32 all-reduces in
+    the norm backward — §Perf qwen/It1)."""
+    x = shard_act(x, ("batch", "seq", "act_embed"))
+    h = (L.rms_norm(x, p["ln1"]) if cfg.norm == "rmsnorm"
+         else L.rms_norm(x, p["ln1"]))
+    h = shard_act(h, ("batch", "seq", "act_embed"))
+    acfg_local = cfg.attn_cfg(cfg.window)
+    acfg_full = cfg.attn_cfg(None)
+    B, S = x.shape[0], x.shape[1]
+    pos_b = jnp.broadcast_to(positions, (B, S))
+    if cfg.window is not None and cfg.window_pattern > 0:
+        m_local = L.attention_mask(pos_b, pos_b, acfg_local)
+        m_full = L.attention_mask(pos_b, pos_b, acfg_full)
+        mask = jnp.where(is_local, m_local, m_full)
+        # masks are selected per layer; attention itself is window-agnostic
+        attn_out, kv = _attend_with_mask(p["attn"], h, pos_b, acfg_full, mask,
+                                         ctx, f"{layer_tag}.attn")
+    else:
+        acfg = acfg_local if cfg.window is not None else acfg_full
+        mask = L.attention_mask(pos_b, pos_b, acfg)
+        attn_out, kv = _attend_with_mask(p["attn"], h, pos_b, acfg, mask,
+                                         ctx, f"{layer_tag}.attn")
+    attn_out = tap(attn_out, taps, f"{layer_tag}.attn_out")
+    x = shard_act(x + attn_out, ("batch", "seq", "act_embed"))
+    h = shard_act(L.rms_norm(x, p["ln2"]), ("batch", "seq", "act_embed"))
+    if cfg.moe is not None:
+        y, aux = moe_layer(p["moe"], h, cfg.moe, ctx, name=f"{layer_tag}.moe")
+    else:
+        y = L.mlp(p["mlp"], h, L.MLPConfig(cfg.d_model, cfg.d_ff, cfg.act),
+                  ctx=ctx, name=f"{layer_tag}.mlp")
+        aux = jnp.zeros((), jnp.float32)
+    y = tap(y, taps, f"{layer_tag}.mlp_out")
+    return shard_act(x + y, ("batch", "seq", "act_embed")), aux, kv
+
+
+def _attend_with_mask(p, h, pos_b, acfg, mask, ctx, name):
+    """attention() with a precomputed mask (window selected by traced flag).
+
+    q/k/v are constrained on the FUSED head dim (H*hd, KV*hd) *before* the
+    head reshape — the fused dims divide any TP width even when the head
+    counts do not (qwen: 40 heads on a 16-way model axis), which otherwise
+    left XLA free to invent 8-way gathers of f32 q tensors (§Perf qwen/It2).
+    """
+    B, S = h.shape[0], h.shape[1]
+    H, KV, hd = acfg.n_heads, acfg.n_kv_heads, acfg.head_dim
+    q = dense(h, p["wq"], p.get("bq"), ctx=ctx, name=f"{name}.q")
+    k = dense(h, p["wk"], p.get("bk"), ctx=ctx, name=f"{name}.k")
+    v = dense(h, p["wv"], p.get("bv"), ctx=ctx, name=f"{name}.v")
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    # per-head constraints fall back to replication when H % tp != 0 (qwen:
+    # 40 heads / 16) — constraining the FUSED dim instead was tried and
+    # REFUTED (§Perf qwen/It2: the reshape from 320-wide shards to 128-wide
+    # heads forced relayouts, coll_s 32.9 -> 47.8). XLA's own choice plus
+    # the seq-parallel rules variant (qwen/It4) is what actually wins.
+    q = shard_act(q, ("batch", "attn_seq", "act_heads", None))
+    k = shard_act(k, ("batch", "attn_seq", "act_heads", None))
+    v = shard_act(v, ("batch", "attn_seq", "act_heads", None))
+    q = L.apply_rope(q, pos_b, acfg.rope_theta, acfg.rope_scaling)
+    k = L.apply_rope(k, pos_b, acfg.rope_theta, acfg.rope_scaling)
+    y = L._sdpa(q, k, v, mask, acfg.softcap)
+    y = y.reshape(B, S, H * hd)
+    y = shard_act(y, ("batch", "attn_seq", "act_heads"))
+    y = dense(y, p["wo"], ctx=ctx, name=f"{name}.o")
+    return shard_act(y, ("batch", "seq", "act_embed")), (k, v)
+
+
+def _embed_inputs(params, cfg: LMConfig, tokens: jax.Array,
+                  patch_embeds: Optional[jax.Array], ctx) -> jax.Array:
+    x = L.embed(params["embed"], tokens)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    if cfg.vlm_patches and patch_embeds is not None:
+        pe = dense(patch_embeds.astype(x.dtype), params["head"]["vit_proj1"],
+                   ctx=ctx, name="vit_proj1")
+        pe = dense(jax.nn.gelu(pe), params["head"]["vit_proj2"], ctx=ctx,
+                   name="vit_proj2")
+        x = jnp.concatenate([pe, x], axis=1)  # visual prefix
+    return x
+
+
+def forward(params: L.Params, cfg: LMConfig, tokens: jax.Array, *,
+            ctx: Optional[DitherCtx] = None,
+            patch_embeds: Optional[jax.Array] = None,
+            taps=None) -> Tuple[jax.Array, jax.Array]:
+    """tokens (B, S) -> (logits (B, S_total, V), aux_loss)."""
+    x = _embed_inputs(params, cfg, tokens, patch_embeds, ctx)
+    B, S_tot = x.shape[0], x.shape[1]
+    positions = jnp.arange(S_tot)[None, :]
+    local_flags = jnp.asarray(
+        [cfg.layer_is_local(i) for i in range(cfg.n_layers)])
+
+    if taps is not None:
+        # probe mode: unrolled layers so taps address individual layers
+        aux_total = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            p_i = L.layer_slice(params["layers"], i)
+            x, aux, _ = _block(cfg, p_i, x, positions, local_flags[i], ctx,
+                               f"L{i}", taps=taps)
+            aux_total = aux_total + aux
+    else:
+        def scan_body(carry, inp):
+            x = carry
+            p_i, is_local = inp
+            x, aux, _ = _block(cfg, p_i, x, positions, is_local, ctx, "L")
+            return x, aux
+
+        body = scan_body
+        if cfg.remat:
+            body = jax.checkpoint(
+                scan_body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, auxs = jax.lax.scan(body, x, (params["layers"], local_flags),
+                               unroll=cfg.n_layers if cfg.scan_unroll else 1)
+        aux_total = jnp.sum(auxs)
+
+    x = L.rms_norm(x, params["head"]["ln_f"])
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x, ctx=ctx)
+    else:
+        logits = dense(x, params["head"]["lm_head"], ctx=ctx, name="lm_head")
+        logits = shard_act(logits, ("batch", "seq", "act_vocab"))
+    return logits, aux_total
+
+
+def loss_fn(params: L.Params, cfg: LMConfig, batch: Dict[str, jax.Array], *,
+            ctx: Optional[DitherCtx] = None, taps=None) -> jax.Array:
+    """Next-token cross-entropy (+ MoE aux). batch: tokens, labels, [patches]."""
+    logits, aux = forward(
+        params, cfg, batch["tokens"], ctx=ctx,
+        patch_embeds=batch.get("patch_embeds"), taps=taps)
+    labels = batch["labels"]
+    if cfg.vlm_patches and batch.get("patch_embeds") is not None:
+        logits = logits[:, -labels.shape[1]:, :]  # loss on text positions only
+    logits_f = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits_f, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        denom = np.prod(labels.shape)
+    return jnp.sum(nll) / denom + aux
+
+
+# ---------------------------------------------------------------------------
+# decode (serving) — unrolled layers, per-layer cache shapes
+# ---------------------------------------------------------------------------
+
+def cache_buf_len(cfg: LMConfig, i: int, max_len: int) -> int:
+    if cfg.layer_is_local(i):
+        return min(cfg.window, max_len)
+    return max_len
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int,
+               dtype=None) -> List[Tuple[jax.Array, jax.Array]]:
+    dtype = dtype or cfg.dtype
+    cache = []
+    for i in range(cfg.n_layers):
+        s_buf = cache_buf_len(cfg, i, max_len)
+        kv = (jnp.zeros((batch, s_buf, cfg.n_kv_heads, cfg.hd), dtype),
+              jnp.zeros((batch, s_buf, cfg.n_kv_heads, cfg.hd), dtype))
+        cache.append(kv)
+    return cache
+
+
+def cache_specs(cfg: LMConfig, batch: int, max_len: int, dtype=None):
+    """ShapeDtypeStructs for the cache (dry-run input_specs)."""
+    dtype = dtype or cfg.dtype
+    return [
+        (jax.ShapeDtypeStruct(
+            (batch, cache_buf_len(cfg, i, max_len), cfg.n_kv_heads, cfg.hd),
+            dtype),) * 2
+        for i in range(cfg.n_layers)
+    ]
+
+
+def decode_step(params: L.Params, cfg: LMConfig, cache,
+                token: jax.Array, t: jax.Array, *,
+                ctx: Optional[DitherCtx] = None):
+    """One decoding step. token: (B, 1) ids; t: scalar position. Returns
+    (logits (B, 1, V), new_cache)."""
+    x = L.embed(params["embed"], token)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    positions = jnp.full((1,), 0, jnp.int32) + t
+    new_cache = []
+    for i in range(cfg.n_layers):
+        p = L.layer_slice(params["layers"], i)
+        h = L.rms_norm(x, p["ln1"])
+        acfg = cfg.attn_cfg(cfg.window if cfg.layer_is_local(i) else None)
+        attn_out, kv = L.attention(
+            p["attn"], h, positions, acfg, ctx=ctx, name=f"L{i}.attn",
+            kv_cache=cache[i], cache_index=t)
+        x = x + attn_out
+        h = L.rms_norm(x, p["ln2"])
+        if cfg.moe is not None:
+            y, _ = moe_layer(p["moe"], h, cfg.moe, ctx, name=f"L{i}.moe")
+        else:
+            y = L.mlp(p["mlp"], h,
+                      L.MLPConfig(cfg.d_model, cfg.d_ff, cfg.act),
+                      ctx=ctx, name=f"L{i}.mlp")
+        x = x + y
+        new_cache.append(kv)
+    x = L.rms_norm(x, params["head"]["ln_f"])
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x)
+    else:
+        logits = dense(x, params["head"]["lm_head"], name="lm_head")
+    return logits, new_cache
+
+
+def prefill(params: L.Params, cfg: LMConfig, tokens: jax.Array, max_len: int,
+            patch_embeds: Optional[jax.Array] = None):
+    """Run the full prompt, build a decode cache. Returns (logits, cache, t)."""
+    x = _embed_inputs(params, cfg, tokens, patch_embeds, None)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    cache = []
+    for i in range(cfg.n_layers):
+        p = L.layer_slice(params["layers"], i)
+        h = L.rms_norm(x, p["ln1"])
+        acfg = cfg.attn_cfg(cfg.window if cfg.layer_is_local(i) else None)
+        pos_b = jnp.broadcast_to(positions, (B, S))
+        mask = L.attention_mask(pos_b, pos_b, acfg)
+        attn_out, (k, v) = _attend_with_mask(
+            p["attn"], h, pos_b, acfg, mask, None, f"L{i}.attn")
+        x = x + attn_out
+        h = L.rms_norm(x, p["ln2"])
+        if cfg.moe is not None:
+            y, _ = moe_layer(p["moe"], h, cfg.moe, None, name=f"L{i}.moe")
+        else:
+            y = L.mlp(p["mlp"], h,
+                      L.MLPConfig(cfg.d_model, cfg.d_ff, cfg.act),
+                      name=f"L{i}.mlp")
+        x = x + y
+        # place prompt K/V into the decode buffer
+        s_buf = cache_buf_len(cfg, i, max_len)
+        K = jnp.zeros((B, s_buf, cfg.n_kv_heads, cfg.hd), cfg.dtype)
+        V = jnp.zeros((B, s_buf, cfg.n_kv_heads, cfg.hd), cfg.dtype)
+        if s_buf >= S:
+            K = jax.lax.dynamic_update_slice(K, k.astype(K.dtype), (0, 0, 0, 0))
+            V = jax.lax.dynamic_update_slice(V, v.astype(V.dtype), (0, 0, 0, 0))
+        else:
+            # window buffer: keep the last s_buf positions, ring-aligned
+            tail_k = k[:, S - s_buf:, :, :].astype(K.dtype)
+            tail_v = v[:, S - s_buf:, :, :].astype(V.dtype)
+            # position p sits at slot p % s_buf (prefix_len = 0 here)
+            roll = (S - s_buf) % s_buf
+            K = jnp.roll(tail_k, shift=roll, axis=1)
+            V = jnp.roll(tail_v, shift=roll, axis=1)
+        cache.append((K, V))
+    x = L.rms_norm(x, params["head"]["ln_f"])
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x)
+    else:
+        logits = dense(x, params["head"]["lm_head"], name="lm_head")
+    return logits, cache, jnp.asarray(S - 1, jnp.int32)

@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (
+    OptConfig, apply_updates, clip_by_global_norm, init_opt_state,
+    opt_state_specs, schedule_lr,
+)
+
+__all__ = ["OptConfig", "apply_updates", "clip_by_global_norm",
+           "init_opt_state", "opt_state_specs", "schedule_lr"]

@@ -1,0 +1,151 @@
+"""Optimizers (no optax in this environment — built from scratch).
+
+SGD-momentum matches the paper's training recipe (momentum 0.9, weight decay
+5e-4); AdamW is the LM default. bf16 params keep an f32 master copy in the
+optimizer state (mixed-precision convention), f32 params update in place.
+Optimizer state mirrors the parameter sharding specs, so TP/DP sharding of
+the train step extends to the moments automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"  # adamw | sgd
+    lr: float = 1e-3
+    momentum: float = 0.9  # sgd
+    b1: float = 0.9  # adamw
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: Optional[float] = 1.0
+    schedule: str = "constant"  # constant | cosine | step
+    warmup_steps: int = 0
+    total_steps: int = 10_000
+    step_decay_every: int = 100  # paper: lr-decay 0.1/100
+    step_decay_rate: float = 0.1
+    min_lr_ratio: float = 0.1
+
+
+def schedule_lr(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    base = jnp.asarray(cfg.lr, jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1) / jnp.maximum(cfg.warmup_steps, 1)) \
+        if cfg.warmup_steps > 0 else 1.0
+    if cfg.schedule == "cosine":
+        t = jnp.clip((s - cfg.warmup_steps) /
+                     jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        mult = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "step":
+        mult = cfg.step_decay_rate ** jnp.floor(s / cfg.step_decay_every)
+    else:
+        mult = 1.0
+    return base * warm * mult
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def _needs_master(p) -> bool:
+    return p.dtype in (jnp.bfloat16, jnp.float16)
+
+
+def init_opt_state(params, cfg: OptConfig) -> Dict[str, Any]:
+    def master(p):
+        return p.astype(jnp.float32) if _needs_master(p) else jnp.zeros((), jnp.int8)
+
+    state: Dict[str, Any] = {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(master, params),
+    }
+    if cfg.name == "adamw":
+        state["mu"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        state["nu"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    elif cfg.name == "sgd":
+        state["mu"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    else:
+        raise ValueError(cfg.name)
+    return state
+
+
+def opt_state_specs(param_specs, cfg: OptConfig):
+    """Logical-axis spec tree mirroring init_opt_state's structure."""
+    is_spec = lambda s: s is None or (isinstance(s, tuple) and all(
+        a is None or isinstance(a, str) for a in s))
+    scalar = ()
+    master = jax.tree.map(lambda s: s, param_specs, is_leaf=is_spec)
+    out = {"step": scalar, "master": master}
+    if cfg.name in ("adamw", "sgd"):
+        out["mu"] = jax.tree.map(lambda s: s, param_specs, is_leaf=is_spec)
+    if cfg.name == "adamw":
+        out["nu"] = jax.tree.map(lambda s: s, param_specs, is_leaf=is_spec)
+    return out
+
+
+def apply_updates(params, grads, state, cfg: OptConfig
+                  ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """One optimizer step. Returns (params, state, metrics)."""
+    step = state["step"]
+    lr = schedule_lr(cfg, step)
+    metrics = {"lr": lr}
+    if cfg.grad_clip is not None:
+        grads, gn = clip_by_global_norm(grads, cfg.grad_clip)
+        metrics["grad_norm"] = gn
+
+    def get_master(p, m):
+        return m if _needs_master(p) else p.astype(jnp.float32)
+
+    masters = jax.tree.map(get_master, params, state["master"])
+
+    if cfg.name == "adamw":
+        b1, b2 = cfg.b1, cfg.b2
+        t = (step + 1).astype(jnp.float32)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state["mu"], grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(w, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            return w - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                             + cfg.weight_decay * w)
+
+        new_masters = jax.tree.map(upd, masters, mu, nu)
+        new_state = dict(state, step=step + 1, mu=mu, nu=nu)
+    elif cfg.name == "sgd":
+        mu = jax.tree.map(
+            lambda m, g, w: cfg.momentum * m + g.astype(jnp.float32)
+            + cfg.weight_decay * w,
+            state["mu"], grads, masters)
+        new_masters = jax.tree.map(lambda w, m: w - lr * m, masters, mu)
+        new_state = dict(state, step=step + 1, mu=mu)
+    else:
+        raise ValueError(cfg.name)
+
+    def put_back(p, w):
+        return w.astype(p.dtype)
+
+    new_params = jax.tree.map(put_back, params, new_masters)
+
+    def keep_master(p, w):
+        return w if _needs_master(p) else jnp.zeros((), jnp.int8)
+
+    new_state["master"] = jax.tree.map(keep_master, params, new_masters)
+    return new_params, new_state, metrics

@@ -1,0 +1,4 @@
+from repro.parallel import axes
+from repro.parallel.axes import Rules, shard_act, use_rules, current_rules, tp_dp_rules
+
+__all__ = ["axes", "Rules", "shard_act", "use_rules", "current_rules", "tp_dp_rules"]

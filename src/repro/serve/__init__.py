@@ -1,0 +1,3 @@
+from repro.serve.engine import Engine, Request, ServeConfig, greedy_generate
+
+__all__ = ["Engine", "Request", "ServeConfig", "greedy_generate"]

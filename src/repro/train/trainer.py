@@ -1,0 +1,138 @@
+"""Training runtime: loop + grad accumulation + checkpoints + fault hooks.
+
+Single-host (tests/examples) and pjit multi-device paths share this loop;
+distribution enters only through the sharding rules installed around jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import DitherCtx, DitherPolicy
+from repro.models.api import Model
+from repro.optim import OptConfig, apply_updates, init_opt_state
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault_tolerance import PreemptionGuard
+from repro.utils import get_logger
+
+log = get_logger("trainer")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    grad_accum: int = 1
+    log_every: int = 10
+    ckpt_every: int = 0  # 0 = off
+    ckpt_dir: str = ""
+    keep_ckpts: int = 3
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, model: Model, opt_cfg: OptConfig, tcfg: TrainerConfig,
+                 policy: Optional[DitherPolicy] = None,
+                 eval_fn: Optional[Callable] = None):
+        self.model = model
+        self.opt_cfg = opt_cfg
+        self.tcfg = tcfg
+        self.policy = policy
+        self.eval_fn = eval_fn
+        self.guard = PreemptionGuard(install=False)
+        self.ckpt = (CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep_ckpts)
+                     if tcfg.ckpt_every and tcfg.ckpt_dir else None)
+        self._jit_step = jax.jit(self._step)
+        self.history: list = []
+
+    # one optimizer step with optional micro-batch gradient accumulation
+    def _step(self, params, opt_state, batches, base_key):
+        step = opt_state["step"]
+        ctx = None
+        if self.policy is not None and self.policy.enabled:
+            ctx = DitherCtx.for_step(base_key, step, self.policy)
+
+        def one_loss(p, b, i):
+            c = None
+            if ctx is not None:
+                # micro-batches get distinct noise: fold the slice index in
+                c = DitherCtx(jax.random.fold_in(ctx.key, i), ctx.policy)
+            return self.model.loss(p, b, ctx=c)
+
+        n = self.tcfg.grad_accum
+        if n == 1:
+            loss, grads = jax.value_and_grad(one_loss)(params, batches, 0)
+        else:
+            # accept flat batches: split the leading (batch) dim into
+            # (n, batch/n, ...) microbatches
+            def to_micro(x):
+                if x.shape[0] == n:
+                    return x
+                assert x.shape[0] % n == 0, (x.shape, n)
+                return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+
+            batches = jax.tree.map(to_micro, batches)
+
+            def acc_fn(carry, ib):
+                i, b = ib
+                l, g = jax.value_and_grad(one_loss)(params, b, i)
+                loss_acc, g_acc = carry
+                return (loss_acc + l / n,
+                        jax.tree.map(lambda a, x: a + x / n, g_acc, g)), None
+
+            zero = (jnp.zeros(()),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+            (loss, grads), _ = jax.lax.scan(
+                acc_fn, zero, (jnp.arange(n), batches))
+        params, opt_state, metrics = apply_updates(
+            params, grads, opt_state, self.opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    def restore_or_init(self, key: jax.Array):
+        params, specs = self.model.init(key)
+        opt_state = init_opt_state(params, self.opt_cfg)
+        if self.ckpt is not None and self.ckpt.latest_step() is not None:
+            state = self.ckpt.restore({"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            log.info("restored checkpoint at step %d",
+                     int(opt_state["step"]))
+        return params, opt_state, specs
+
+    def fit(self, batch_iter: Iterator, params=None, opt_state=None
+            ) -> Dict[str, Any]:
+        key = jax.random.PRNGKey(self.tcfg.seed)
+        base_key = jax.random.fold_in(key, 0xD17E)
+        if params is None:
+            params, opt_state, _ = self.restore_or_init(key)
+        start = int(opt_state["step"])
+        t0 = time.time()
+        for step in range(start, self.tcfg.total_steps):
+            if self.guard.should_stop:
+                log.info("preemption: checkpointing at step %d and exiting",
+                         step)
+                if self.ckpt is not None:
+                    self.ckpt.save(step, {"params": params, "opt": opt_state})
+                    self.ckpt.wait()
+                break
+            batch = next(batch_iter)
+            if isinstance(batch, tuple):  # (step, batch) loaders
+                batch = batch[1]
+            params, opt_state, metrics = self._jit_step(
+                params, opt_state, batch, base_key)
+            if self.tcfg.log_every and (step + 1) % self.tcfg.log_every == 0:
+                loss = float(metrics["loss"])
+                self.history.append({"step": step + 1, "loss": loss})
+                log.info("step %d loss %.4f (%.2f s)", step + 1, loss,
+                         time.time() - t0)
+            if (self.ckpt is not None and self.tcfg.ckpt_every
+                    and (step + 1) % self.tcfg.ckpt_every == 0):
+                self.ckpt.save(step + 1, {"params": params, "opt": opt_state})
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return {"params": params, "opt_state": opt_state,
+                "history": self.history}

@@ -1,0 +1,15 @@
+from repro.utils.pytree import (
+    tree_size,
+    tree_bytes,
+    tree_map_with_path_str,
+    flatten_with_names,
+)
+from repro.utils.logging import get_logger
+
+__all__ = [
+    "tree_size",
+    "tree_bytes",
+    "tree_map_with_path_str",
+    "flatten_with_names",
+    "get_logger",
+]

@@ -1,0 +1,46 @@
+"""Pytree helpers used across the framework."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def tree_size(tree: Any) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes across all leaves (uses dtype itemsize)."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        itemsize = np.dtype(x.dtype).itemsize
+        total += int(np.prod(x.shape)) * itemsize
+    return total
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_map_with_path_str(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """tree_map where fn receives ("a/b/c", leaf)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: fn(_path_str(path), leaf), tree
+    )
+
+
+def flatten_with_names(tree: Any) -> list[tuple[str, Any]]:
+    """Flatten to [(path_string, leaf)] pairs, deterministic order."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(_path_str(path), leaf) for path, leaf in flat]

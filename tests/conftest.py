@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Tests run on the single real CPU device (the 512-device override is
+# dry-run-only by design). Keep x64 off; models under test use f32.
+jax.config.update("jax_platforms", "cpu")
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

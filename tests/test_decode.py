@@ -1,0 +1,148 @@
+"""Serving-path consistency: prefill + step-by-step decode must agree with
+the full training forward, including sliding-window ring buffers and
+hybrid/meta-token paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import hybrid as H
+from repro.models import transformer as tf
+from repro.models.layers import ring_slot_positions, ring_write_slot
+
+
+class TestRingBuffer:
+    def test_full_buffer_positions(self):
+        t = jnp.asarray(5)
+        pos, valid = ring_slot_positions(t, 8, 0)
+        np.testing.assert_array_equal(np.asarray(pos)[:6], np.arange(6))
+        np.testing.assert_array_equal(np.asarray(valid),
+                                      [1, 1, 1, 1, 1, 1, 0, 0])
+
+    def test_ring_wraps(self):
+        s_buf = 4
+        seen = {}
+        for t in range(10):
+            slot = int(ring_write_slot(jnp.asarray(t), s_buf, 0))
+            seen[slot] = t
+            pos, valid = ring_slot_positions(jnp.asarray(t), s_buf, 0)
+            pos, valid = np.asarray(pos), np.asarray(valid)
+            for s in range(s_buf):
+                if valid[s]:
+                    assert pos[s] == seen[s], (t, s, pos, seen)
+
+    def test_prefix_slots_pinned(self):
+        s_buf, prefix = 6, 2
+        for t in range(2, 12):
+            slot = int(ring_write_slot(jnp.asarray(t), s_buf, prefix))
+            assert slot >= prefix
+            pos, valid = ring_slot_positions(jnp.asarray(t), s_buf, prefix)
+            pos, valid = np.asarray(pos), np.asarray(valid)
+            assert pos[0] == 0 and pos[1] == 1
+            assert valid[0] and valid[1]
+            ring_pos = pos[prefix:][valid[prefix:]]
+            assert len(set(ring_pos.tolist())) == len(ring_pos)
+            assert all(p >= prefix for p in ring_pos)
+
+
+def _decode_all(model_cfg, params, toks, max_len, decode_fn):
+    cache_init, decode_step = decode_fn
+    cache = cache_init(model_cfg, toks.shape[0], max_len)
+    outs = []
+    for t in range(toks.shape[1]):
+        lg, cache = decode_step(params, model_cfg, cache, toks[:, t:t + 1],
+                                jnp.asarray(t, jnp.int32))
+        outs.append(lg)
+    return jnp.concatenate(outs, axis=1)
+
+
+class TestLMDecode:
+    def test_dense_lm_decode_matches_forward(self, key):
+        cfg = tf.LMConfig(name="t", n_layers=2, d_model=32, n_heads=4,
+                          n_kv_heads=2, d_ff=64, vocab=64,
+                          dtype=jnp.float32, remat=False)
+        params, _ = tf.init_lm(key, cfg)
+        toks = jax.random.randint(jax.random.fold_in(key, 1), (2, 10), 0, 64)
+        logits_train, _ = tf.forward(params, cfg, toks)
+        logits_dec = _decode_all(cfg, params, toks, 10,
+                                 (tf.init_cache, tf.decode_step))
+        np.testing.assert_allclose(np.asarray(logits_dec),
+                                   np.asarray(logits_train),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_windowed_lm_decode_matches_forward(self, key):
+        """Ring-buffer decode == train forward with the same window mask."""
+        cfg = tf.LMConfig(name="t", n_layers=3, d_model=32, n_heads=4,
+                          n_kv_heads=4, d_ff=64, vocab=64, window=4,
+                          window_pattern=2, dtype=jnp.float32, remat=False)
+        params, _ = tf.init_lm(key, cfg)
+        toks = jax.random.randint(jax.random.fold_in(key, 1), (1, 12), 0, 64)
+        logits_train, _ = tf.forward(params, cfg, toks)
+        logits_dec = _decode_all(cfg, params, toks, 12,
+                                 (tf.init_cache, tf.decode_step))
+        np.testing.assert_allclose(np.asarray(logits_dec),
+                                   np.asarray(logits_train),
+                                   rtol=3e-3, atol=3e-3)
+
+    def test_prefill_then_decode(self, key):
+        cfg = tf.LMConfig(name="t", n_layers=2, d_model=32, n_heads=4,
+                          n_kv_heads=2, d_ff=64, vocab=64,
+                          dtype=jnp.float32, remat=False)
+        params, _ = tf.init_lm(key, cfg)
+        toks = jax.random.randint(jax.random.fold_in(key, 1), (1, 9), 0, 64)
+        # prefill on the first 8, then decode token 9 and compare to the
+        # all-at-once forward
+        logits_pre, cache, t = tf.prefill(params, cfg, toks[:, :8], 16)
+        lg_step, _ = tf.decode_step(params, cfg, cache, toks[:, 8:9], t + 1)
+        logits_full, _ = tf.forward(params, cfg, toks)
+        np.testing.assert_allclose(np.asarray(lg_step[:, 0]),
+                                   np.asarray(logits_full[:, -1]),
+                                   rtol=3e-3, atol=3e-3)
+
+
+class TestHybridDecode:
+    def test_hybrid_decode_matches_forward(self, key):
+        cfg = H.HybridConfig(name="t", n_layers=4, d_model=32, n_heads=4,
+                             n_kv_heads=2, d_ff=64, vocab=64, head_dim=8,
+                             d_state=4, window=4, n_meta_tokens=2,
+                             dtype=jnp.float32, remat=False)
+        params, _ = H.init_hybrid_lm(key, cfg)
+        toks = jax.random.randint(jax.random.fold_in(key, 1), (1, 6), 0, 64)
+        logits_train, _ = H.forward(params, cfg, toks)
+
+        # decode: first replay the meta tokens into the attention caches
+        cache = H.init_cache(cfg, 1, 6 + cfg.n_meta_tokens)
+        meta = params["head"]["meta_tokens"]
+        x_meta = jnp.broadcast_to(meta[None], (1,) + meta.shape)
+        # replay meta positions through the layer stack manually
+        from repro.models import layers as L
+        from repro.models import mamba as M
+        for t in range(cfg.n_meta_tokens):
+            x = x_meta[:, t:t + 1].astype(cfg.dtype)
+            for i in range(cfg.n_layers):
+                p = L.layer_slice(params["layers"], i)
+                h = L.rms_norm(x, p["ln1"])
+                local = cfg.layer_is_local(i)
+                acfg = cfg.attn_cfg(cfg.window if local else None,
+                                    cfg.n_meta_tokens if local else 0)
+                attn_y, kv = L.attention(
+                    p["attn"], h, jnp.zeros((1,), jnp.int32) + t, acfg,
+                    kv_cache=cache[i]["kv"], cache_index=jnp.asarray(t))
+                ssm_y, st = M.mamba_decode_step(p["mixer"], h,
+                                                cache[i]["ssm"], cfg.ssm)
+                mixed = 0.5 * (L.rms_norm(attn_y, p["norm_attn"]) +
+                               L.rms_norm(ssm_y, p["norm_ssm"]))
+                x = x + mixed
+                h2 = L.rms_norm(x, p["ln2"])
+                x = x + L.mlp(p["mlp"], h2,
+                              L.MLPConfig(cfg.d_model, cfg.d_ff, cfg.act))
+                cache[i] = {"kv": kv, "ssm": st}
+        outs = []
+        for t in range(6):
+            lg, cache = H.decode_step(params, cfg, cache, toks[:, t:t + 1],
+                                      jnp.asarray(cfg.n_meta_tokens + t))
+            outs.append(lg)
+        logits_dec = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(logits_dec),
+                                   np.asarray(logits_train),
+                                   rtol=5e-3, atol=5e-3)

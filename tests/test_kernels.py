@@ -1,0 +1,132 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp ref oracles,
+swept over shapes and dtypes, plus equivalence with the core (non-kernel)
+dithered backward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import int8 as int8lib
+from repro.core import nsd
+from repro.kernels.bsp_matmul.bsp_matmul import bsp_matmul, bsp_matmul_int8
+from repro.kernels.bsp_matmul.ref import bsp_matmul_int8_ref, bsp_matmul_ref
+from repro.kernels.nsd_quant.nsd_quant import nsd_quantize_blocked
+from repro.kernels.nsd_quant.ref import nsd_quantize_blocked_ref
+from repro.kernels.ops import dithered_backward_matmuls, nsd_quantize_kernel
+
+
+SHAPES = [(128, 128), (256, 512), (384, 128)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_nsd_kernel_vs_ref(key, shape, dtype):
+    x = (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+    delta = nsd.compute_delta(x, 2.0)
+    noise = nsd.dither_noise(key, shape, delta)
+    bm, bn = 128, 128
+    k_k, nnz_k = nsd_quantize_blocked(x, noise, delta, bm=bm, bn=bn)
+    k_r, nnz_r = nsd_quantize_blocked_ref(x, noise, delta, bm=bm, bn=bn)
+    np.testing.assert_array_equal(np.asarray(k_k), np.asarray(k_r))
+    np.testing.assert_array_equal(np.asarray(nnz_k), np.asarray(nnz_r))
+
+
+def test_nsd_kernel_vs_core(key):
+    """Same RNG key => kernel output bit-identical to repro.core.nsd."""
+    g = jax.random.normal(key, (256, 256), jnp.float32) * 0.01
+    k_q, delta, _ = nsd_quantize_kernel(g, key, 2.0, bm=128, bn=128)
+    k_core = nsd.nsd_indices(g, key, nsd.compute_delta(g, 2.0))
+    np.testing.assert_array_equal(np.asarray(k_q, dtype=np.int32),
+                                  np.asarray(k_core))
+
+
+def test_nsd_kernel_zero_delta(key):
+    x = jnp.zeros((128, 128))
+    k, nnz = nsd_quantize_blocked(x, jnp.zeros_like(x), jnp.zeros(()),
+                                  bm=128, bn=128)
+    assert int(jnp.sum(jnp.abs(k.astype(jnp.int32)))) == 0
+    assert int(jnp.sum(nnz)) == 0
+
+
+@pytest.mark.parametrize("mkn", [(128, 128, 128), (256, 384, 128),
+                                 (128, 256, 256)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_bsp_matmul_vs_ref(key, mkn, dtype):
+    M, K, N = mkn
+    k_q = jax.random.randint(key, (M, K), -4, 5, jnp.int32).astype(jnp.int8)
+    delta = jnp.float32(0.033)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (K, N), jnp.float32)
+    b = b.astype(dtype)
+    mask = jax.random.bernoulli(
+        jax.random.fold_in(key, 2), 0.6, (M // 128, K // 128)
+    ).astype(jnp.int32)
+    out_k = bsp_matmul(k_q, delta, b, mask)
+    out_r = bsp_matmul_ref(k_q, delta, b, mask)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=2e-2, atol=1e-2)
+
+
+def test_bsp_matmul_skips_tiles(key):
+    """A masked-off tile contributes nothing even if its data is nonzero."""
+    M = K = N = 256
+    k_q = jnp.ones((M, K), jnp.int8)
+    b = jnp.ones((K, N), jnp.float32)
+    mask = jnp.asarray([[1, 0], [0, 0]], jnp.int32)
+    out = bsp_matmul(k_q, jnp.float32(1.0), b, mask)
+    # row block 0: only first K-tile active -> 128; row block 1: all skipped
+    np.testing.assert_allclose(np.asarray(out[:128]), 128.0)
+    np.testing.assert_allclose(np.asarray(out[128:]), 0.0)
+
+
+@pytest.mark.parametrize("mkn", [(128, 128, 128), (256, 128, 384)])
+def test_bsp_matmul_int8_vs_ref(key, mkn):
+    M, K, N = mkn
+    k_q = jax.random.randint(key, (M, K), -8, 9, jnp.int32).astype(jnp.int8)
+    b_q = jax.random.randint(jax.random.fold_in(key, 1), (K, N), -127, 128,
+                             jnp.int32).astype(jnp.int8)
+    scale = jnp.float32(1.7e-3)
+    mask = jnp.ones((M // 128, K // 128), jnp.int32)
+    out_k = bsp_matmul_int8(k_q, b_q, scale, mask)
+    out_r = bsp_matmul_int8_ref(k_q, b_q, scale, mask)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-5)
+
+
+class TestFullBackward:
+    def test_matches_core_dithered_semantics(self, key):
+        T, K, N = 256, 128, 256
+        g = jax.random.normal(key, (T, N), jnp.float32) * 0.01
+        x = jax.random.normal(jax.random.fold_in(key, 1), (T, K))
+        w = jax.random.normal(jax.random.fold_in(key, 2), (K, N)) * 0.1
+        dx, dw = dithered_backward_matmuls(g, x, w, key, 2.0,
+                                           int8_operands=False)
+        gq = nsd.nsd_quantize(g, key, 2.0)
+        np.testing.assert_allclose(np.asarray(dx), np.asarray(gq @ w.T),
+                                   rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(dw), np.asarray(x.T @ gq),
+                                   rtol=1e-3, atol=1e-4)
+
+    def test_int8_operand_path_error_small(self, key):
+        T, K, N = 256, 128, 256
+        g = jax.random.normal(key, (T, N), jnp.float32) * 0.01
+        x = jax.random.normal(jax.random.fold_in(key, 1), (T, K))
+        w = jax.random.normal(jax.random.fold_in(key, 2), (K, N)) * 0.1
+        dx8, dw8 = dithered_backward_matmuls(g, x, w, key, 2.0,
+                                             int8_operands=True)
+        gq = nsd.nsd_quantize(g, key, 2.0)
+        rel_dx = float(jnp.linalg.norm(dx8 - gq @ w.T)
+                       / (jnp.linalg.norm(gq @ w.T) + 1e-12))
+        rel_dw = float(jnp.linalg.norm(dw8 - x.T @ gq)
+                       / (jnp.linalg.norm(x.T @ gq) + 1e-12))
+        assert rel_dx < 0.03 and rel_dw < 0.03, (rel_dx, rel_dw)
+
+    def test_high_sparsity_skips_most_tiles(self, key):
+        g = jax.random.normal(key, (512, 512), jnp.float32) * 0.01
+        # NOTE: the dither key must be independent of the data key, else the
+        # noise correlates with the signal and sparsity drops (a real
+        # pitfall this test documents)
+        qkey = jax.random.fold_in(key, 1234)
+        k_q, delta, nnz = nsd_quantize_kernel(g, qkey, 16.0, bm=128, bn=128)
+        sparsity = float(jnp.mean(k_q == 0))
+        assert sparsity > 0.93, sparsity

@@ -1,0 +1,116 @@
+"""The paper's core claims about NSD (eqs. 4-6, fig. 1-2) as tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import nsd
+
+
+class TestUnbiasedness:
+    def test_mean_error_goes_to_zero(self, key):
+        """E[eps] = 0 (paper eq. 5): the MC mean of x~ converges to x."""
+        x = jax.random.normal(key, (512,), jnp.float32)
+        n_draws = 4000
+        keys = jax.random.split(jax.random.fold_in(key, 1), n_draws)
+        qs = jax.vmap(lambda k: nsd.nsd_quantize(x, k, 2.0))(keys)
+        bias = jnp.mean(qs, axis=0) - x
+        delta = nsd.compute_delta(x, 2.0)
+        # std of the MC mean is <= (delta/2)/sqrt(n); allow 5 sigma
+        tol = 5 * float(delta) / 2 / np.sqrt(n_draws)
+        assert float(jnp.max(jnp.abs(bias))) < 5 * tol
+        assert abs(float(jnp.mean(bias))) < tol
+
+    def test_variance_bound(self, key):
+        """E[eps^2] < Delta^2/4 (paper eq. 6)."""
+        x = jax.random.normal(key, (512,), jnp.float32)
+        for s in (1.0, 2.0, 4.0):
+            delta = nsd.compute_delta(x, s)
+            keys = jax.random.split(jax.random.fold_in(key, 2), 2000)
+            qs = jax.vmap(lambda k: nsd.nsd_quantize(x, k, s))(keys)
+            var = jnp.mean(jnp.square(qs - x))
+            assert float(var) < float(delta) ** 2 / 4 * 1.05, s
+
+
+class TestSparsity:
+    def test_sparsity_increases_with_s(self, key):
+        """Paper fig. 2: P(0) grows with the scale factor."""
+        x = jax.random.normal(key, (4096,), jnp.float32)
+        sparsities = []
+        for s in (0.5, 1.0, 2.0, 4.0, 8.0):
+            q = nsd.nsd_quantize(x, jax.random.fold_in(key, 3), s)
+            sparsities.append(float(jnp.mean(q == 0)))
+        assert all(b >= a - 0.02 for a, b in zip(sparsities, sparsities[1:]))
+        assert sparsities[-1] > 0.9  # s=8 on a gaussian is very sparse
+
+    def test_matches_theoretical_gaussian_sparsity(self, key):
+        """Measured sparsity ~ convolution integral of fig. 2 (MC version)."""
+        x = jax.random.normal(key, (100_000,), jnp.float32)
+        for s in (1.0, 2.0, 4.0):
+            q = nsd.nsd_quantize(x, jax.random.fold_in(key, 4), s)
+            measured = float(jnp.mean(q == 0))
+            theory = nsd.expected_sparsity_gaussian(s)
+            assert abs(measured - theory) < 0.02, (s, measured, theory)
+
+
+class TestBitwidth:
+    def test_nonzeros_fit_8_bits(self, key):
+        """Paper fig. 6b: worst-case bit-width of non-zeros <= 8."""
+        x = jax.random.normal(key, (8192,), jnp.float32) * 3.0
+        for s in (1.0, 2.0):
+            q = nsd.nsd_quantize_int8(x, jax.random.fold_in(key, 5), s)
+            stats = nsd.quant_stats(q.k.astype(jnp.int32), q.delta)
+            assert float(stats.max_bitwidth) <= 8.0
+
+    def test_int8_roundtrip_exact(self, key):
+        """Quantized values are exactly representable as k * Delta."""
+        x = jax.random.normal(key, (1024,), jnp.float32)
+        k1 = jax.random.fold_in(key, 6)
+        q = nsd.nsd_quantize_int8(x, k1, 2.0)
+        dense = nsd.nsd_quantize(x, k1, 2.0)
+        np.testing.assert_allclose(np.asarray(q.dequantize()),
+                                   np.asarray(dense), rtol=0, atol=0)
+
+
+class TestEdgeCases:
+    def test_zero_tensor(self, key):
+        q = nsd.nsd_quantize(jnp.zeros((64,)), key, 2.0)
+        assert float(jnp.max(jnp.abs(q))) == 0.0
+
+    def test_constant_tensor(self, key):
+        # std = 0 -> delta = 0 -> passthrough-to-zero guard, no NaN
+        q = nsd.nsd_quantize(jnp.full((64,), 3.14), key, 2.0)
+        assert bool(jnp.all(jnp.isfinite(q)))
+
+    def test_bf16_input(self, key):
+        x = jax.random.normal(key, (256,), jnp.bfloat16)
+        q = nsd.nsd_quantize(x, key, 2.0)
+        assert q.dtype == jnp.bfloat16
+        assert bool(jnp.all(jnp.isfinite(q.astype(jnp.float32))))
+
+
+@settings(max_examples=25, deadline=None)
+@given(s=st.floats(0.5, 8.0), scale=st.floats(1e-3, 1e3),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_quantized_values_on_grid(s, scale, seed):
+    """Every output is an integer multiple of Delta (within f32 eps)."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (256,), jnp.float32) * scale
+    delta = nsd.compute_delta(x, s)
+    k = nsd.nsd_indices(x, jax.random.fold_in(key, 1), delta)
+    q = k.astype(jnp.float32) * delta
+    ratio = np.asarray(q) / max(float(delta), 1e-30)
+    np.testing.assert_allclose(ratio, np.round(ratio), atol=1e-3)
+    assert int(jnp.max(jnp.abs(k))) <= 127
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), s=st.floats(1.0, 4.0))
+def test_property_error_bounded_by_delta(seed, s):
+    """|x~ - x| <= Delta (pointwise worst case of NSD)."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (256,), jnp.float32)
+    delta = float(nsd.compute_delta(x, s))
+    q = nsd.nsd_quantize(x, jax.random.fold_in(key, 1), s)
+    assert float(jnp.max(jnp.abs(q - x))) <= delta * 1.001

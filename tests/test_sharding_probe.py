@@ -1,0 +1,127 @@
+"""Sharding rules, the pre-activation-gradient probe, int8 fwd, and the
+serving engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec
+
+from repro.core import int8 as int8lib
+from repro.core import probe
+from repro.launch.mesh import host_device_mesh
+from repro.parallel import axes as axlib
+
+
+class TestRules:
+    def _rules(self):
+        mesh = host_device_mesh(n_model=1)  # 1 device: every axis size 1
+        return axlib.tp_dp_rules(mesh)
+
+    def test_divisibility_fallback(self):
+        mesh = host_device_mesh(n_model=1)
+        rules = axlib.Rules({"heads": "model"}, mesh)
+        # axis of size 1 -> no sharding
+        assert rules.pspec(("heads",), (40,)) == PartitionSpec(None)
+
+    def test_pspec_no_duplicate_axes(self):
+        mesh = host_device_mesh(n_model=1)
+        rules = axlib.Rules({"a": "data", "b": "data"}, mesh)
+        spec = rules.pspec(("a", "b"), (8, 8))
+        # one mesh axis must not shard two dims
+        used = [s for s in spec if s is not None]
+        assert len(used) == len(set(used))
+
+    def test_rank_mismatch_replicates(self):
+        mesh = host_device_mesh(n_model=1)
+        rules = axlib.tp_dp_rules(mesh)
+        sh = axlib.spec_tree_to_shardings(
+            {"w": ("embed", "mlp")}, rules, {"w": jnp.zeros(())})
+        assert sh["w"].spec == PartitionSpec()
+
+    def test_shard_act_noop_without_rules(self):
+        x = jnp.ones((4, 4))
+        y = axlib.shard_act(x, ("batch", "seq"))
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestProbe:
+    def test_tap_gives_exact_preactivation_grad(self, key):
+        """d(loss)/d(tap) == delta_z computed by hand."""
+        w1 = jax.random.normal(key, (8, 16)) * 0.3
+        w2 = jax.random.normal(jax.random.fold_in(key, 1), (16, 4)) * 0.3
+        x = jax.random.normal(jax.random.fold_in(key, 2), (5, 8))
+
+        def loss_fn(params, taps=None):
+            z1 = probe.tap(x @ params["w1"], taps, "z1")
+            h = jax.nn.relu(z1)
+            z2 = h @ params["w2"]
+            return jnp.sum(z2 ** 2)
+
+        taps = probe.make_taps({"z1": (5, 16)})
+        g = probe.grad_wrt_taps(lambda p, taps: loss_fn(p, taps),
+                                taps, {"w1": w1, "w2": w2})
+        # hand-computed: dL/dz1 = (dL/dh) * relu'(z1); dL/dh = 2 z2 w2^T
+        z1 = x @ w1
+        h = jax.nn.relu(z1)
+        z2 = h @ w2
+        dz1 = (2 * z2 @ w2.T) * (z1 > 0)
+        np.testing.assert_allclose(np.asarray(g["z1"]), np.asarray(dz1),
+                                   rtol=1e-5)
+
+    def test_layer_nsd_stats(self, key):
+        g = jax.random.normal(key, (64, 64)) * 0.01
+        st = probe.layer_nsd_stats(g, key, 2.0)
+        assert 0.3 < float(st.sparsity) < 0.9
+        assert float(st.max_bitwidth) <= 8
+
+
+class TestInt8Forward:
+    def test_quantize_bounds(self, key):
+        x = jax.random.normal(key, (256,)) * 10
+        q = int8lib.quantize_int8(x)
+        assert int(jnp.max(jnp.abs(q.q.astype(jnp.int32)))) <= 127
+        rel = float(jnp.max(jnp.abs(q.q * q.scale - x)))
+        assert rel <= float(q.scale) * 0.5 + 1e-6
+
+    def test_int8_matmul_close(self, key):
+        x = jax.random.normal(key, (32, 64))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (64, 16))
+        y = int8lib.int8_matmul(int8lib.quantize_int8(x),
+                                int8lib.quantize_int8(w))
+        rel = float(jnp.linalg.norm(y - x @ w) / jnp.linalg.norm(x @ w))
+        assert rel < 0.03, rel
+
+    def test_ste_grads_exact(self, key):
+        x = jax.random.normal(key, (8, 16))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (16, 4))
+        g = jax.grad(lambda w: jnp.sum(int8lib.int8_dense_ste(x, w)))(w)
+        g_ref = jax.grad(lambda w: jnp.sum(x @ w))(w)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref),
+                                   rtol=1e-5)
+
+    def test_range_batchnorm(self, key):
+        x = jax.random.normal(key, (128, 16)) * 3 + 1
+        y = int8lib.range_batchnorm(x, jnp.ones((16,)), jnp.zeros((16,)))
+        assert abs(float(jnp.mean(y))) < 0.05
+        # range-normalized std is approximately 1 for gaussian data
+        assert 0.5 < float(jnp.std(y)) < 1.5
+
+
+class TestServeEngine:
+    def test_engine_serves_batch(self, key):
+        from repro.configs import get_smoke_model
+        from repro.serve import Engine, Request, ServeConfig
+
+        model = get_smoke_model("gemma-2b")
+        params, _ = model.init(key)
+        eng = Engine(model, params, ServeConfig(max_batch=4, max_len=64))
+        rng = np.random.default_rng(0)
+        for uid in range(3):
+            eng.submit(Request(uid=uid,
+                               prompt=rng.integers(0, 100, size=3),
+                               max_new_tokens=4))
+        done = eng.run(max_ticks=16)
+        assert len(done) == 3
+        assert all(len(t) == 4 for t in done.values())
+        vocab = model.cfg.vocab
+        assert all(0 <= tok < vocab for t in done.values() for tok in t)
