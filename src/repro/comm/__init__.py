@@ -1,0 +1,53 @@
+"""repro.comm — NSD gradients as a first-class wire format.
+
+wireformat.py   packed (deltas + bitmap + non-zero int8 levels) layout,
+                jnp pack/unpack references, measured wire bytes
+ring.py         compressed ring all-reduce (re-dithered partial sums);
+                shard_map real path + single-device simulation
+compression.py  per-leaf CommPolicy (dense/int8/nsd/topk_ef) + error
+                feedback residuals
+telemetry.py    bytes-on-wire counters (via repro.core.stats) + roofline
+                pricing of measured wire bytes
+"""
+from repro.comm.compression import (
+    DENSE,
+    MODE_DENSE,
+    MODE_INT8,
+    MODE_NSD,
+    MODE_TOPK_EF,
+    CommPolicy,
+    ErrorFeedbackState,
+    compress_leaf,
+    compress_tree,
+    init_comm_state,
+    topk_error_feedback,
+)
+from repro.comm.ring import (
+    RingConfig,
+    RingTelemetry,
+    allreduce_compressed,
+    make_ring_allreduce,
+    ring_allreduce_nsd,
+)
+from repro.comm.wireformat import (
+    DEFAULT_CHUNK,
+    PackedNSD,
+    pack_bitmap,
+    pack_indices,
+    pack_nsd,
+    unpack_bitmap,
+    unpack_nsd,
+    wire_bytes_dense,
+)
+from repro.comm import telemetry
+
+__all__ = [
+    "DENSE", "MODE_DENSE", "MODE_INT8", "MODE_NSD", "MODE_TOPK_EF",
+    "CommPolicy", "ErrorFeedbackState", "compress_leaf", "compress_tree",
+    "init_comm_state", "topk_error_feedback",
+    "RingConfig", "RingTelemetry", "allreduce_compressed",
+    "make_ring_allreduce", "ring_allreduce_nsd",
+    "DEFAULT_CHUNK", "PackedNSD", "pack_bitmap", "pack_indices", "pack_nsd",
+    "unpack_bitmap", "unpack_nsd", "wire_bytes_dense",
+    "telemetry",
+]

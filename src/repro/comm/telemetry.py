@@ -1,0 +1,67 @@
+"""Comm-side telemetry: bytes-on-wire counters + roofline pricing.
+
+Thin facade over the process-local sink in ``repro.core.stats`` (the same
+io_callback machinery the dither sparsity telemetry uses, so one ``reset``
+clears both) plus the bridge to ``repro.launch`` cost accounting: measured
+wire bytes -> seconds on the TPU v5e ICI, comparable against the
+compute/memory roofline terms.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax
+
+from repro.core import stats as statslib
+
+
+class CommTelemetry(NamedTuple):
+    """Aggregated view of one tag's exchanges."""
+
+    wire_bytes: float
+    dense_bytes: float
+    n_records: int
+
+    @property
+    def ratio(self) -> float:
+        return (self.wire_bytes / self.dense_bytes
+                if self.dense_bytes else float("nan"))
+
+
+def emit(tag: str, wire_bytes: jax.Array, dense_bytes: jax.Array) -> None:
+    """Record one exchange's byte counts (callable from inside jit)."""
+    statslib.emit_comm(tag, wire_bytes, dense_bytes)
+
+
+def reset() -> None:
+    statslib.reset()
+
+
+def summary() -> Dict[str, CommTelemetry]:
+    return {
+        tag: CommTelemetry(wire_bytes=row["wire_bytes"],
+                           dense_bytes=row["dense_bytes"],
+                           n_records=row["n_records"])
+        for tag, row in statslib.comm_summary().items()
+    }
+
+
+def totals() -> CommTelemetry:
+    """All tags folded together."""
+    wire = dense = 0.0
+    n = 0
+    for t in summary().values():
+        wire += t.wire_bytes
+        dense += t.dense_bytes
+        n += t.n_records
+    return CommTelemetry(wire_bytes=wire, dense_bytes=dense, n_records=n)
+
+
+def wire_seconds(wire_bytes: float) -> float:
+    """Price measured wire bytes on the target interconnect.
+
+    Imported lazily: ``repro.launch`` is the deployment layer and must not
+    become an import-time dependency of the comm subsystem.
+    """
+    from repro.launch.costmodel import price_wire_bytes
+    return price_wire_bytes(wire_bytes)

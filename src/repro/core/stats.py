@@ -22,11 +22,15 @@ from repro.core.nsd import QuantStats
 _LOCK = threading.Lock()
 # tag -> list of (sparsity, bits, delta) rows
 _SINK: Dict[str, List[np.ndarray]] = defaultdict(list)
+# tag -> list of (wire_bytes, dense_bytes) rows — the comm-side counters
+# (bytes-on-wire of compressed gradient exchange; see repro.comm.telemetry)
+_COMM_SINK: Dict[str, List[np.ndarray]] = defaultdict(list)
 
 
 def reset() -> None:
     with _LOCK:
         _SINK.clear()
+        _COMM_SINK.clear()
 
 
 def _record(tag: str, row: np.ndarray) -> np.ndarray:
@@ -48,8 +52,15 @@ def emit(tag: str, stats: QuantStats) -> None:
     )
 
 
+def _drain() -> None:
+    """Block until in-flight io_callbacks have landed (readers call this:
+    emissions from a dispatched-but-unfinished step would otherwise race)."""
+    jax.effects_barrier()
+
+
 def rows(tag: str) -> np.ndarray:
     """(n, 3) array of [sparsity, bits, delta] records for a tag."""
+    _drain()
     with _LOCK:
         if not _SINK[tag]:
             return np.zeros((0, 3), np.float32)
@@ -57,6 +68,7 @@ def rows(tag: str) -> np.ndarray:
 
 
 def tags() -> List[str]:
+    _drain()
     with _LOCK:
         return sorted(_SINK.keys())
 
@@ -94,3 +106,57 @@ def overall_max_bits() -> float:
         return float("nan")
     cat = np.concatenate(all_rows, axis=0)
     return float(cat[:, 1].max())
+
+
+# ---------------------------------------------------------------------------
+# comm counters: bytes-on-wire of compressed gradient exchange
+# ---------------------------------------------------------------------------
+
+def _record_comm(tag: str, row: np.ndarray) -> np.ndarray:
+    with _LOCK:
+        _COMM_SINK[tag].append(np.asarray(row))
+    return np.zeros((), np.int32)
+
+
+def emit_comm(tag: str, wire_bytes: jax.Array, dense_bytes: jax.Array) -> None:
+    """Record one exchange's (wire, dense) byte counts from inside jit."""
+    row = jnp.stack([jnp.asarray(wire_bytes, jnp.float32),
+                     jnp.asarray(dense_bytes, jnp.float32)])
+    jax.experimental.io_callback(
+        lambda r, _tag=tag: _record_comm(_tag, r),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        row,
+        ordered=False,
+    )
+
+
+def comm_rows(tag: str) -> np.ndarray:
+    """(n, 2) array of [wire_bytes, dense_bytes] records for a tag."""
+    _drain()
+    with _LOCK:
+        if not _COMM_SINK[tag]:
+            return np.zeros((0, 2), np.float32)
+        return np.stack(_COMM_SINK[tag])
+
+
+def comm_tags() -> List[str]:
+    _drain()
+    with _LOCK:
+        return sorted(_COMM_SINK.keys())
+
+
+def comm_summary() -> Dict[str, Dict[str, float]]:
+    """Per-tag total wire/dense bytes and the achieved compression ratio."""
+    out = {}
+    for tag in comm_tags():
+        r = comm_rows(tag)
+        if len(r) == 0:
+            continue
+        wire, dense = float(r[:, 0].sum()), float(r[:, 1].sum())
+        out[tag] = {
+            "wire_bytes": wire,
+            "dense_bytes": dense,
+            "ratio": wire / dense if dense else float("nan"),
+            "n_records": int(len(r)),
+        }
+    return out

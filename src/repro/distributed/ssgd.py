@@ -7,21 +7,33 @@ ops) at constant final accuracy. We reproduce the experiment by simulating
 N nodes: per-node sub-batches, per-node dither keys (folded from the worker
 index), gradient averaging, shared parameters.
 
-Also provides the communication-side analogues for real clusters
-(int8-quantized and top-k+error-feedback gradient reduction).
+The communication side lives in ``repro.comm``: ``make_ssgd_step`` takes an
+optional ``CommPolicy`` that routes each node's gradient through the packed
+NSD wire format (or int8 / top-k+EF) before the server-side reduce, with
+measured bytes-on-wire telemetry. ``int8_allreduce_sim`` and the re-exported
+``topk_error_feedback`` / ``ErrorFeedbackState`` (now implemented in
+``repro.comm.compression``) remain for the single-tensor analogues.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.comm.compression import (CommPolicy, ErrorFeedbackState,
+                                    compress_leaf, topk_error_feedback)
 from repro.core import nsd
-from repro.core.policy import DitherCtx, DitherPolicy
+from repro.core import stats as statslib
+from repro.core.policy import DitherCtx, DitherPolicy, name_salt
 from repro.models.api import Model
 from repro.optim import OptConfig, apply_updates, init_opt_state
+from repro.utils.pytree import tree_map_with_path_str
+
+__all__ = ["SSGDConfig", "ErrorFeedbackState", "int8_allreduce_sim",
+           "make_ssgd_step", "shard_batch", "topk_error_feedback"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,16 +47,23 @@ class SSGDConfig:
             return self.s_base
         if self.s_schedule == "linear":
             return self.s_base * self.n_nodes
-        return self.s_base * float(jnp.sqrt(self.n_nodes))
+        # static hyperparameter math stays on the host: no device array here
+        return self.s_base * math.sqrt(self.n_nodes)
 
 
 def make_ssgd_step(model: Model, opt_cfg: OptConfig, dcfg: SSGDConfig,
-                   base_policy: DitherPolicy):
+                   base_policy: DitherPolicy,
+                   comm_policy: Optional[CommPolicy] = None):
     """One SSGD step: N per-node dithered grads -> server average -> update.
 
     The batch leaves must have a leading (n_nodes, per_node_batch, ...) axis.
     Per-node dither keys are folded from (step, worker) so noise is i.i.d.
     across nodes — the cancellation the paper relies on.
+
+    With ``comm_policy`` the node->server hop goes through the wire: each
+    node's gradient leaves are compressed per the policy (per-node keys, so
+    the comm-side NSD noise also cancels in the average) and the step's
+    metrics gain ``comm_wire_bytes`` / ``comm_dense_bytes``.
     """
     policy = base_policy.replace(s=dcfg.s_for_n())
 
@@ -54,17 +73,62 @@ def make_ssgd_step(model: Model, opt_cfg: OptConfig, dcfg: SSGDConfig,
             lambda p: model.loss(p, node_batch, ctx=ctx))(params)
         return loss, grads
 
+    def compress_node_grads(grads, base_key, step):
+        """Per-node, per-leaf wire compression before the server reduce.
+
+        Reuses ``repro.comm.compression.compress_leaf`` (vmapped over the
+        node axis) so wire-byte accounting has a single source of truth.
+        EF is not available here (per-node residual state lives with the
+        node, not the step), so topk_ef leaves fall back to NSD packing.
+        """
+        totals = {"wire": jnp.float32(0.0), "dense": jnp.float32(0.0)}
+
+        def leaf(name: str, g_nodes: jax.Array) -> jax.Array:
+            size = int(g_nodes.size) // dcfg.n_nodes
+            mode = comm_policy.mode_for(name, size)
+            if mode == "topk_ef":
+                mode = "nsd"
+            dense_bytes = jnp.float32(4 * size * dcfg.n_nodes)
+            totals["dense"] = totals["dense"] + dense_bytes
+            if mode == "dense":
+                totals["wire"] = totals["wire"] + dense_bytes
+                return g_nodes
+            k0 = jax.random.fold_in(
+                jax.random.fold_in(base_key, step), name_salt(name))
+
+            def one(g, worker):
+                kw = jax.random.fold_in(k0, worker)
+                g_hat, wire, _ = compress_leaf(g, kw, mode, comm_policy)
+                return g_hat, wire.astype(jnp.float32)
+
+            g_hat, wires = jax.vmap(one)(g_nodes,
+                                         jnp.arange(dcfg.n_nodes))
+            totals["wire"] = totals["wire"] + jnp.sum(wires)
+            return g_hat
+
+        grads = tree_map_with_path_str(leaf, grads)
+        return grads, totals
+
     def ssgd_step(params, opt_state, sharded_batch, base_key):
         step = opt_state["step"]
         workers = jnp.arange(dcfg.n_nodes)
         losses, grads = jax.vmap(
             lambda b, w: node_grad(params, b, base_key, step, w),
             in_axes=(0, 0))(sharded_batch, workers)
+        comm_metrics = {}
+        if comm_policy is not None:
+            grads, totals = compress_node_grads(grads, base_key, step)
+            comm_metrics = {"comm_wire_bytes": totals["wire"],
+                            "comm_dense_bytes": totals["dense"]}
+            if comm_policy.collect_stats:
+                statslib.emit_comm(comm_policy.stats_tag, totals["wire"],
+                                   totals["dense"])
         # parameter server: average the (already noisy) node gradients
         grads = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
         params, opt_state, metrics = apply_updates(
             params, grads, opt_state, opt_cfg)
         metrics["loss"] = jnp.mean(losses)
+        metrics.update(comm_metrics)
         return params, opt_state, metrics
 
     return jax.jit(ssgd_step), policy
@@ -81,7 +145,8 @@ def shard_batch(batch: Dict[str, jax.Array], n_nodes: int
 
 
 # ---------------------------------------------------------------------------
-# gradient compression for the wire (real-cluster comm analogues)
+# single-tensor comm analogues (kept for tests/benchmarks; the pytree-level
+# machinery lives in repro.comm)
 # ---------------------------------------------------------------------------
 
 def int8_allreduce_sim(grads_per_node: List, key: jax.Array):
@@ -95,28 +160,3 @@ def int8_allreduce_sim(grads_per_node: List, key: jax.Array):
         deq = q.dequantize()
         acc = deq if acc is None else acc + deq
     return acc / n
-
-
-@dataclasses.dataclass
-class ErrorFeedbackState:
-    residual: jax.Array
-
-
-def topk_error_feedback(g: jax.Array, state: Optional[ErrorFeedbackState],
-                        k_frac: float = 0.01
-                        ) -> Tuple[jax.Array, ErrorFeedbackState]:
-    """Top-k sparsification with error feedback (memory of dropped mass).
-
-    Unbiasedness is restored asymptotically by the residual accumulator;
-    composes with dithered backprop (which controls the *compute* side).
-    """
-    flat = g.reshape(-1)
-    if state is not None:
-        flat = flat + state.residual
-    k = max(1, int(k_frac * flat.size))
-    mag = jnp.abs(flat)
-    thresh = jax.lax.top_k(mag, k)[0][-1]
-    mask = mag >= thresh
-    sent = jnp.where(mask, flat, 0)
-    residual = flat - sent
-    return sent.reshape(g.shape), ErrorFeedbackState(residual=residual)

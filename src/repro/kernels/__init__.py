@@ -2,10 +2,13 @@
 
 nsd_quant/   fused NSD quantize -> (int8 k, tile-occupancy map)
 bsp_matmul/  tile-skipping quantized matmuls (dequant + full-int8 variants)
+pack/        occupancy-bitmap pack/unpack for the comm wire format
 ops.py       jit'd high-level wrappers (full dithered backward of a dense layer)
 """
 from repro.kernels.nsd_quant.nsd_quant import nsd_quantize_blocked
 from repro.kernels.bsp_matmul.bsp_matmul import bsp_matmul, bsp_matmul_int8
+from repro.kernels.pack.pack import bitmap_pack_blocked, bitmap_unpack_blocked
 from repro.kernels import ops
 
-__all__ = ["nsd_quantize_blocked", "bsp_matmul", "bsp_matmul_int8", "ops"]
+__all__ = ["nsd_quantize_blocked", "bsp_matmul", "bsp_matmul_int8",
+           "bitmap_pack_blocked", "bitmap_unpack_blocked", "ops"]

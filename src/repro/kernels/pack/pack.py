@@ -1,0 +1,89 @@
+"""Occupancy-bitmap pack/unpack kernels (Pallas, TPU target, interpret-validated).
+
+The wire format of ``repro.comm.wireformat`` sends one occupancy bit per
+gradient element plus the non-zero int8 levels. Producing that bitmap is a
+pure bandwidth problem — one pass over the int8 index tensor the fused NSD
+kernel already emits — so it belongs in the same kernel family:
+
+    pack:   per (bm, bn) VMEM tile of int8 k ->
+                bitmap tile (bm, bn/8) uint8 (LSB-first within each byte)
+                nnz       (int32)  per-tile non-zero count (wire accounting)
+    unpack: bitmap tile -> int8 0/1 occupancy mask tile (bm, bn)
+
+Bit order matches ``wireformat.pack_bitmap`` (bit j of byte b is element
+8*b + j of the row). The lane-dimension reshape used to gather 8 lanes per
+byte compiles on the interpret path only; the TPU-native layout (sublane
+rotate + OR-reduce) is a ROADMAP follow-up. Tiles are (8m, 128)-aligned as
+for the other kernels; bn must additionally be a multiple of 8 (always true
+for 128-lane tiles).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+def _pack_kernel(k_ref, bitmap_ref, nnz_ref):
+    k = k_ref[...]
+    bm, bn = k.shape
+    bits = (k != 0).astype(jnp.int32)
+    b8 = bits.reshape(bm, bn // 8, 8)
+    # bit weights 1,2,4,... via iota (a captured constant would not lower)
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (bm, bn // 8, 8), 2)
+    bitmap_ref[...] = jnp.sum(b8 << shifts, axis=-1).astype(jnp.uint8)
+    nnz_ref[0, 0] = jnp.sum(bits)
+
+
+def _unpack_kernel(bitmap_ref, mask_ref):
+    b = bitmap_ref[...].astype(jnp.int32)
+    bm, bnb = b.shape
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (bm, bnb, 8), 2)
+    bits = (b[:, :, None] >> shifts) & 1
+    mask_ref[...] = bits.reshape(bm, bnb * 8).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def bitmap_pack_blocked(k: jax.Array, *, bm: int = 128, bn: int = 128,
+                        interpret: bool = True):
+    """k: (M, N) int8 with M % bm == 0, N % bn == 0, bn % 8 == 0.
+
+    Returns (bitmap uint8 (M, N//8), nnz int32 (M//bm, N//bn)).
+    """
+    M, N = k.shape
+    assert M % bm == 0 and N % bn == 0 and bn % 8 == 0, (k.shape, bm, bn)
+    grid = (M // bm, N // bn)
+    bitmap, nnz = pl.pallas_call(
+        _pack_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bm, bn // 8), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, N // 8), jnp.uint8),
+            jax.ShapeDtypeStruct((M // bm, N // bn), jnp.int32),
+        ],
+        interpret=interpret,
+    )(k)
+    return bitmap, nnz
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def bitmap_unpack_blocked(bitmap: jax.Array, *, bm: int = 128, bn: int = 128,
+                          interpret: bool = True) -> jax.Array:
+    """bitmap: (M, N//8) uint8 -> int8 0/1 occupancy mask (M, N)."""
+    M, NB = bitmap.shape
+    N = NB * 8
+    assert M % bm == 0 and N % bn == 0 and bn % 8 == 0, (bitmap.shape, bm, bn)
+    grid = (M // bm, N // bn)
+    return pl.pallas_call(
+        _unpack_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn // 8), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int8),
+        interpret=interpret,
+    )(bitmap)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the bitmap pack/unpack kernels.
+
+Semantics are shared with ``repro.comm.wireformat.pack_bitmap`` /
+``unpack_bitmap`` (the wire-format reference); these wrappers only add the
+blocked nnz map so kernel outputs compare exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.wireformat import pack_bitmap, unpack_bitmap
+
+
+def bitmap_pack_blocked_ref(k: jax.Array, *, bm: int = 128, bn: int = 128):
+    """Exact reference semantics of kernels.pack.bitmap_pack_blocked."""
+    M, N = k.shape
+    bitmap = pack_bitmap(k.reshape(M, N))
+    tiles = (k != 0).astype(jnp.int32).reshape(M // bm, bm, N // bn, bn)
+    nnz = jnp.sum(tiles, axis=(1, 3))
+    return bitmap, nnz
+
+
+def bitmap_unpack_blocked_ref(bitmap: jax.Array, *, bm: int = 128,
+                              bn: int = 128) -> jax.Array:
+    """Exact reference semantics of kernels.pack.bitmap_unpack_blocked."""
+    return unpack_bitmap(bitmap).astype(jnp.int8)

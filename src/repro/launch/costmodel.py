@@ -34,6 +34,26 @@ from repro.utils import get_logger
 log = get_logger("costmodel")
 
 
+def price_wire_bytes(wire_bytes: float, *, link_bw: float = rl.ICI_BW,
+                     n_links: int = 1) -> float:
+    """Seconds the measured comm-subsystem wire bytes occupy the interconnect.
+
+    ``wire_bytes`` is the *measured* total from ``repro.comm`` telemetry
+    (bitmap + non-zero levels + per-chunk deltas), not an HLO estimate — the
+    packed exchange never appears as a collective in HLO, so the parser in
+    ``repro.launch.roofline`` cannot see it. This is the pricing hook that
+    puts it on the same axis as the roofline's ``collective_s`` term.
+    """
+    return float(wire_bytes) / (link_bw * max(n_links, 1))
+
+
+def compression_speedup(wire_bytes: float, dense_bytes: float) -> float:
+    """How much interconnect time the packed exchange saves vs dense f32."""
+    if wire_bytes <= 0:
+        return float("inf")
+    return float(dense_bytes) / float(wire_bytes)
+
+
 def rebuild(model: model_api.Model, **overrides) -> model_api.Model:
     cfg = dataclasses.replace(model.cfg, **overrides)
     if model.family in ("dense", "moe", "vlm"):

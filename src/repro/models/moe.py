@@ -251,12 +251,12 @@ def moe_a2a(params: Params, x2d: jax.Array, cfg: MoEConfig,
         aux = jax.lax.pmean(aux, data_axes + (ep_axis,))
         return out, aux
 
-    out, aux = jax.shard_map(
+    out, aux = axlib.shard_map_compat(
         body, mesh=mesh,
         in_specs=(P(token_axes, None), P(None, None), P(ep_axis, None, None),
                   P(ep_axis, None, None), P(ep_axis, None, None), P()),
         out_specs=(P(token_axes, None), P()),
-        check_vma=False,
+        check=False,
     )(x2d, params["router"], params["w_gate"], params["w_up"],
       params["w_down"], key)
 

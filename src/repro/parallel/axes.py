@@ -23,6 +23,21 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 MeshAxes = Union[None, str, Tuple[str, ...]]
 
 
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check: bool = True):
+    """``shard_map`` across jax versions: the entry point moved from
+    ``jax.experimental.shard_map`` to ``jax.shard_map`` and the replication
+    check was renamed ``check_rep`` -> ``check_vma`` (at different releases,
+    so all four combinations exist in the wild)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    import inspect
+    params = inspect.signature(sm).parameters
+    check_kw = "check_vma" if "check_vma" in params else "check_rep"
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              **{check_kw: check})
+
+
 @dataclasses.dataclass
 class Rules:
     """logical axis name -> mesh axis (or tuple of axes, or None)."""

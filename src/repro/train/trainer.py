@@ -12,6 +12,8 @@ from typing import Any, Callable, Dict, Iterator, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.comm.compression import (CommPolicy, compress_tree,
+                                    init_comm_state)
 from repro.core.policy import DitherCtx, DitherPolicy
 from repro.models.api import Model
 from repro.optim import OptConfig, apply_updates, init_opt_state
@@ -36,12 +38,19 @@ class TrainerConfig:
 class Trainer:
     def __init__(self, model: Model, opt_cfg: OptConfig, tcfg: TrainerConfig,
                  policy: Optional[DitherPolicy] = None,
-                 eval_fn: Optional[Callable] = None):
+                 eval_fn: Optional[Callable] = None,
+                 comm_policy: Optional[CommPolicy] = None):
         self.model = model
         self.opt_cfg = opt_cfg
         self.tcfg = tcfg
         self.policy = policy
         self.eval_fn = eval_fn
+        # gradient wire path: accumulated grads go through the comm policy
+        # (what a data-parallel node would put on the wire each step).
+        # _comm_state holds the error-feedback residuals; it rides in the
+        # checkpoint tree so a preempted topk_ef run resumes losslessly.
+        self.comm_policy = comm_policy
+        self._comm_state: Optional[Dict[str, Any]] = None
         self.guard = PreemptionGuard(install=False)
         self.ckpt = (CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep_ckpts)
                      if tcfg.ckpt_every and tcfg.ckpt_dir else None)
@@ -49,7 +58,7 @@ class Trainer:
         self.history: list = []
 
     # one optimizer step with optional micro-batch gradient accumulation
-    def _step(self, params, opt_state, batches, base_key):
+    def _step(self, params, opt_state, batches, base_key, comm_state):
         step = opt_state["step"]
         ctx = None
         if self.policy is not None and self.policy.enabled:
@@ -88,17 +97,44 @@ class Trainer:
                                  params))
             (loss, grads), _ = jax.lax.scan(
                 acc_fn, zero, (jnp.arange(n), batches))
+        if self.comm_policy is not None:
+            comm_key = jax.random.fold_in(
+                jax.random.fold_in(base_key, 0xC033), step)
+            grads, comm_state, tele = compress_tree(
+                grads, comm_key, self.comm_policy, comm_state)
+            metrics_comm = {"comm_wire_bytes": tele["wire_bytes"],
+                            "comm_dense_bytes": tele["dense_bytes"]}
+        else:
+            metrics_comm = {}
         params, opt_state, metrics = apply_updates(
             params, grads, opt_state, self.opt_cfg)
         metrics["loss"] = loss
-        return params, opt_state, metrics
+        metrics.update(metrics_comm)
+        return params, opt_state, metrics, comm_state
+
+    def _init_comm_state(self, params) -> Dict[str, Any]:
+        return (init_comm_state(params, self.comm_policy)
+                if self.comm_policy is not None else {})
+
+    def _ckpt_tree(self, params, opt_state) -> Dict[str, Any]:
+        tree = {"params": params, "opt": opt_state}
+        if self._comm_state:
+            tree["comm"] = self._comm_state
+        return tree
 
     def restore_or_init(self, key: jax.Array):
         params, specs = self.model.init(key)
         opt_state = init_opt_state(params, self.opt_cfg)
+        self._comm_state = self._init_comm_state(params)
         if self.ckpt is not None and self.ckpt.latest_step() is not None:
-            state = self.ckpt.restore({"params": params, "opt": opt_state})
+            try:
+                state = self.ckpt.restore(self._ckpt_tree(params, opt_state))
+            except KeyError:
+                # checkpoint predates the comm subtree: residuals restart at 0
+                state = self.ckpt.restore({"params": params,
+                                           "opt": opt_state})
             params, opt_state = state["params"], state["opt"]
+            self._comm_state = state.get("comm", self._comm_state)
             log.info("restored checkpoint at step %d",
                      int(opt_state["step"]))
         return params, opt_state, specs
@@ -110,20 +146,24 @@ class Trainer:
         if params is None:
             params, opt_state, _ = self.restore_or_init(key)
         start = int(opt_state["step"])
+        if self._comm_state is None:  # caller passed params directly
+            self._comm_state = self._init_comm_state(params)
+        comm_state = self._comm_state
         t0 = time.time()
         for step in range(start, self.tcfg.total_steps):
             if self.guard.should_stop:
                 log.info("preemption: checkpointing at step %d and exiting",
                          step)
                 if self.ckpt is not None:
-                    self.ckpt.save(step, {"params": params, "opt": opt_state})
+                    self.ckpt.save(step, self._ckpt_tree(params, opt_state))
                     self.ckpt.wait()
                 break
             batch = next(batch_iter)
             if isinstance(batch, tuple):  # (step, batch) loaders
                 batch = batch[1]
-            params, opt_state, metrics = self._jit_step(
-                params, opt_state, batch, base_key)
+            params, opt_state, metrics, comm_state = self._jit_step(
+                params, opt_state, batch, base_key, comm_state)
+            self._comm_state = comm_state
             if self.tcfg.log_every and (step + 1) % self.tcfg.log_every == 0:
                 loss = float(metrics["loss"])
                 self.history.append({"step": step + 1, "loss": loss})
@@ -131,7 +171,7 @@ class Trainer:
                          time.time() - t0)
             if (self.ckpt is not None and self.tcfg.ckpt_every
                     and (step + 1) % self.tcfg.ckpt_every == 0):
-                self.ckpt.save(step + 1, {"params": params, "opt": opt_state})
+                self.ckpt.save(step + 1, self._ckpt_tree(params, opt_state))
         if self.ckpt is not None:
             self.ckpt.wait()
         return {"params": params, "opt_state": opt_state,

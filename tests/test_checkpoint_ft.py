@@ -81,8 +81,8 @@ RESHARD_SCRIPT = textwrap.dedent("""
     from repro.train import CheckpointManager
 
     base = sys.argv[1]
-    mesh8 = jax.make_mesh((8,), ("data",),
-                          axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch import make_mesh
+    mesh8 = make_mesh((8,), ("data",))
     tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
     sharded = jax.device_put(
         tree["w"], NamedSharding(mesh8, P("data", None)))
@@ -90,8 +90,7 @@ RESHARD_SCRIPT = textwrap.dedent("""
     mgr.save(3, {"w": sharded})
 
     # restore onto a DIFFERENT mesh (4 devices wide) — elastic downsize
-    mesh4 = jax.make_mesh((4, 2), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh4 = make_mesh((4, 2), ("data", "model"))
     target_sh = {"w": NamedSharding(mesh4, P("data", None))}
     out = mgr.restore({"w": jnp.zeros((8, 8))}, shardings=target_sh)
     np.testing.assert_array_equal(np.asarray(out["w"]),

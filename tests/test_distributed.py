@@ -24,17 +24,24 @@ def _tiny_lm():
 
 class TestSSGD:
     def test_noise_cancels_with_more_nodes(self, key):
-        """Variance of the server-side averaged gradient ~ 1/N (the paper's
-        cancellation argument), at FIXED s."""
+        """Variance of the server-side averaged gradient drops with N (the
+        paper's cancellation argument), at FIXED s and FIXED per-node batch.
+
+        Weak scaling is essential here: per-node Delta is s * std of the
+        per-node gradient, so shrinking sub-batches (strong scaling) RAISES
+        per-node Delta and the averaging cannot win — the paper's setup is
+        each node bringing its own data. The batch is held constant across
+        trials, so the trial-to-trial variance isolates the dither noise."""
         model = _tiny_lm()
         params, _ = model.init(key)
-        batch = {
+        full = {
             "tokens": jax.random.randint(key, (8, 16), 0, model.cfg.vocab),
             "labels": jax.random.randint(key, (8, 16), 0, model.cfg.vocab),
         }
         opt = OptConfig(lr=0.0, grad_clip=None)  # lr 0: inspect grads only
 
-        def avg_grad_var(n_nodes, n_trials=6):
+        def avg_grad_var(n_nodes, per_node=2, n_trials=6):
+            batch = {k: v[: n_nodes * per_node] for k, v in full.items()}
             dcfg = SSGDConfig(n_nodes=n_nodes, s_schedule="fixed", s_base=3.0)
             step_fn, _ = make_ssgd_step(model, opt, dcfg,
                                         DitherPolicy(variant="paper"))
@@ -51,9 +58,9 @@ class TestSSGD:
             return float(jnp.mean(jnp.var(stack, axis=0)))
 
         v1, v4 = avg_grad_var(1), avg_grad_var(4)
-        # each node sees 1/N of the batch, so per-node grads are noisier,
-        # but the dither component averages out; total variance must drop
-        assert v4 < v1, (v1, v4)
+        # per-node dither noise is i.i.d. (per-worker keys), so the server
+        # average cancels it; the margin is large (~10x), not statistical
+        assert v4 < v1 / 2, (v1, v4)
 
     def test_sparsity_grows_with_nodes(self, key):
         """Paper fig. 6a: s(N) scaling raises per-node sparsity with N."""
@@ -74,6 +81,8 @@ class TestSSGD:
             assert used_policy.s == pytest.approx(n * 1.0)
             state = init_opt_state(params, opt)
             step_fn(params, state, shard_batch(batch, n), key)
+            # telemetry arrives via async io_callback: block before reading
+            jax.effects_barrier()
             sparsities[n] = statslib.overall_sparsity()
         assert sparsities[4] > sparsities[1], sparsities
 
@@ -135,8 +144,8 @@ PJIT_SCRIPT = textwrap.dedent("""
     from repro.optim import OptConfig, init_opt_state, opt_state_specs
     from repro.parallel import axes as axlib
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch import make_mesh
+    mesh = make_mesh((4, 2), ("data", "model"))
     model = get_smoke_model("qwen2.5-32b")
     key = jax.random.PRNGKey(0)
     rules = axlib.tp_dp_rules(mesh)

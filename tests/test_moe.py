@@ -80,8 +80,8 @@ A2A_SCRIPT = textwrap.dedent("""
     from repro.models.moe import MoEConfig, init_moe, moe_einsum, moe_a2a
     from repro.parallel import axes as axlib
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     key = jax.random.PRNGKey(0)
     cfg = MoEConfig(n_experts=8, top_k=2, d_ff_expert=16,
                     capacity_factor=8.0)  # high cf: no drops -> exact match

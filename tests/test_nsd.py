@@ -1,9 +1,13 @@
-"""The paper's core claims about NSD (eqs. 4-6, fig. 1-2) as tests."""
+"""The paper's core claims about NSD (eqs. 4-6, fig. 1-2) as tests.
+
+Hypothesis-based property tests live in test_nsd_properties.py so this
+module stays collectable when hypothesis (a [test]-extra, not a hard
+dependency) is absent.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import nsd
 
@@ -42,7 +46,9 @@ class TestSparsity:
             q = nsd.nsd_quantize(x, jax.random.fold_in(key, 3), s)
             sparsities.append(float(jnp.mean(q == 0)))
         assert all(b >= a - 0.02 for a, b in zip(sparsities, sparsities[1:]))
-        assert sparsities[-1] > 0.9  # s=8 on a gaussian is very sparse
+        # s=8 on a gaussian is very sparse: theory gives ~0.89 (see
+        # expected_sparsity_gaussian), so 0.85 leaves MC headroom
+        assert sparsities[-1] > 0.85
 
     def test_matches_theoretical_gaussian_sparsity(self, key):
         """Measured sparsity ~ convolution integral of fig. 2 (MC version)."""
@@ -88,29 +94,3 @@ class TestEdgeCases:
         q = nsd.nsd_quantize(x, key, 2.0)
         assert q.dtype == jnp.bfloat16
         assert bool(jnp.all(jnp.isfinite(q.astype(jnp.float32))))
-
-
-@settings(max_examples=25, deadline=None)
-@given(s=st.floats(0.5, 8.0), scale=st.floats(1e-3, 1e3),
-       seed=st.integers(0, 2**31 - 1))
-def test_property_quantized_values_on_grid(s, scale, seed):
-    """Every output is an integer multiple of Delta (within f32 eps)."""
-    key = jax.random.PRNGKey(seed)
-    x = jax.random.normal(key, (256,), jnp.float32) * scale
-    delta = nsd.compute_delta(x, s)
-    k = nsd.nsd_indices(x, jax.random.fold_in(key, 1), delta)
-    q = k.astype(jnp.float32) * delta
-    ratio = np.asarray(q) / max(float(delta), 1e-30)
-    np.testing.assert_allclose(ratio, np.round(ratio), atol=1e-3)
-    assert int(jnp.max(jnp.abs(k))) <= 127
-
-
-@settings(max_examples=25, deadline=None)
-@given(seed=st.integers(0, 2**31 - 1), s=st.floats(1.0, 4.0))
-def test_property_error_bounded_by_delta(seed, s):
-    """|x~ - x| <= Delta (pointwise worst case of NSD)."""
-    key = jax.random.PRNGKey(seed)
-    x = jax.random.normal(key, (256,), jnp.float32)
-    delta = float(nsd.compute_delta(x, s))
-    q = nsd.nsd_quantize(x, jax.random.fold_in(key, 1), s)
-    assert float(jnp.max(jnp.abs(q - x))) <= delta * 1.001

@@ -1,0 +1,41 @@
+"""Hypothesis property tests for the NSD operator.
+
+Kept separate from test_nsd.py: hypothesis ships in the [test] extra, not
+as a hard dependency, and a bare module-level import would abort the whole
+suite's collection under -x when it is absent.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import nsd  # noqa: E402
+
+
+@settings(max_examples=25, deadline=None)
+@given(s=st.floats(0.5, 8.0), scale=st.floats(1e-3, 1e3),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_quantized_values_on_grid(s, scale, seed):
+    """Every output is an integer multiple of Delta (within f32 eps)."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (256,), jnp.float32) * scale
+    delta = nsd.compute_delta(x, s)
+    k = nsd.nsd_indices(x, jax.random.fold_in(key, 1), delta)
+    q = k.astype(jnp.float32) * delta
+    ratio = np.asarray(q) / max(float(delta), 1e-30)
+    np.testing.assert_allclose(ratio, np.round(ratio), atol=1e-3)
+    assert int(jnp.max(jnp.abs(k))) <= 127
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), s=st.floats(1.0, 4.0))
+def test_property_error_bounded_by_delta(seed, s):
+    """|x~ - x| <= Delta (pointwise worst case of NSD)."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (256,), jnp.float32)
+    delta = float(nsd.compute_delta(x, s))
+    q = nsd.nsd_quantize(x, jax.random.fold_in(key, 1), s)
+    assert float(jnp.max(jnp.abs(q - x))) <= delta * 1.001
