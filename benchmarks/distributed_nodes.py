@@ -3,27 +3,45 @@ nodes N grows (and s is scaled with N), per-node sparsity rises and
 worst-case bit-width falls while final accuracy stays flat — and, with the
 ``repro.comm`` wire format on the node->server hop, measured bytes-on-wire
 shrink as sparsity grows, priced here against dense f32 exchange on the
-TPU v5e interconnect."""
+TPU v5e interconnect.
+
+``compare_topologies`` additionally races the flat compressed ring against
+the two-level (intra-pod ring + inter-pod tree) reduce on the same
+gradients: wire bytes per link class, pointwise error bounds, sequential
+packs per segment, and modeled ICI/DCN seconds — written as JSON (see
+``main``/``--json``) so the "when does the tree win" question has a
+recorded answer per configuration.
+"""
 from __future__ import annotations
 
+import json
+import math
+import os
 import time
 from typing import Dict, List
 
 import jax
+import jax.numpy as jnp
 
-from repro.comm import CommPolicy
+from repro.comm import (CommPolicy, HierConfig, RingConfig,
+                        hier_allreduce_nsd, ring_allreduce_nsd, tree_rounds)
 from repro.configs import paper_models as pm
 from repro.core import DitherPolicy
 from repro.core import stats as statslib
 from repro.data import ClassifConfig, classification_batch
 from repro.distributed import SSGDConfig, make_ssgd_step, shard_batch
-from repro.launch.costmodel import compression_speedup, price_wire_bytes
+from repro.launch.costmodel import (compression_speedup, price_reduce,
+                                    price_wire_bytes)
 from repro.models.cnn import accuracy
 from repro.optim import OptConfig, init_opt_state
 
+RESULTS_JSON = os.path.join(os.path.dirname(__file__), "results",
+                            "topology_compare.json")
+
 
 def run(node_counts=(1, 2, 4, 8), steps: int = 40, batch: int = 32,
-        seed: int = 0, comm: bool = True) -> List[Dict]:
+        seed: int = 0, comm: bool = True, topology: str = "ps",
+        pods: int = 1) -> List[Dict]:
     rows = []
     for n in node_counts:
         statslib.reset()
@@ -36,10 +54,16 @@ def run(node_counts=(1, 2, 4, 8), steps: int = 40, batch: int = 32,
         pol = DitherPolicy(variant="paper", collect_stats=True,
                            stats_tag=f"dist{n}/")
         # comm-side NSD rides the same sqrt(N) schedule as the backprop
-        # dither: more nodes -> sparser wire payloads too
+        # dither: more nodes -> sparser wire payloads too. The topology
+        # kwarg routes the reduce through ring/hier instead of the ps
+        # compress-then-average; the requested pod count is snapped to
+        # gcd(pods, n) so every sweep point gets a valid (divisor) pod
+        # grouping instead of crashing mid-sweep on an indivisible n.
         comm_policy = (CommPolicy(default="nsd", s=dcfg.s_for_n(),
                                   collect_stats=True,
-                                  stats_tag=f"dist{n}/comm")
+                                  stats_tag=f"dist{n}/comm",
+                                  topology=topology,
+                                  pods=math.gcd(pods, n))
                        if comm else None)
         step_fn, used_policy = make_ssgd_step(model, opt_cfg, dcfg, pol,
                                               comm_policy=comm_policy)
@@ -72,6 +96,60 @@ def run(node_counts=(1, 2, 4, 8), steps: int = 40, batch: int = 32,
     return rows
 
 
+def compare_topologies(n_nodes: int = 8, pods: int = 2,
+                       shape=(256, 256), s: float = 2.0,
+                       seed: int = 0) -> Dict:
+    """Race flat ring vs hierarchical reduce on identical gradients.
+
+    Returns a JSON-ready dict with, per topology: measured wire bytes
+    (split by link class for the hierarchy), the reduce's pointwise error
+    bound and the measured error vs the dense mean, sequential packs per
+    segment, and the cost model's ICI/DCN seconds.
+    """
+    key = jax.random.PRNGKey(seed)
+    grads = jnp.stack([
+        jax.random.normal(jax.random.fold_in(key, i), shape) * 0.01
+        for i in range(n_nodes)])
+    dense_mean = jnp.mean(grads, axis=0)
+
+    def row(name, mean, tele, priced, extra):
+        return dict(
+            topology=name, n_nodes=n_nodes,
+            wire_bytes=float(tele.wire_bytes),
+            dense_bytes=float(tele.dense_bytes),
+            wire_ratio=float(tele.ratio),
+            error_bound=float(tele.error_bound),
+            max_err=float(jnp.max(jnp.abs(mean - dense_mean))),
+            packs_per_segment=int(tele.packs_per_segment),
+            **priced, **extra)
+
+    mean_r, tele_r = ring_allreduce_nsd(grads, key, RingConfig(s=s))
+    mean_h, tele_h = hier_allreduce_nsd(grads, key,
+                                        HierConfig(pods=pods, s=s))
+    rows = [
+        row("ring", mean_r, tele_r,
+            price_reduce(tele_r, nodes=n_nodes, pods=pods),
+            {"pods": pods}),
+        row("hier", mean_h, tele_h,
+            price_reduce(tele_h, nodes=n_nodes, pods=pods),
+            {"pods": pods, "per_pod": n_nodes // pods,
+             "wire_ici_bytes": float(tele_h.wire_ici_bytes),
+             "wire_dcn_bytes": float(tele_h.wire_dcn_bytes),
+             "tree_rounds": tree_rounds(pods)}),
+    ]
+    return {"n_nodes": n_nodes, "pods": pods, "shape": list(shape),
+            "s": s, "seed": seed, "rows": rows}
+
+
+def write_topology_json(result: Dict, path: str = RESULTS_JSON) -> str:
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return path
+
+
 def bench(quick: bool = True):
     rows = run(node_counts=(1, 2, 4) if quick else (1, 2, 4, 8, 16),
                steps=30 if quick else 80)
@@ -84,4 +162,38 @@ def bench(quick: bool = True):
             derived += (f" wire={r['wire_ratio'] * 100:.1f}%dense"
                         f" ({r['comm_speedup']:.1f}x link speedup)")
         out.append((f"fig5-6/N={r['n_nodes']}", r["us_per_step"], derived))
+    # topology race: flat ring vs two-level reduce, recorded as JSON
+    t0 = time.perf_counter()
+    cmp = compare_topologies(n_nodes=8, pods=2,
+                             shape=(128, 128) if quick else (256, 256))
+    us = (time.perf_counter() - t0) * 1e6
+    write_topology_json(cmp)
+    for r in cmp["rows"]:
+        out.append((
+            f"topology/{r['topology']}/N={r['n_nodes']}", us,
+            f"packs={r['packs_per_segment']}"
+            f" bound={r['error_bound']:.3e}"
+            f" wire={r['wire_bytes'] / 1e3:.1f}kB"
+            f" ici={r['ici_s'] * 1e6:.1f}us dcn={r['dcn_s'] * 1e6:.1f}us"
+            f" total={r['total_s'] * 1e6:.1f}us"))
     return out
+
+
+def main(argv=None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--nodes", type=int, default=8)
+    ap.add_argument("--pods", type=int, default=2)
+    ap.add_argument("--s", type=float, default=2.0)
+    ap.add_argument("--json", default=RESULTS_JSON,
+                    help="where to write the topology comparison JSON")
+    args = ap.parse_args(argv)
+    result = compare_topologies(n_nodes=args.nodes, pods=args.pods,
+                                s=args.s)
+    path = write_topology_json(result, args.json)
+    print(json.dumps(result, indent=1))
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,10 +2,15 @@
 
 wireformat.py   packed (deltas + bitmap + non-zero int8 levels) layout,
                 jnp pack/unpack references, measured wire bytes
-ring.py         compressed ring all-reduce (re-dithered partial sums);
-                shard_map real path + single-device simulation
+reduce_base.py  segmenting / hop-key / wire+bound accounting shared by
+                both reduce topologies (sim and shard_map paths)
+ring.py         flat compressed ring all-reduce (re-dithered partial
+                sums); shard_map real path + single-device simulation
+hierarchy.py    two-level reduce: intra-pod ring over ICI + inter-pod
+                binomial tree over DCN; fewer sequential packs per
+                segment and a tighter error bound than the flat ring
 compression.py  per-leaf CommPolicy (dense/int8/nsd/topk_ef) + error
-                feedback residuals
+                feedback residuals + reduce-topology selection
 telemetry.py    bytes-on-wire counters (via repro.core.stats) + roofline
                 pricing of measured wire bytes
 """
@@ -15,6 +20,10 @@ from repro.comm.compression import (
     MODE_INT8,
     MODE_NSD,
     MODE_TOPK_EF,
+    TOPO_HIER,
+    TOPO_PS,
+    TOPO_RING,
+    TOPOLOGIES,
     CommPolicy,
     ErrorFeedbackState,
     compress_leaf,
@@ -22,6 +31,15 @@ from repro.comm.compression import (
     init_comm_state,
     topk_error_feedback,
 )
+from repro.comm.hierarchy import (
+    HierConfig,
+    HierTelemetry,
+    allreduce_hier,
+    hier_allreduce_nsd,
+    make_hier_allreduce,
+    tree_rounds,
+)
+from repro.comm.reduce_base import ReduceTelemetry
 from repro.comm.ring import (
     RingConfig,
     RingTelemetry,
@@ -43,8 +61,11 @@ from repro.comm import telemetry
 
 __all__ = [
     "DENSE", "MODE_DENSE", "MODE_INT8", "MODE_NSD", "MODE_TOPK_EF",
+    "TOPO_HIER", "TOPO_PS", "TOPO_RING", "TOPOLOGIES",
     "CommPolicy", "ErrorFeedbackState", "compress_leaf", "compress_tree",
     "init_comm_state", "topk_error_feedback",
+    "HierConfig", "HierTelemetry", "allreduce_hier", "hier_allreduce_nsd",
+    "make_hier_allreduce", "tree_rounds", "ReduceTelemetry",
     "RingConfig", "RingTelemetry", "allreduce_compressed",
     "make_ring_allreduce", "ring_allreduce_nsd",
     "DEFAULT_CHUNK", "PackedNSD", "pack_bitmap", "pack_indices", "pack_nsd",

@@ -39,6 +39,18 @@ MODE_NSD = "nsd"
 MODE_TOPK_EF = "topk_ef"
 MODES = (MODE_DENSE, MODE_INT8, MODE_NSD, MODE_TOPK_EF)
 
+# How the data-parallel reduce itself is organized (repro.comm.ring /
+# repro.comm.hierarchy). "ps" is the parameter-server shape: every node
+# compresses independently and a central average follows (the original
+# make_ssgd_step behavior). "ring" and "hier" route the stacked node
+# gradients through the corresponding compressed all-reduce instead, so
+# the wire carries re-dithered partial sums and telemetry gains the
+# topology's error bound and sequential pack depth.
+TOPO_PS = "ps"
+TOPO_RING = "ring"
+TOPO_HIER = "hier"
+TOPOLOGIES = (TOPO_PS, TOPO_RING, TOPO_HIER)
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
@@ -78,11 +90,28 @@ class CommPolicy:
     overrides: tuple = ()  # ((name_substring, mode), ...), first match wins
     collect_stats: bool = False  # route per-leaf bytes into comm telemetry
     stats_tag: str = "comm/"
+    topology: str = TOPO_PS  # how the data-parallel reduce is organized
+    pods: int = 1  # node grouping for TOPO_HIER (N = pods * per_pod)
 
     def __post_init__(self):
         for m in (self.default,) + tuple(m for _, m in self.overrides):
             if m not in MODES:
                 raise ValueError(f"unknown comm mode {m!r}; one of {MODES}")
+        if self.topology not in TOPOLOGIES:
+            raise ValueError(f"unknown comm topology {self.topology!r}; "
+                             f"one of {TOPOLOGIES}")
+        if self.pods < 1:
+            raise ValueError(f"pods must be >= 1, got {self.pods}")
+
+    def reduce_cfg(self):
+        """The ring/hierarchy config this policy selects (None for ps)."""
+        from repro.comm.hierarchy import HierConfig
+        from repro.comm.ring import RingConfig
+        if self.topology == TOPO_RING:
+            return RingConfig(s=self.s, chunk=self.chunk)
+        if self.topology == TOPO_HIER:
+            return HierConfig(pods=self.pods, s=self.s, chunk=self.chunk)
+        return None
 
     def mode_for(self, name: str, size: int) -> str:
         for pat, mode in self.overrides:

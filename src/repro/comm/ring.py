@@ -19,7 +19,11 @@ is packed N-1 times during reduce-scatter and once at gather, so
 
 pointwise. ``RingTelemetry.error_bound`` reports that bound, measured from
 the actual per-hop Deltas; tests assert against it. Wire bytes are measured
-per pack (bitmap + non-zero levels), never estimated.
+per pack (bitmap + non-zero levels), never estimated. The segmenting, hop-
+key, and accounting helpers are shared with the two-level reduce in
+``repro.comm.hierarchy`` via ``repro.comm.reduce_base`` — which also cuts
+the flat ring's N sequential packs per segment down to
+(P-1) + ceil(log2 G) + 1 when the node set spans pods (see that module).
 
 Two implementations with identical per-hop math:
 
@@ -35,17 +39,22 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import List, NamedTuple, Sequence, Tuple, Union
+from typing import List, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.comm import wireformat as wf
+from repro.comm.reduce_base import (PackCounter, ReduceTelemetry, hop_key,
+                                    seg_len, segment)
 from repro.parallel.axes import shard_map_compat
 
 _REDUCE_SALT = 0x51D5
 _GATHER_SALT = 0xA11C
+
+# Back-compat alias: the ring predates the shared base module.
+RingTelemetry = ReduceTelemetry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,35 +63,10 @@ class RingConfig:
     chunk: int = wf.DEFAULT_CHUNK
 
 
-class RingTelemetry(NamedTuple):
-    wire_bytes: jax.Array  # f32 scalar: total bytes crossing all links
-    dense_bytes: jax.Array  # f32 scalar: same exchange at dense f32
-    error_bound: jax.Array  # f32 scalar: max pointwise |result - mean| bound
-    n_hops: int  # static: total link traversals
-
-    @property
-    def ratio(self) -> jax.Array:
-        return self.wire_bytes / jnp.maximum(self.dense_bytes, 1.0)
-
-
-def _seg_len(size: int, n: int, chunk: int) -> int:
-    """Ring segment length: ceil(size / n) rounded up to a chunk multiple."""
-    seg = -(-size // n)
-    return -(-seg // chunk) * chunk
-
-
-def _segment(flat: jax.Array, n: int, chunk: int) -> Tuple[jax.Array, int]:
-    """Pad a flat vector so it splits into n chunk-aligned ring segments."""
-    size = flat.shape[0]
-    seg = _seg_len(size, n, chunk)
-    padded = jnp.pad(flat, (0, n * seg - size))
-    return padded.reshape(n, seg), seg
-
-
-def _hop_key(key: jax.Array, salt: int, a: int, b) -> jax.Array:
-    k = jax.random.fold_in(key, salt)
-    k = jax.random.fold_in(k, a)
-    return jax.random.fold_in(k, b)
+def dense_reduce_bytes(size: int, n: int, chunk: int = wf.DEFAULT_CHUNK
+                       ) -> int:
+    """Bytes the same N-node ring exchange would move at dense f32."""
+    return 2 * n * (n - 1) * seg_len(size, n, chunk) * 4
 
 
 def ring_allreduce_nsd(grads: Union[jax.Array, Sequence[jax.Array]],
@@ -99,29 +83,27 @@ def ring_allreduce_nsd(grads: Union[jax.Array, Sequence[jax.Array]],
     shape, dtype = grads.shape[1:], grads.dtype
     if n == 1:
         zero = jnp.float32(0.0)
-        return grads[0], RingTelemetry(zero, zero, zero, 0)
+        return grads[0], RingTelemetry(zero, zero, zero, 0, 0)
 
     flat = grads.astype(jnp.float32).reshape(n, -1)
     segs_per_node = []
     for i in range(n):
-        segs, seg_len = _segment(flat[i], n, cfg.chunk)
+        segs, _ = segment(flat[i], n, cfg.chunk)
         segs_per_node.append(segs)
     # acc[i][c]: node i's current value for ring segment c
     acc: List[jax.Array] = list(segs_per_node)
 
-    wire = jnp.float32(0.0)
-    bound = jnp.zeros((n,), jnp.float32)  # per-segment sum of pack Deltas
+    ctr = PackCounter(n)
 
     # --- reduce-scatter: segment c travels c -> c+1 -> ... -> c-1 ---
     for step in range(n - 1):
         packed = []
         for i in range(n):
             c = (i - step) % n
-            p = wf.pack_nsd(acc[i][c], _hop_key(key, _REDUCE_SALT, step, i),
+            p = wf.pack_nsd(acc[i][c], hop_key(key, _REDUCE_SALT, step, i),
                             cfg.s, cfg.chunk)
             packed.append((c, p))
-            wire = wire + p.wire_bytes().astype(jnp.float32)
-            bound = bound.at[c].add(p.deltas[0])
+            ctr.count(p, seg=c)
         for i in range(n):
             c, p = packed[i]
             j = (i + 1) % n
@@ -131,10 +113,9 @@ def ring_allreduce_nsd(grads: Union[jax.Array, Sequence[jax.Array]],
     gathered = []
     for c in range(n):
         owner = (c - 1) % n
-        p = wf.pack_nsd(acc[owner][c], _hop_key(key, _GATHER_SALT, c, 0),
+        p = wf.pack_nsd(acc[owner][c], hop_key(key, _GATHER_SALT, c, 0),
                         cfg.s, cfg.chunk)
-        wire = wire + (n - 1) * p.wire_bytes().astype(jnp.float32)
-        bound = bound.at[c].add(p.deltas[0])
+        ctr.count(p, seg=c, hops=n - 1)
         gathered.append(wf.unpack_nsd(p))
 
     total = jnp.concatenate(gathered)
@@ -144,9 +125,10 @@ def ring_allreduce_nsd(grads: Union[jax.Array, Sequence[jax.Array]],
     mean = (total[:size] / n).reshape(shape).astype(dtype)
 
     n_hops = n * (n - 1) * 2
-    dense = jnp.float32(n_hops * seg_len * 4)
-    return mean, RingTelemetry(wire_bytes=wire, dense_bytes=dense,
-                               error_bound=jnp.max(bound) / n, n_hops=n_hops)
+    dense = jnp.float32(dense_reduce_bytes(flat.shape[1], n, cfg.chunk))
+    return mean, RingTelemetry(wire_bytes=ctr.wire_total, dense_bytes=dense,
+                               error_bound=jnp.max(ctr.bound) / n,
+                               n_hops=n_hops, packs_per_segment=n)
 
 
 def make_ring_allreduce(mesh: Mesh, axis_name: str,
@@ -164,20 +146,18 @@ def make_ring_allreduce(mesh: Mesh, axis_name: str,
         local = stacked_local[0]  # (1, *shape) local slice of the stack
         me = jax.lax.axis_index(axis_name)
         shape, dtype = local.shape, local.dtype
-        acc, seg_len = _segment(local.astype(jnp.float32).reshape(-1),
-                                n, cfg.chunk)
-        wire = jnp.float32(0.0)
-        bound = jnp.zeros((n,), jnp.float32)  # deltas of packs THIS node sent
+        acc, seg = segment(local.astype(jnp.float32).reshape(-1),
+                           n, cfg.chunk)
+        ctr = PackCounter(n)  # deltas of packs THIS node sent
 
         perm = partial(jax.lax.ppermute, axis_name=axis_name, perm=fwd)
 
         for step in range(n - 1):
             c_send = (me - step) % n
             p = wf.pack_nsd(jnp.take(acc, c_send, axis=0),
-                            _hop_key(key, _REDUCE_SALT, step, me),
+                            hop_key(key, _REDUCE_SALT, step, me),
                             cfg.s, cfg.chunk)
-            wire = wire + p.wire_bytes().astype(jnp.float32)
-            bound = bound.at[c_send].add(p.deltas[0])
+            ctr.count(p, seg=c_send)
             p_in = perm(p)
             c_recv = (me - 1 - step) % n
             acc = acc.at[c_recv].set(
@@ -185,24 +165,24 @@ def make_ring_allreduce(mesh: Mesh, axis_name: str,
 
         c_own = (me + 1) % n  # node m finished segment m+1
         p = wf.pack_nsd(jnp.take(acc, c_own, axis=0),
-                        _hop_key(key, _GATHER_SALT, c_own, 0),
+                        hop_key(key, _GATHER_SALT, c_own, 0),
                         cfg.s, cfg.chunk)
-        bound = bound.at[c_own].add(p.deltas[0])
+        ctr.count(p, seg=c_own, hops=0)  # charge the Delta; bytes per hop
         out = jnp.zeros_like(acc).at[c_own].set(wf.unpack_nsd(p))
         cur = p
         for h in range(1, n):
             cur = perm(cur)
-            wire = wire + cur.wire_bytes().astype(jnp.float32)
+            ctr.count(cur)
             c = (me - h + 1) % n
             out = out.at[c].set(wf.unpack_nsd(cur))
 
         # per-segment bound = sum over ALL senders that touched the segment
-        bound = jax.lax.psum(bound, axis_name)
+        bound = jax.lax.psum(ctr.bound, axis_name)
         size = 1
         for d in shape:
             size *= int(d)
         mean = (out.reshape(-1)[:size] / n).reshape(shape).astype(dtype)
-        return mean[None], wire[None], (jnp.max(bound) / n)[None]
+        return mean[None], ctr.wire_total[None], (jnp.max(bound) / n)[None]
 
     return jax.jit(shard_map_compat(
         ring, mesh=mesh,
@@ -210,10 +190,22 @@ def make_ring_allreduce(mesh: Mesh, axis_name: str,
         out_specs=(P(axis_name), P(axis_name), P(axis_name))))
 
 
-def allreduce_compressed(grads, key, cfg: RingConfig = RingConfig(),
-                         mesh: Mesh = None, axis_name: str = "nodes"):
-    """Dispatch: shard_map ring when a multi-device mesh is given, else the
-    single-process simulation (identical per-hop math)."""
+def allreduce_compressed(grads, key, cfg=RingConfig(), mesh: Mesh = None,
+                         axis_name: str = "nodes", pod_axis: str = "pods"):
+    """Dispatch a compressed all-reduce by topology and execution mode.
+
+    ``cfg`` selects the topology: a ``RingConfig`` runs the flat ring, a
+    ``repro.comm.hierarchy.HierConfig`` the two-level (intra-pod ring +
+    inter-pod tree) reduce. With a multi-device ``mesh`` the shard_map
+    implementation runs (the hierarchy needs a 2-D (pod_axis, axis_name)
+    mesh); otherwise the single-process simulation with identical per-hop
+    math.
+    """
+    from repro.comm import hierarchy as hier  # local: avoid import cycle
+
+    if isinstance(cfg, hier.HierConfig):
+        return hier.allreduce_hier(grads, key, cfg, mesh=mesh,
+                                   pod_axis=pod_axis, node_axis=axis_name)
     if mesh is not None and mesh.shape[axis_name] > 1:
         if not isinstance(grads, jax.Array):
             grads = jnp.stack(list(grads))
@@ -228,11 +220,11 @@ def allreduce_compressed(grads, key, cfg: RingConfig = RingConfig(),
         flat_size = 1
         for d in grads.shape[1:]:
             flat_size *= int(d)
-        seg = _seg_len(flat_size, n, cfg.chunk)
         n_hops = 2 * n * (n - 1)
         tele = RingTelemetry(
             wire_bytes=jnp.sum(wires),
-            dense_bytes=jnp.float32(n_hops * seg * 4),
-            error_bound=bounds[0], n_hops=n_hops)
+            dense_bytes=jnp.float32(
+                dense_reduce_bytes(flat_size, n, cfg.chunk)),
+            error_bound=bounds[0], n_hops=n_hops, packs_per_segment=n)
         return means[0], tele
     return ring_allreduce_nsd(grads, key, cfg)

@@ -23,8 +23,13 @@ from typing import Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.comm.compression import (CommPolicy, ErrorFeedbackState,
-                                    compress_leaf, topk_error_feedback)
+from repro.comm.compression import (TOPO_HIER, TOPO_PS, CommPolicy,
+                                    ErrorFeedbackState, compress_leaf,
+                                    topk_error_feedback)
+from repro.comm import hierarchy as hier_mod
+from repro.comm import ring as ring_mod
+from repro.comm.hierarchy import hier_allreduce_nsd
+from repro.comm.ring import ring_allreduce_nsd
 from repro.core import nsd
 from repro.core import stats as statslib
 from repro.core.policy import DitherCtx, DitherPolicy, name_salt
@@ -64,6 +69,15 @@ def make_ssgd_step(model: Model, opt_cfg: OptConfig, dcfg: SSGDConfig,
     node's gradient leaves are compressed per the policy (per-node keys, so
     the comm-side NSD noise also cancels in the average) and the step's
     metrics gain ``comm_wire_bytes`` / ``comm_dense_bytes``.
+
+    ``comm_policy.topology`` selects how that reduce is organized: the
+    default "ps" keeps the parameter-server shape above; "ring" and "hier"
+    replace the compress-then-average with the corresponding compressed
+    all-reduce from ``repro.comm`` (flat ring / intra-pod ring + inter-pod
+    tree with ``comm_policy.pods`` pods), whose re-dithered partial sums
+    are what a real deployment would put on the wire. Those topologies add
+    ``comm_error_bound`` (the reduce's pointwise bound vs the dense mean)
+    to the step metrics.
     """
     policy = base_policy.replace(s=dcfg.s_for_n())
 
@@ -109,6 +123,54 @@ def make_ssgd_step(model: Model, opt_cfg: OptConfig, dcfg: SSGDConfig,
         grads = tree_map_with_path_str(leaf, grads)
         return grads, totals
 
+    def allreduce_node_grads(grads, base_key, step):
+        """Topology-selected compressed all-reduce of the stacked grads.
+
+        Per-leaf: compressible leaves go through the ring/hierarchy sim
+        (``repro.comm.ring`` / ``repro.comm.hierarchy`` — identical math
+        to the shard_map programs), returning the already-averaged tree;
+        dense leaves average exactly. The compressed reduce's wire format
+        IS packed NSD, so int8/topk_ef leaf modes degrade to ``nsd`` on
+        this path (as ``compress_node_grads`` already does for topk_ef:
+        per-node EF residual state lives with the node, not the step).
+        Every leaf's ``dense`` counterfactual is the byte count the SAME
+        topology would move at f32 (``dense_reduce_bytes``), so the
+        wire/dense ratio compares like for like.
+        """
+        cfg = comm_policy.reduce_cfg()
+        n = dcfg.n_nodes
+        totals = {"wire": jnp.float32(0.0), "dense": jnp.float32(0.0),
+                  "bound": jnp.float32(0.0)}
+
+        def topo_dense_bytes(size: int) -> float:
+            if comm_policy.topology == TOPO_HIER:
+                return hier_mod.dense_reduce_bytes(
+                    size, comm_policy.pods, n // comm_policy.pods,
+                    comm_policy.chunk)
+            return ring_mod.dense_reduce_bytes(size, n, comm_policy.chunk)
+
+        def leaf(name: str, g_nodes: jax.Array) -> jax.Array:
+            size = int(g_nodes.size) // n
+            mode = comm_policy.mode_for(name, size)
+            if mode == "dense":
+                db = jnp.float32(topo_dense_bytes(size))
+                totals["dense"] = totals["dense"] + db
+                totals["wire"] = totals["wire"] + db
+                return jnp.mean(g_nodes, axis=0)
+            k0 = jax.random.fold_in(
+                jax.random.fold_in(base_key, step), name_salt(name))
+            if comm_policy.topology == TOPO_HIER:
+                mean, tele = hier_allreduce_nsd(g_nodes, k0, cfg)
+            else:
+                mean, tele = ring_allreduce_nsd(g_nodes, k0, cfg)
+            totals["wire"] = totals["wire"] + tele.wire_bytes
+            totals["dense"] = totals["dense"] + tele.dense_bytes
+            totals["bound"] = jnp.maximum(totals["bound"], tele.error_bound)
+            return mean
+
+        grads = tree_map_with_path_str(leaf, grads)
+        return grads, totals
+
     def ssgd_step(params, opt_state, sharded_batch, base_key):
         step = opt_state["step"]
         workers = jnp.arange(dcfg.n_nodes)
@@ -116,15 +178,24 @@ def make_ssgd_step(model: Model, opt_cfg: OptConfig, dcfg: SSGDConfig,
             lambda b, w: node_grad(params, b, base_key, step, w),
             in_axes=(0, 0))(sharded_batch, workers)
         comm_metrics = {}
+        reduced = False
         if comm_policy is not None:
-            grads, totals = compress_node_grads(grads, base_key, step)
-            comm_metrics = {"comm_wire_bytes": totals["wire"],
-                            "comm_dense_bytes": totals["dense"]}
+            if comm_policy.topology != TOPO_PS and dcfg.n_nodes > 1:
+                grads, totals = allreduce_node_grads(grads, base_key, step)
+                comm_metrics = {"comm_wire_bytes": totals["wire"],
+                                "comm_dense_bytes": totals["dense"],
+                                "comm_error_bound": totals["bound"]}
+                reduced = True
+            else:
+                grads, totals = compress_node_grads(grads, base_key, step)
+                comm_metrics = {"comm_wire_bytes": totals["wire"],
+                                "comm_dense_bytes": totals["dense"]}
             if comm_policy.collect_stats:
                 statslib.emit_comm(comm_policy.stats_tag, totals["wire"],
                                    totals["dense"])
-        # parameter server: average the (already noisy) node gradients
-        grads = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
+        if not reduced:
+            # parameter server: average the (already noisy) node gradients
+            grads = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
         params, opt_state, metrics = apply_updates(
             params, grads, opt_state, opt_cfg)
         metrics["loss"] = jnp.mean(losses)

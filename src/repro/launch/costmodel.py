@@ -47,6 +47,68 @@ def price_wire_bytes(wire_bytes: float, *, link_bw: float = rl.ICI_BW,
     return float(wire_bytes) / (link_bw * max(n_links, 1))
 
 
+@dataclasses.dataclass(frozen=True)
+class LinkPricing:
+    """Per-link-class bandwidths for the two-level interconnect."""
+
+    ici_bw: float = rl.ICI_BW  # fast intra-pod axis
+    dcn_bw: float = rl.DCN_BW  # slow inter-pod axis
+
+
+def price_reduce(tele, *, nodes: int, pods: int = 1,
+                 pricing: LinkPricing = LinkPricing()) -> Dict[str, float]:
+    """Model the ICI/DCN seconds of one measured compressed all-reduce.
+
+    ``tele`` is a ``RingTelemetry`` or ``HierTelemetry``. The model prices
+    MEASURED wire bytes; only the parallelism assumptions are modeled:
+
+    Flat ring over N nodes spanning G pods (pod-contiguous layout): every
+    round all N links carry one packed segment in parallel, so per-link
+    bytes are wire/N; G of the N links cross pods, and when G > 1 each
+    round is gated by a DCN link. ``dcn_s`` is then the critical path and
+    ``ici_s`` the (overlapped) time the intra-pod links are busy.
+
+    Hierarchical reduce: the intra-pod phases run all G*P ring links in
+    parallel (per-link bytes = wire_ici / (G*P)); the tree phases run the
+    P per-segment owner lines in parallel and serialize 2*ceil(log2 G)
+    pack transfers per line out of the 2*(G-1) total, so the DCN critical
+    path is wire_dcn/P scaled by that ratio. Phases are serialized:
+    ``total_s = ici_s + dcn_s``.
+    """
+    ici_s = dcn_s = 0.0
+    if hasattr(tele, "wire_ici_bytes"):  # hierarchical: measured split
+        g, p = int(tele.pods), int(tele.per_pod)
+        ici_s = float(tele.wire_ici_bytes) / max(g * p, 1) / pricing.ici_bw
+        if g > 1:
+            critical = 2 * (g - 1).bit_length()  # up + down rounds
+            total_packs = 2 * (g - 1)
+            dcn_s = (float(tele.wire_dcn_bytes) / max(p, 1)
+                     * critical / total_packs / pricing.dcn_bw)
+        total_s = ici_s + dcn_s  # phases serialize
+    else:  # flat ring: per-link bytes, gated by DCN when spanning pods
+        per_link = float(tele.wire_bytes) / max(nodes, 1)
+        ici_s = per_link / pricing.ici_bw
+        dcn_s = per_link / pricing.dcn_bw if pods > 1 else 0.0
+        total_s = max(ici_s, dcn_s)  # same rounds, gated by slowest link
+    return {"ici_s": ici_s, "dcn_s": dcn_s, "total_s": total_s}
+
+
+def price_step_comm(wire_bytes: float, *, pods: int = 1,
+                    pricing: LinkPricing = LinkPricing()) -> Dict[str, float]:
+    """Bound the link seconds of one training step's gradient exchange.
+
+    Used by the Trainer, which measures per-step wire bytes but has no
+    node axis of its own: ``comm_ici_s`` assumes the exchange stays on the
+    fast axis, ``comm_dcn_s`` the slow axis when the configured topology
+    spans pods (0 otherwise). The two bracket the real deployment.
+    """
+    return {
+        "comm_ici_s": float(wire_bytes) / pricing.ici_bw,
+        "comm_dcn_s": (float(wire_bytes) / pricing.dcn_bw
+                       if pods > 1 else 0.0),
+    }
+
+
 def compression_speedup(wire_bytes: float, dense_bytes: float) -> float:
     """How much interconnect time the packed exchange saves vs dense f32."""
     if wire_bytes <= 0:

@@ -28,7 +28,10 @@ from typing import Dict, List, Optional, Tuple
 PEAK_BF16_FLOPS = 197e12
 PEAK_INT8_OPS = 394e12
 HBM_BW = 819e9  # bytes/s
-ICI_BW = 50e9  # bytes/s per link
+ICI_BW = 50e9  # bytes/s per link (intra-pod)
+# Inter-pod data-center network: ~50 Gbps per host NIC. An order of
+# magnitude below ICI — the gap the hierarchical reduce is built around.
+DCN_BW = 6.25e9  # bytes/s per pod-crossing link
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,

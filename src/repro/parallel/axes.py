@@ -22,6 +22,17 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 MeshAxes = Union[None, str, Tuple[str, ...]]
 
+# Interconnect class per mesh axis name: collectives over a "dcn" axis
+# cross the slow inter-pod network; every other axis rides intra-pod ICI.
+# repro.launch.mesh.NodeTopology consults this for axes it doesn't own and
+# repro.launch.costmodel prices the two classes at separate bandwidths.
+LINK_KINDS = {"pod": "dcn", "pods": "dcn"}
+
+
+def axis_link_kind(axis_name: str) -> str:
+    """"ici" | "dcn" for a mesh axis name (default: ici)."""
+    return LINK_KINDS.get(axis_name, "ici")
+
 
 def shard_map_compat(f, *, mesh, in_specs, out_specs, check: bool = True):
     """``shard_map`` across jax versions: the entry point moved from

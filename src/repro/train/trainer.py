@@ -39,7 +39,8 @@ class Trainer:
     def __init__(self, model: Model, opt_cfg: OptConfig, tcfg: TrainerConfig,
                  policy: Optional[DitherPolicy] = None,
                  eval_fn: Optional[Callable] = None,
-                 comm_policy: Optional[CommPolicy] = None):
+                 comm_policy: Optional[CommPolicy] = None,
+                 topology=None):
         self.model = model
         self.opt_cfg = opt_cfg
         self.tcfg = tcfg
@@ -50,6 +51,10 @@ class Trainer:
         # _comm_state holds the error-feedback residuals; it rides in the
         # checkpoint tree so a preempted topk_ef run resumes losslessly.
         self.comm_policy = comm_policy
+        # launch.mesh.NodeTopology of the deployment this run models: each
+        # logged history row prices the step's measured wire bytes on the
+        # fast (ICI) and, when the topology spans pods, slow (DCN) axis.
+        self.topology = topology
         self._comm_state: Optional[Dict[str, Any]] = None
         self.guard = PreemptionGuard(install=False)
         self.ckpt = (CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep_ckpts)
@@ -166,7 +171,15 @@ class Trainer:
             self._comm_state = comm_state
             if self.tcfg.log_every and (step + 1) % self.tcfg.log_every == 0:
                 loss = float(metrics["loss"])
-                self.history.append({"step": step + 1, "loss": loss})
+                row = {"step": step + 1, "loss": loss}
+                if "comm_wire_bytes" in metrics:
+                    wire = float(metrics["comm_wire_bytes"])
+                    row["comm_wire_mb"] = wire / 1e6
+                    if self.topology is not None:
+                        from repro.launch.costmodel import price_step_comm
+                        row.update(price_step_comm(
+                            wire, pods=self.topology.pods))
+                self.history.append(row)
                 log.info("step %d loss %.4f (%.2f s)", step + 1, loss,
                          time.time() - t0)
             if (self.ckpt is not None and self.tcfg.ckpt_every

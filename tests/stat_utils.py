@@ -1,0 +1,89 @@
+"""Shared statistical assertion helpers for the NSD test-suite.
+
+The paper's eq. 6 bounds the NSD quantization error's second moment:
+E[eps^2] < Delta^2 / 4. Every Monte-Carlo tolerance in the suite should
+derive from that bound instead of hand-tuned constants — ad-hoc "* 1.05"
+factors scattered across files are how flaky tests are born. This module
+is the single place those derivations live:
+
+  * ``mc_mean_tol``      tolerance for the mean of n error draws
+                         (std of the MC mean <= (Delta/2)/sqrt(n))
+  * ``variance_bound``   the eq. 6 right-hand side with explicit MC slack
+  * ``assert_within_bound``  pointwise |err| <= bound with only f32
+                         arithmetic headroom (the telemetry bounds from
+                         repro.comm are deterministic, not statistical)
+  * ``retry_with_wider_seed``  escape hatch for genuinely statistical
+                         checks: re-run on the next FIXED seed rather
+                         than widening the tolerance. A test that fails
+                         all listed seeds is broken, not unlucky.
+
+Not collected by pytest (no ``test_`` prefix); import as ``stat_utils``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Sequence, Tuple
+
+import jax
+
+# Multiplicative headroom for f32 accumulation error when asserting a
+# measured value against an analytically exact bound. NOT a statistical
+# fudge factor — use mc_mean_tol/variance_bound for those.
+BOUND_SLACK = 1.001
+
+
+def fixed_key(seed: int = 0) -> jax.Array:
+    """The suite's canonical fixed-seed PRNG key."""
+    return jax.random.PRNGKey(seed)
+
+
+def mc_mean_tol(delta: float, n_draws: int, n_sigma: float = 5.0) -> float:
+    """Tolerance for the Monte-Carlo mean of n_draws NSD errors.
+
+    Eq. 6 gives Var[eps] < Delta^2/4, so the std of the mean of n draws is
+    below (Delta/2)/sqrt(n); ``n_sigma`` standard deviations of headroom
+    makes a false failure astronomically unlikely at fixed seed.
+    """
+    return n_sigma * float(delta) / 2.0 / math.sqrt(n_draws)
+
+
+def variance_bound(delta: float, n_draws: int = 0,
+                   n_sigma: float = 5.0) -> float:
+    """Upper bound to assert an MC estimate of E[eps^2] against.
+
+    The population bound is Delta^2/4 (eq. 6, strict). A finite-sample
+    estimate fluctuates around the true value, so allow n_sigma sampling
+    std-devs on top: Var of the mean of n draws of eps^2 is at most
+    E[eps^4]/n <= Delta^4/16/n (|eps| <= Delta/2 pointwise).
+    """
+    b = float(delta) ** 2 / 4.0
+    if n_draws:
+        b += n_sigma * b / math.sqrt(n_draws)
+    return b
+
+
+def assert_within_bound(err, bound, slack: float = BOUND_SLACK,
+                        msg: str = "") -> None:
+    """Pointwise |err| <= bound, with f32-arithmetic headroom only."""
+    e, b = float(err), float(bound)
+    assert e <= b * slack, (msg, e, b)
+
+
+def retry_with_wider_seed(check: Callable[[jax.Array], None],
+                          seeds: Sequence[int] = (0, 1, 2)
+                          ) -> Tuple[int, int]:
+    """Run ``check(key)`` on successive fixed seeds; pass on the first
+    success. Returns (passing seed, attempts). A genuinely statistical
+    test drawing a 5-sigma outlier at one seed passes at the next; a
+    broken invariant fails all of them and surfaces the last error.
+    """
+    last = None
+    for i, seed in enumerate(seeds):
+        try:
+            check(jax.random.PRNGKey(seed))
+            return seed, i + 1
+        except AssertionError as e:  # noqa: PERF203 — retry is the point
+            last = e
+    raise AssertionError(
+        f"failed for all fixed seeds {tuple(seeds)}; this is not MC "
+        f"noise. Last failure: {last}")

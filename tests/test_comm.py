@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+import stat_utils
 
 from repro.comm import (CommPolicy, RingConfig, compress_tree,
                         init_comm_state, pack_nsd, ring_allreduce_nsd,
@@ -80,38 +81,71 @@ class TestWireFormat:
         np.testing.assert_array_equal(np.asarray(unpack_nsd(p)),
                                       np.zeros(640, np.float32))
 
+    def test_outlier_hits_int8_clip_guard(self, key):
+        """A single huge spike saturates INT8_CLIP (k would be ~181
+        unclipped: Delta = s*std ~ s*|spike|/sqrt(n), so k ~ sqrt(n)/s)
+        and the round trip must STILL be bit-exact vs repro.core.nsd —
+        both sides clip identically."""
+        x = (jax.random.normal(key, (8192,), jnp.float32) * 1e-3)
+        x = x.at[0].set(1e6)
+        p = pack_nsd(x, key, 0.5)
+        assert int(jnp.max(jnp.abs(p.levels))) == nsd.INT8_CLIP
+        want = nsd.nsd_quantize_int8(x, key, 0.5).dequantize()
+        np.testing.assert_array_equal(np.asarray(unpack_nsd(p)),
+                                      np.asarray(want))
+
+
+# Compiled-mode guard: interpret=True must pass everywhere; the compiled
+# variant is the red/green signal for the ROADMAP "TPU-compiled pack
+# kernels" item. On CPU the backend itself refuses compiled pallas_call,
+# and on real TPUs the lane-dim reshape still needs the sublane-rotate +
+# OR-reduce layout — xfail(strict=False) turns both into a visible xfail
+# today and an unexpected-pass marker the day the kernel compiles.
+INTERPRET_MODES = [
+    True,
+    pytest.param(False, marks=pytest.mark.xfail(
+        strict=False,
+        reason="ROADMAP: bitmap pack/unpack only validates in interpret "
+               "mode; compiled TPU layout (sublane rotate + OR-reduce) "
+               "pending, and CPU has no compiled pallas at all")),
+]
+
 
 class TestPackKernels:
+    @pytest.mark.parametrize("interpret", INTERPRET_MODES)
     @pytest.mark.parametrize("shape", [(128, 128), (256, 512), (384, 128)])
-    def test_pack_kernel_vs_ref(self, key, shape):
+    def test_pack_kernel_vs_ref(self, key, shape, interpret):
         x = jax.random.normal(key, shape, jnp.float32)
         k8 = nsd.nsd_quantize_int8(x, key, 4.0).k
-        bm_k, nnz_k = bitmap_pack_blocked(k8)
+        bm_k, nnz_k = bitmap_pack_blocked(k8, interpret=interpret)
         bm_r, nnz_r = bitmap_pack_blocked_ref(k8)
         np.testing.assert_array_equal(np.asarray(bm_k), np.asarray(bm_r))
         np.testing.assert_array_equal(np.asarray(nnz_k), np.asarray(nnz_r))
 
-    def test_unpack_kernel_vs_ref(self, key):
+    @pytest.mark.parametrize("interpret", INTERPRET_MODES)
+    def test_unpack_kernel_vs_ref(self, key, interpret):
         x = jax.random.normal(key, (256, 256), jnp.float32)
         k8 = nsd.nsd_quantize_int8(x, key, 4.0).k
-        bm, _ = bitmap_pack_blocked(k8)
+        bm, _ = bitmap_pack_blocked(k8, interpret=interpret)
         np.testing.assert_array_equal(
-            np.asarray(bitmap_unpack_blocked(bm)),
+            np.asarray(bitmap_unpack_blocked(bm, interpret=interpret)),
             np.asarray(bitmap_unpack_blocked_ref(bm)))
 
-    def test_kernel_roundtrip_recovers_occupancy(self, key):
+    @pytest.mark.parametrize("interpret", INTERPRET_MODES)
+    def test_kernel_roundtrip_recovers_occupancy(self, key, interpret):
         x = jax.random.normal(key, (128, 256), jnp.float32)
         k8 = nsd.nsd_quantize_int8(x, key, 2.0).k
-        bm, _ = bitmap_pack_blocked(k8)
-        mask = bitmap_unpack_blocked(bm)
+        bm, _ = bitmap_pack_blocked(k8, interpret=interpret)
+        mask = bitmap_unpack_blocked(bm, interpret=interpret)
         np.testing.assert_array_equal(
             np.asarray(mask), np.asarray((k8 != 0).astype(jnp.int8)))
 
-    def test_kernel_matches_wireformat_bitmap(self, key):
+    @pytest.mark.parametrize("interpret", INTERPRET_MODES)
+    def test_kernel_matches_wireformat_bitmap(self, key, interpret):
         """Kernel and jnp wire-format reference share the bit convention."""
         x = jax.random.normal(key, (128, 128), jnp.float32)
         k8 = nsd.nsd_quantize_int8(x, key, 2.0).k
-        bm_kernel, _ = bitmap_pack_blocked(k8)
+        bm_kernel, _ = bitmap_pack_blocked(k8, interpret=interpret)
         bm_wf = wireformat.pack_bitmap(k8)
         np.testing.assert_array_equal(np.asarray(bm_kernel),
                                       np.asarray(bm_wf))
@@ -128,8 +162,7 @@ class TestRing:
         mean, tele = ring_allreduce_nsd(gs, key, RingConfig(s=1.0))
         dense = jnp.mean(gs, axis=0)
         err = float(jnp.max(jnp.abs(mean - dense)))
-        assert err <= float(tele.error_bound) * 1.001, (
-            err, float(tele.error_bound))
+        stat_utils.assert_within_bound(err, tele.error_bound)
 
     def test_ring_wire_under_25pct_at_paper_sparsity(self, key):
         """At the ~92% sparsity operating point the whole exchange must be
@@ -201,8 +234,9 @@ class TestCommPolicy:
         pol = CommPolicy(default="nsd", s=2.0, min_leaf_size=1)
         out, _, _ = compress_tree(grads, key, pol)
         w = grads["dense_layer"]["w"]
-        assert float(jnp.max(jnp.abs(out["dense_layer"]["w"] - w))) <= \
-            float(nsd.compute_delta(w, 2.0)) * 1.001
+        stat_utils.assert_within_bound(
+            jnp.max(jnp.abs(out["dense_layer"]["w"] - w)),
+            nsd.compute_delta(w, 2.0))
 
     def test_unknown_mode_rejected(self):
         with pytest.raises(ValueError):
@@ -334,21 +368,27 @@ class TestIntegration:
 
 SHARDMAP_SCRIPT = textwrap.dedent("""
     import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import functools
     import jax, jax.numpy as jnp
     from repro.comm import (RingConfig, make_ring_allreduce,
                             ring_allreduce_nsd)
-    mesh = jax.make_mesh((4,), ("nodes",))
+    mesh = jax.make_mesh((8,), ("nodes",))
     key = jax.random.PRNGKey(0)
     gs = jnp.stack([jax.random.normal(jax.random.fold_in(key, i), (37, 13))
-                    for i in range(4)])
+                    for i in range(8)])
     fn = make_ring_allreduce(mesh, "nodes", RingConfig(s=1.0))
     means, wires, bounds = fn(gs, key)
-    sim_mean, tele = ring_allreduce_nsd(gs, key, RingConfig(s=1.0))
+    # the sim is jitted for the comparison: eager XLA fuses elementwise
+    # chains differently (1-ulp FMA artifacts); per-hop math is identical
+    sim = jax.jit(functools.partial(ring_allreduce_nsd, cfg=RingConfig(s=1.0)))
+    sim_mean, tele = sim(gs, key)
     # every node must hold the identical result...
-    for i in range(1, 4):
+    for i in range(1, 8):
         assert float(jnp.max(jnp.abs(means[i] - means[0]))) == 0.0
-    # ...equal to the single-process simulation (same hop math, same keys)
+    # ...bit-exactly equal to the simulation (same hop math, same keys;
+    # each hop's output is the next hop's input, so final-state equality
+    # transitively pins every intermediate hop)
     assert float(jnp.max(jnp.abs(means[0] - sim_mean))) == 0.0
     assert float(jnp.sum(wires)) == float(tele.wire_bytes)
     # per-hop delta accounting must agree with the sim's error bound too
@@ -360,6 +400,7 @@ SHARDMAP_SCRIPT = textwrap.dedent("""
     assert float(jnp.max(jnp.abs(mean_d - sim_mean))) == 0.0
     assert float(tele_d.dense_bytes) == float(tele.dense_bytes)
     assert float(tele_d.error_bound) > 0.0
+    assert tele_d.packs_per_segment == 8
     try:
         allreduce_compressed(gs[:3], key, mesh=mesh, axis_name="nodes")
     except ValueError:
@@ -378,3 +419,25 @@ def test_shardmap_ring_subprocess():
     out = subprocess.run([sys.executable, "-c", SHARDMAP_SCRIPT], env=env,
                          capture_output=True, text=True, timeout=900)
     assert "SHARDMAP_RING_OK" in out.stdout, out.stdout + out.stderr
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 (virtual) devices — run under "
+                           "XLA_FLAGS=--xla_force_host_platform_device_"
+                           "count=8 (the CI comm job does)")
+def test_ring_shardmap_inprocess(key):
+    """In-process sim-vs-shard_map differential for the multi-device CI
+    job: bit-exact mean, identical wire bytes and per-hop Delta sums."""
+    import functools
+
+    from repro.comm import make_ring_allreduce
+    mesh = jax.make_mesh((8,), ("nodes",))
+    gs = jnp.stack([jax.random.normal(jax.random.fold_in(key, i), (129,))
+                    for i in range(8)])
+    means, wires, bounds = make_ring_allreduce(
+        mesh, "nodes", RingConfig(s=1.0))(gs, key)
+    sim_mean, tele = jax.jit(functools.partial(
+        ring_allreduce_nsd, cfg=RingConfig(s=1.0)))(gs, key)
+    assert float(jnp.max(jnp.abs(means[0] - sim_mean))) == 0.0
+    assert float(jnp.sum(wires)) == float(tele.wire_bytes)
+    assert abs(float(bounds[0]) - float(tele.error_bound)) < 1e-6

@@ -1,0 +1,106 @@
+"""Hypothesis property tests for the comm subsystem over adversarial
+inputs: non-chunk-multiple lengths, all-zero tensors, single-outlier
+tensors that hit the INT8_CLIP guard, and the N=1 short-circuit — for the
+wire format and BOTH compressed reduces (flat ring + hierarchy).
+
+Kept separate from test_comm.py in the test_nsd_properties.py style:
+hypothesis ships in the [test] extra, not as a hard dependency, and a
+bare module-level import would abort the whole suite's collection under
+-x when it is absent.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import stat_utils
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.comm import (HierConfig, RingConfig, hier_allreduce_nsd,  # noqa: E402
+                        pack_nsd, ring_allreduce_nsd, unpack_nsd)
+from repro.core import nsd  # noqa: E402
+
+
+def _make_tensor(kind: str, n: int, seed: int) -> jax.Array:
+    key = jax.random.PRNGKey(seed)
+    if kind == "zero":
+        return jnp.zeros((n,), jnp.float32)
+    x = jax.random.normal(key, (n,), jnp.float32)
+    if kind == "outlier":
+        # one huge spike: its index k = outlier/Delta would overflow int8
+        # by orders of magnitude without the INT8_CLIP guard
+        x = x.at[0].set(1e6)
+    return x
+
+
+@settings(max_examples=20, deadline=None)
+@given(kind=st.sampled_from(["normal", "zero", "outlier"]),
+       n=st.integers(1, 700),  # almost never a chunk (256) multiple
+       s=st.floats(0.5, 8.0),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_wireformat_roundtrip_adversarial(kind, n, s, seed):
+    """unpack(pack(x)) == nsd_quantize_int8(x).dequantize() bit-exactly
+    for ANY length/content, including the clip guard path."""
+    x = _make_tensor(kind, n, seed)
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), 1)
+    p = pack_nsd(x, key, s)
+    want = nsd.nsd_quantize_int8(x, key, s).dequantize()
+    np.testing.assert_array_equal(np.asarray(unpack_nsd(p)),
+                                  np.asarray(want))
+    if kind == "outlier":
+        # int8 safety: no level escapes the clip guard, whatever the spike
+        # (the guaranteed clip-saturation case is tier-1:
+        # test_comm.py::TestWireFormat::test_outlier_hits_int8_clip_guard)
+        assert int(jnp.max(jnp.abs(p.levels))) <= nsd.INT8_CLIP
+    if kind == "zero":
+        assert int(p.nnz) == 0
+
+
+@settings(max_examples=12, deadline=None)
+@given(kind=st.sampled_from(["normal", "zero", "outlier"]),
+       n_nodes=st.integers(1, 5),
+       n=st.integers(1, 600),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_ring_within_bound(kind, n_nodes, n, seed):
+    """The flat ring's result stays within its reported pointwise bound
+    for adversarial inputs; N=1 short-circuits exactly with no wire."""
+    gs = jnp.stack([_make_tensor(kind, n, seed + i)
+                    for i in range(n_nodes)])
+    key = jax.random.PRNGKey(seed)
+    mean, tele = ring_allreduce_nsd(gs, key, RingConfig(s=2.0))
+    dense = jnp.mean(gs, axis=0)
+    if n_nodes == 1:
+        np.testing.assert_array_equal(np.asarray(mean), np.asarray(gs[0]))
+        assert float(tele.wire_bytes) == 0.0
+        return
+    stat_utils.assert_within_bound(
+        jnp.max(jnp.abs(mean - dense)), tele.error_bound,
+        msg=f"{kind} n={n} nodes={n_nodes}")
+    assert float(tele.wire_bytes) > 0.0
+
+
+@settings(max_examples=12, deadline=None)
+@given(kind=st.sampled_from(["normal", "zero", "outlier"]),
+       pods=st.integers(1, 3),
+       per_pod=st.integers(1, 3),
+       n=st.integers(1, 600),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_hier_within_bound(kind, pods, per_pod, n, seed):
+    """The hierarchical reduce holds the same contract for every (G, P)
+    split, including non-power-of-two pod counts and degenerate axes."""
+    n_nodes = pods * per_pod
+    gs = jnp.stack([_make_tensor(kind, n, seed + i)
+                    for i in range(n_nodes)])
+    key = jax.random.PRNGKey(seed)
+    mean, tele = hier_allreduce_nsd(gs, key, HierConfig(pods=pods, s=2.0))
+    dense = jnp.mean(gs, axis=0)
+    if n_nodes == 1:
+        np.testing.assert_array_equal(np.asarray(mean), np.asarray(gs[0]))
+        assert float(tele.wire_bytes) == 0.0
+        return
+    stat_utils.assert_within_bound(
+        jnp.max(jnp.abs(mean - dense)), tele.error_bound,
+        msg=f"{kind} n={n} G={pods} P={per_pod}")
+    assert float(tele.wire_ici_bytes) + float(tele.wire_dcn_bytes) == \
+        float(tele.wire_bytes)

@@ -1,0 +1,359 @@
+"""repro.comm.hierarchy: the two-level (intra-pod ring + inter-pod tree)
+compressed reduce — correctness vs the dense mean, acceptance criteria vs
+the flat ring (strictly fewer sequential packs per segment AND a strictly
+tighter error bound on the same input), telemetry accounting, topology
+threading (CommPolicy / ssgd / Trainer / costmodel / mesh descriptors),
+and sim-vs-shard_map differential tests including a non-power-of-two pod
+count.
+
+Differential methodology: the shard_map program and the simulation share
+per-hop math AND per-hop PRNG keys (repro.comm.reduce_base.hop_key), so
+their final states must agree bit-exactly — and because every hop's
+output is the next hop's input, final-state equality transitively pins
+every intermediate hop. Both sides are compared under jit: XLA fuses
+eager and jitted elementwise chains differently (1-ulp FMA-style
+divergence), which is a compiler artifact, not hop math.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import stat_utils
+
+from repro.comm import (CommPolicy, HierConfig, RingConfig,
+                        hier_allreduce_nsd, ring_allreduce_nsd, tree_rounds)
+from repro.launch.costmodel import LinkPricing, price_reduce
+from repro.launch.mesh import NodeTopology, make_node_mesh
+
+
+def _stack(key, n, shape=(1000,), scale=1.0):
+    return jnp.stack([
+        jax.random.normal(jax.random.fold_in(key, i), shape) * scale
+        for i in range(n)])
+
+
+class TestHierSim:
+    def test_matches_dense_mean_within_bound(self, key):
+        """N=8 in 2 pods vs dense average, within the documented bound
+        (acceptance criterion)."""
+        gs = _stack(key, 8)
+        mean, tele = hier_allreduce_nsd(gs, key, HierConfig(pods=2, s=1.0))
+        err = jnp.max(jnp.abs(mean - jnp.mean(gs, axis=0)))
+        stat_utils.assert_within_bound(err, tele.error_bound)
+
+    @pytest.mark.parametrize("pods,per_pod", [(2, 4), (4, 2), (2, 2),
+                                              (3, 2), (1, 4), (4, 1)])
+    def test_shapes_and_bounds(self, key, pods, per_pod):
+        """Every (G, P) split reduces correctly: pure ring (G=1), pure
+        tree (P=1), non-power-of-two pod count (G=3) included."""
+        n = pods * per_pod
+        gs = _stack(key, n, (300,))
+        mean, tele = hier_allreduce_nsd(gs, key, HierConfig(pods=pods))
+        err = jnp.max(jnp.abs(mean - jnp.mean(gs, axis=0)))
+        stat_utils.assert_within_bound(err, tele.error_bound)
+        assert tele.packs_per_segment == \
+            (per_pod - 1) + tree_rounds(pods) + 1
+        assert tele.pods == pods and tele.per_pod == per_pod
+
+    def test_strictly_beats_flat_ring_at_pod_scale(self, key):
+        """THE acceptance criterion: for N >= 8 nodes in >= 2 pods, the
+        hierarchy re-quantizes each segment strictly fewer times and
+        reports a strictly tighter error bound than the flat ring on the
+        SAME input."""
+        gs = _stack(key, 8)
+        _, ring_tele = ring_allreduce_nsd(gs, key, RingConfig(s=1.0))
+        for pods in (2, 4):
+            _, hier_tele = hier_allreduce_nsd(gs, key,
+                                              HierConfig(pods=pods, s=1.0))
+            assert hier_tele.packs_per_segment < ring_tele.packs_per_segment
+            assert float(hier_tele.error_bound) < float(ring_tele.error_bound)
+
+    def test_wire_split_sums_to_total(self, key):
+        gs = _stack(key, 8)
+        _, tele = hier_allreduce_nsd(gs, key, HierConfig(pods=2))
+        assert float(tele.wire_ici_bytes) + float(tele.wire_dcn_bytes) == \
+            float(tele.wire_bytes)
+        assert float(tele.wire_dcn_bytes) > 0  # the tree actually ran
+        assert float(tele.wire_bytes) < float(tele.dense_bytes)
+
+    def test_single_pod_has_no_dcn_traffic(self, key):
+        gs = _stack(key, 4)
+        _, tele = hier_allreduce_nsd(gs, key, HierConfig(pods=1))
+        # G=1: only the once-packed broadcast segment, no tree hops
+        assert float(tele.wire_dcn_bytes) == 0.0
+        assert tele.packs_per_segment == 4  # same depth as the flat ring
+
+    def test_single_node_is_exact_and_free(self, key):
+        g = jax.random.normal(key, (7, 11))[None]
+        mean, tele = hier_allreduce_nsd(g, key, HierConfig(pods=1))
+        np.testing.assert_array_equal(np.asarray(mean), np.asarray(g[0]))
+        assert float(tele.wire_bytes) == 0.0
+
+    def test_indivisible_pods_rejected(self, key):
+        gs = _stack(key, 6, (64,))
+        with pytest.raises(ValueError, match="divisible"):
+            hier_allreduce_nsd(gs, key, HierConfig(pods=4))
+
+    def test_mesh_without_pod_axis_rejected(self, key):
+        """Handing a flat-ring mesh to the hierarchy must fail with the
+        module's descriptive ValueError, not a raw KeyError."""
+        from repro.comm import allreduce_compressed, allreduce_hier
+        gs = _stack(key, 2, (64,))
+        mesh = make_node_mesh(NodeTopology.flat(jax.device_count()))
+        with pytest.raises(ValueError, match="2-D"):
+            allreduce_hier(gs, key, HierConfig(pods=2), mesh=mesh)
+        with pytest.raises(ValueError, match="2-D"):
+            allreduce_compressed(gs, key, HierConfig(pods=2), mesh=mesh)
+
+    def test_deterministic(self, key):
+        gs = _stack(key, 6, (256,))
+        m1, _ = hier_allreduce_nsd(gs, key, HierConfig(pods=3))
+        m2, _ = hier_allreduce_nsd(gs, key, HierConfig(pods=3))
+        np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+
+    def test_error_shrinks_with_smaller_s(self, key):
+        gs = _stack(key, 8, (512,))
+        dense = jnp.mean(gs, axis=0)
+        errs = {}
+        for s in (0.25, 4.0):
+            mean, _ = hier_allreduce_nsd(gs, key, HierConfig(pods=2, s=s))
+            errs[s] = float(jnp.max(jnp.abs(mean - dense)))
+        assert errs[0.25] < errs[4.0], errs
+
+    def test_bf16_dtype_preserved(self, key):
+        gs = _stack(key, 4, (320,)).astype(jnp.bfloat16)
+        mean, _ = hier_allreduce_nsd(gs, key, HierConfig(pods=2))
+        assert mean.dtype == jnp.bfloat16
+
+
+class TestTopologyThreading:
+    def test_comm_policy_selects_reduce_cfg(self):
+        assert CommPolicy().reduce_cfg() is None
+        r = CommPolicy(topology="ring", s=2.0).reduce_cfg()
+        assert isinstance(r, RingConfig) and r.s == 2.0
+        h = CommPolicy(topology="hier", pods=4, s=0.5).reduce_cfg()
+        assert isinstance(h, HierConfig) and h.pods == 4 and h.s == 0.5
+
+    def test_bad_topology_rejected(self):
+        with pytest.raises(ValueError, match="topology"):
+            CommPolicy(topology="mesh2d")
+        with pytest.raises(ValueError, match="pods"):
+            CommPolicy(topology="hier", pods=0)
+
+    def test_node_topology_descriptor(self):
+        topo = NodeTopology(pods=2, nodes_per_pod=4)
+        assert topo.n_nodes == 8
+        assert topo.link_kind("pods") == "dcn"
+        assert topo.link_kind("nodes") == "ici"
+        flat = NodeTopology.flat(4)
+        assert flat.pods == 1 and flat.n_nodes == 4
+
+    def test_node_topology_builds_mesh(self):
+        # single CPU device in tier-1: only the degenerate mesh builds
+        topo = NodeTopology(pods=1, nodes_per_pod=jax.device_count())
+        mesh = make_node_mesh(topo)
+        assert mesh.shape[topo.node_axis] == jax.device_count()
+
+    def test_price_reduce_prefers_hier_across_pods(self, key):
+        """The cost model must show the tree winning once the reduce
+        spans pods (the flat ring is gated by DCN every round)."""
+        gs = _stack(key, 8, (64, 64), scale=0.01)
+        _, ring_tele = ring_allreduce_nsd(gs, key, RingConfig(s=2.0))
+        _, hier_tele = hier_allreduce_nsd(gs, key, HierConfig(pods=2, s=2.0))
+        ring_t = price_reduce(ring_tele, nodes=8, pods=2)
+        hier_t = price_reduce(hier_tele, nodes=8, pods=2)
+        assert hier_t["dcn_s"] < ring_t["dcn_s"]
+        assert hier_t["total_s"] < ring_t["total_s"]
+        # single-pod ring pays no DCN
+        assert price_reduce(ring_tele, nodes=8, pods=1)["dcn_s"] == 0.0
+
+    def test_price_reduce_custom_bandwidths(self, key):
+        gs = _stack(key, 4, (256,))
+        _, tele = hier_allreduce_nsd(gs, key, HierConfig(pods=2))
+        cheap = price_reduce(tele, nodes=4, pods=2,
+                             pricing=LinkPricing(dcn_bw=1e9))
+        fast = price_reduce(tele, nodes=4, pods=2,
+                            pricing=LinkPricing(dcn_bw=1e12))
+        assert cheap["dcn_s"] > fast["dcn_s"]
+
+    def test_ssgd_step_topologies_learn_and_report(self, key):
+        from repro.configs import paper_models as pm
+        from repro.core import DitherPolicy
+        from repro.data import ClassifConfig, classification_batch
+        from repro.distributed import SSGDConfig, make_ssgd_step, shard_batch
+        from repro.optim import OptConfig, init_opt_state
+
+        model = pm.mlp_mnist(hidden=(32, 32))
+        params, _ = model.init(key)
+        opt = OptConfig(lr=1e-2)
+        batch = classification_batch(
+            ClassifConfig(n_classes=10, img_size=28, channels=1), 0, batch=8)
+        for topo, pods in (("ring", 1), ("hier", 2)):
+            dcfg = SSGDConfig(n_nodes=4)
+            step_fn, _ = make_ssgd_step(
+                model, opt, dcfg, DitherPolicy(variant="paper"),
+                comm_policy=CommPolicy(default="nsd", s=1.0,
+                                       topology=topo, pods=pods))
+            state = init_opt_state(params, opt)
+            _, _, m = step_fn(params, state, shard_batch(batch, 4), key)
+            assert float(m["loss"]) > 0, topo
+            assert 0 < float(m["comm_wire_bytes"]) < \
+                float(m["comm_dense_bytes"]), topo
+            assert float(m["comm_error_bound"]) > 0, topo
+
+    def test_trainer_prices_topology_in_history(self, key):
+        from repro.configs import get_smoke_model
+        from repro.data import TokenStreamConfig, token_batch
+        from repro.optim import OptConfig
+        from repro.train.trainer import Trainer, TrainerConfig
+
+        model = get_smoke_model("mamba2-370m")
+        tscfg = TokenStreamConfig(vocab=model.cfg.vocab, seq_len=16, batch=8)
+        trainer = Trainer(
+            model, OptConfig(lr=1e-3),
+            TrainerConfig(total_steps=4, log_every=2),
+            comm_policy=CommPolicy(default="nsd", s=0.5),
+            topology=NodeTopology(pods=2, nodes_per_pod=4))
+        out = trainer.fit(iter(token_batch(tscfg, i) for i in range(20)))
+        row = out["history"][-1]
+        assert row["comm_wire_mb"] > 0
+        assert row["comm_ici_s"] > 0
+        assert row["comm_dcn_s"] > row["comm_ici_s"]  # DCN is the slow axis
+
+    def test_benchmark_compare_topologies_json_fields(self, tmp_path):
+        sys.path.insert(0, os.path.abspath(
+            os.path.join(os.path.dirname(__file__), "..")))
+        from benchmarks.distributed_nodes import (compare_topologies,
+                                                  write_topology_json)
+        result = compare_topologies(n_nodes=4, pods=2, shape=(64, 64))
+        path = write_topology_json(result, str(tmp_path / "topo.json"))
+        import json
+        with open(path) as f:
+            loaded = json.load(f)
+        by_topo = {r["topology"]: r for r in loaded["rows"]}
+        assert set(by_topo) == {"ring", "hier"}
+        for r in by_topo.values():  # the acceptance-criterion fields
+            for field in ("wire_bytes", "ici_s", "dcn_s", "total_s",
+                          "error_bound", "packs_per_segment"):
+                assert field in r, field
+            stat_utils.assert_within_bound(r["max_err"], r["error_bound"])
+        assert "wire_dcn_bytes" in by_topo["hier"]
+
+
+# --- sim vs shard_map differential tests (virtual multi-device) ---------
+
+def _run_script(script: str) -> str:
+    env = dict(os.environ, PYTHONPATH=os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    return out.stdout + out.stderr
+
+
+HIER_SHARDMAP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import functools
+    import jax, jax.numpy as jnp
+    from repro.comm import (HierConfig, allreduce_hier, hier_allreduce_nsd,
+                            make_hier_allreduce)
+    from repro.launch.mesh import NodeTopology, make_node_mesh
+    key = jax.random.PRNGKey(0)
+    gs = jnp.stack([jax.random.normal(jax.random.fold_in(key, i), (37, 13))
+                    for i in range(8)])
+    for pods, per_pod in ((2, 4), (4, 2)):
+        mesh = make_node_mesh(NodeTopology(pods=pods, nodes_per_pod=per_pod))
+        cfg = HierConfig(pods=pods, s=1.0)
+        means, w_ici, w_dcn, bounds = make_hier_allreduce(mesh, cfg)(gs, key)
+        sim = jax.jit(functools.partial(hier_allreduce_nsd, cfg=cfg))
+        sim_mean, tele = sim(gs, key)
+        # every node holds the identical result...
+        for i in range(1, 8):
+            assert float(jnp.max(jnp.abs(means[i] - means[0]))) == 0.0
+        # ...bit-exactly equal to the simulation (same hop math and keys;
+        # final-state equality transitively pins every hop)
+        assert float(jnp.max(jnp.abs(means[0] - sim_mean))) == 0.0, pods
+        # measured wire bytes agree per link class, bound per segment sum
+        assert float(jnp.sum(w_ici)) == float(tele.wire_ici_bytes)
+        assert float(jnp.sum(w_dcn)) == float(tele.wire_dcn_bytes)
+        assert abs(float(bounds[0]) - float(tele.error_bound)) < 1e-6
+        # dispatcher path + telemetry consistency
+        mean_d, tele_d = allreduce_hier(gs, key, cfg, mesh=mesh)
+        assert float(jnp.max(jnp.abs(mean_d - sim_mean))) == 0.0
+        assert float(tele_d.dense_bytes) == float(tele.dense_bytes)
+        assert tele_d.packs_per_segment == tele.packs_per_segment
+    # node/mesh mismatch must be rejected, not silently dropped
+    mesh = make_node_mesh(NodeTopology(pods=2, nodes_per_pod=4))
+    try:
+        allreduce_hier(gs[:6], key, HierConfig(pods=2), mesh=mesh)
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("node/mesh mismatch not rejected")
+    print("HIER_SHARDMAP_OK")
+""")
+
+
+NONPOW2_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=6"
+    import functools
+    import jax, jax.numpy as jnp
+    from repro.comm import HierConfig, hier_allreduce_nsd, make_hier_allreduce
+    from repro.launch.mesh import NodeTopology, make_node_mesh
+    key = jax.random.PRNGKey(1)
+    gs = jnp.stack([jax.random.normal(jax.random.fold_in(key, i), (40,))
+                    for i in range(6)])
+    # G=3 pods: the binomial tree has an absent partner in round 2
+    mesh = make_node_mesh(NodeTopology(pods=3, nodes_per_pod=2))
+    cfg = HierConfig(pods=3, s=1.0)
+    means, w_ici, w_dcn, bounds = make_hier_allreduce(mesh, cfg)(gs, key)
+    sim_mean, tele = jax.jit(
+        functools.partial(hier_allreduce_nsd, cfg=cfg))(gs, key)
+    for i in range(6):
+        assert float(jnp.max(jnp.abs(means[i] - sim_mean))) == 0.0, i
+    assert float(jnp.sum(w_ici)) == float(tele.wire_ici_bytes)
+    assert float(jnp.sum(w_dcn)) == float(tele.wire_dcn_bytes)
+    assert abs(float(bounds[0]) - float(tele.error_bound)) < 1e-6
+    err = float(jnp.max(jnp.abs(sim_mean - jnp.mean(gs, 0))))
+    assert err <= float(tele.error_bound) * 1.001
+    print("NONPOW2_OK")
+""")
+
+
+def test_shardmap_hier_subprocess():
+    """The real two-level exchange: packed pytrees ppermute over BOTH mesh
+    axes and agree bit-exactly with the simulation (2x4 and 4x2)."""
+    out = _run_script(HIER_SHARDMAP_SCRIPT)
+    assert "HIER_SHARDMAP_OK" in out, out
+
+
+def test_shardmap_hier_nonpow2_pods_subprocess():
+    """Same differential with a non-power-of-two pod-group count (G=3)."""
+    out = _run_script(NONPOW2_SCRIPT)
+    assert "NONPOW2_OK" in out, out
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 (virtual) devices — run under "
+                           "XLA_FLAGS=--xla_force_host_platform_device_"
+                           "count=8 (the CI comm job does)")
+def test_hier_shardmap_inprocess(key):
+    """In-process variant for the multi-device CI job: no subprocess, so
+    failures produce a real traceback."""
+    import functools
+    from repro.comm import make_hier_allreduce
+    mesh = make_node_mesh(NodeTopology(pods=2, nodes_per_pod=4))
+    cfg = HierConfig(pods=2, s=1.0)
+    gs = _stack(key, 8, (129,))
+    means, w_ici, w_dcn, bounds = make_hier_allreduce(mesh, cfg)(gs, key)
+    sim_mean, tele = jax.jit(
+        functools.partial(hier_allreduce_nsd, cfg=cfg))(gs, key)
+    assert float(jnp.max(jnp.abs(means[0] - sim_mean))) == 0.0
+    assert float(jnp.sum(w_ici)) == float(tele.wire_ici_bytes)
+    assert float(jnp.sum(w_dcn)) == float(tele.wire_dcn_bytes)
