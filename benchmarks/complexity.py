@@ -5,15 +5,16 @@ x1.5-x8 at 75-95 % sparsity) and this repo's TPU-native equivalents.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List
 
-from repro.core import DitherPolicy
+from repro.bench import BenchResult, Gate
 from repro.configs import paper_models as pm
+from repro.core import DitherPolicy
 
 from benchmarks.harness import train_classifier
 
 
-def bench(quick: bool = True) -> List[Tuple[str, float, str]]:
+def bench(quick: bool = True) -> List[BenchResult]:
     out = []
     for name, factory in (("mlp-mnist", lambda: pm.mlp_mnist(hidden=(500, 500))),
                           ("lenet5", pm.lenet5)):
@@ -26,10 +27,11 @@ def bench(quick: bool = True) -> List[Tuple[str, float, str]]:
         ideal = 1.0 / max(p_nz, 1e-6)
         # TPU-native equivalents implemented here: int8 MXU backward (2x)
         # and, when sparsity is row-structured, contraction-dim shrink
-        tpu_int8 = 2.0
-        out.append((
-            f"complexity/{name}", r["us_per_step"],
-            f"p_nz={p_nz:.3f} ideal_sparse_speedup=x{ideal:.1f} "
-            f"(paper cites x1.5-x8 on SCNN at this range) "
-            f"tpu_int8_bwd=x{tpu_int8:.1f} structural"))
+        out.append(BenchResult(
+            name=f"complexity/{name}", value=r["us_per_step"],
+            unit="us/step",
+            derived={"p_nz": p_nz, "ideal_sparse_speedup": ideal,
+                     "tpu_int8_bwd": 2.0},
+            gates={"p_nz": Gate(abs=0.08, direction="high")},
+            context={"note": "paper cites x1.5-x8 on SCNN at this range"}))
     return out

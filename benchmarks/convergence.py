@@ -4,6 +4,7 @@ from __future__ import annotations
 
 from typing import Dict, List
 
+from repro.bench import BenchResult, Gate
 from repro.configs import paper_models as pm
 from repro.core import DitherPolicy
 
@@ -25,13 +26,20 @@ def run(steps: int = 80) -> List[Dict]:
     return rows
 
 
-def bench(quick: bool = True):
+def bench(quick: bool = True) -> List[BenchResult]:
+    """The convergence-parity claim as a gate: each method's accuracy gap
+    to the in-run baseline (``dacc``) must not open up."""
     rows = run(steps=40 if quick else 120)
     base = next(r for r in rows if r["method"] == "baseline")
     out = []
     for r in rows:
-        out.append((
-            f"fig3/{r['method']}", r["us_per_step"],
-            f"acc={r['acc']:.1f}% final_loss={r['final_loss']:.3f}"
-            f" dacc={r['acc'] - base['acc']:+.1f}"))
+        out.append(BenchResult(
+            name=f"fig3/{r['method']}",
+            value=r["us_per_step"],
+            unit="us/step",
+            derived={"acc": r["acc"], "final_loss": r["final_loss"],
+                     "dacc": r["acc"] - base["acc"]},
+            gates={"acc": Gate(abs=10.0, direction="low"),
+                   "dacc": Gate(abs=8.0, direction="low")},
+        ))
     return out

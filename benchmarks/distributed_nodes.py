@@ -23,6 +23,7 @@ from typing import Dict, List
 import jax
 import jax.numpy as jnp
 
+from repro.bench import BenchResult, Gate
 from repro.comm import (CommPolicy, HierConfig, RingConfig,
                         hier_allreduce_nsd, ring_allreduce_nsd, tree_rounds)
 from repro.configs import paper_models as pm
@@ -150,18 +151,31 @@ def write_topology_json(result: Dict, path: str = RESULTS_JSON) -> str:
     return path
 
 
-def bench(quick: bool = True):
+def bench(quick: bool = True) -> List[BenchResult]:
+    """Scaling sweep + topology race.
+
+    Sweep rows gate accuracy/sparsity (training claims) and the wire
+    ratio (compression claim; high = regression). Topology rows gate the
+    deterministic reduce invariants tightly: packs per segment is exact,
+    wire bytes and the analytic error bound move only if the algorithm
+    changes.
+    """
     rows = run(node_counts=(1, 2, 4) if quick else (1, 2, 4, 8, 16),
                steps=30 if quick else 80)
     out = []
     for r in rows:
-        derived = (f"s={r['s']:.2f} acc={r['acc']:.1f}%"
-                   f" sparsity={r['sparsity']:.1f}%"
-                   f" bits={r['max_bits']:.0f}")
+        derived = {"s": r["s"], "acc": r["acc"], "sparsity": r["sparsity"],
+                   "max_bits": r["max_bits"]}
+        gates = {"acc": Gate(abs=10.0, direction="low"),
+                 "sparsity": Gate(abs=8.0, direction="low"),
+                 "max_bits": Gate(abs=1.0, direction="high")}
         if "wire_ratio" in r:
-            derived += (f" wire={r['wire_ratio'] * 100:.1f}%dense"
-                        f" ({r['comm_speedup']:.1f}x link speedup)")
-        out.append((f"fig5-6/N={r['n_nodes']}", r["us_per_step"], derived))
+            derived.update(wire_mb=r["wire_mb"], wire_ratio=r["wire_ratio"],
+                           comm_speedup=r["comm_speedup"])
+            gates["wire_ratio"] = Gate(rel=0.15, direction="high")
+        out.append(BenchResult(
+            name=f"fig5-6/N={r['n_nodes']}", value=r["us_per_step"],
+            unit="us/step", derived=derived, gates=gates))
     # topology race: flat ring vs two-level reduce, recorded as JSON
     t0 = time.perf_counter()
     cmp = compare_topologies(n_nodes=8, pods=2,
@@ -169,13 +183,21 @@ def bench(quick: bool = True):
     us = (time.perf_counter() - t0) * 1e6
     write_topology_json(cmp)
     for r in cmp["rows"]:
-        out.append((
-            f"topology/{r['topology']}/N={r['n_nodes']}", us,
-            f"packs={r['packs_per_segment']}"
-            f" bound={r['error_bound']:.3e}"
-            f" wire={r['wire_bytes'] / 1e3:.1f}kB"
-            f" ici={r['ici_s'] * 1e6:.1f}us dcn={r['dcn_s'] * 1e6:.1f}us"
-            f" total={r['total_s'] * 1e6:.1f}us"))
+        out.append(BenchResult(
+            name=f"topology/{r['topology']}/N={r['n_nodes']}", value=us,
+            unit="us",
+            derived={"packs_per_segment": float(r["packs_per_segment"]),
+                     "error_bound": r["error_bound"],
+                     "max_err": r["max_err"],
+                     "wire_kb": r["wire_bytes"] / 1e3,
+                     "ici_us": r["ici_s"] * 1e6,
+                     "dcn_us": r["dcn_s"] * 1e6,
+                     "total_us": r["total_s"] * 1e6},
+            gates={"packs_per_segment": Gate(abs=0.0, direction="both"),
+                   "error_bound": Gate(rel=0.05, direction="high"),
+                   "wire_kb": Gate(rel=0.05, direction="high")},
+            context={"pods": cmp["pods"], "shape": "x".join(
+                str(d) for d in cmp["shape"])}))
     return out
 
 

@@ -5,7 +5,6 @@ import time
 from typing import Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import DitherCtx, DitherPolicy

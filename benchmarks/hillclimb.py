@@ -14,15 +14,13 @@ which pins 512 host devices):
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 
 def variants_for(arch: str, shape: str) -> Dict[str, dict]:
     """Named variant registry. Keys map to EXPERIMENTS.md §Perf entries."""
     from repro.core.policy import DitherPolicy
-    from repro.launch import costmodel
     from repro.launch.dryrun import make_rules
 
     V: Dict[str, dict] = {"baseline(paper)": {}}

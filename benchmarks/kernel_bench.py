@@ -4,18 +4,26 @@ Wall-clock here is interpret-mode (CPU) and NOT indicative of TPU perf; the
 meaningful derived metric is the *work-skipped fraction* (tiles masked off)
 and the dense-vs-kernel FLOP ratio, which transfer to hardware. The numbers
 feed EXPERIMENTS.md §Perf alongside the dry-run roofline terms.
+
+The bitmap pack/unpack pair is additionally timed in BOTH interpret and
+compiled mode. On CPU the compiled path is structurally unavailable
+(``compiled=0`` in the row context); on a TPU host the same suite records
+the compiled/interpret gap, so the lowering win of the sublane-rotate
+layout shows up in the committed perf trajectory the day the suite runs on
+hardware.
 """
 from __future__ import annotations
 
 import time
-from typing import List, Tuple
+from typing import List
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import nsd
+from repro.bench import BenchResult, Gate
 from repro.core.rowdither import row_dither_compact
 from repro.kernels.ops import dithered_backward_matmuls, nsd_quantize_kernel
+from repro.kernels.pack.pack import bitmap_pack_blocked, bitmap_unpack_blocked
 
 
 def _time(fn, *args, reps=3):
@@ -27,7 +35,40 @@ def _time(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def bench(quick: bool = True) -> List[Tuple[str, float, str]]:
+def _bench_pack(k8: jax.Array) -> List[BenchResult]:
+    """Pack/unpack rows: interpret timing gated metrics + compiled gap."""
+    out = []
+    bitmap, nnz = bitmap_pack_blocked(k8, interpret=True)
+    sparsity = 1.0 - float(jnp.sum(nnz)) / k8.size
+    # bitmap wire cost vs the dense f32 tensor it indexes: 1/32 by layout
+    ratio = bitmap.size / (k8.size * 4)
+    for name, fn, args in (
+            ("pack_bitmap", bitmap_pack_blocked, (k8,)),
+            ("unpack_bitmap", bitmap_unpack_blocked, (bitmap,))):
+        us_interp = _time(lambda f=fn, a=args: f(*a, interpret=True))
+        derived = {"elem_sparsity": sparsity, "bitmap_dense_ratio": ratio}
+        context = {"compiled": 0,
+                   "shape": "x".join(str(d) for d in k8.shape)}
+        try:
+            us_comp = _time(lambda f=fn, a=args: f(*a, interpret=False))
+            context["compiled"] = 1
+            # only present when the compiled path exists: a NaN here would
+            # make the BENCH json invalid for strict parsers
+            derived["compiled_speedup"] = us_interp / max(us_comp, 1e-9)
+        except Exception as e:
+            # record WHY: on CPU this is the expected no-compiled-pallas
+            # error, but on a TPU host it would be a Mosaic lowering
+            # failure — exactly the signal this row exists to surface
+            context["compile_error"] = repr(e)[:160]
+        out.append(BenchResult(
+            name=f"kern/{name}", value=us_interp, unit="us(interpret)",
+            derived=derived,
+            gates={"bitmap_dense_ratio": Gate(abs=0.0, direction="both")},
+            context=context))
+    return out
+
+
+def bench(quick: bool = True) -> List[BenchResult]:
     key = jax.random.PRNGKey(0)
     out = []
     T, K, N = (512, 512, 512) if quick else (2048, 1024, 2048)
@@ -40,19 +81,29 @@ def bench(quick: bool = True) -> List[Tuple[str, float, str]]:
         k_q, delta, nnz = nsd_quantize_kernel(g, key, s, bm=128, bn=128)
         sp = float(jnp.mean(k_q == 0))
         tiles_skipped = float(jnp.mean(nnz == 0))
-        out.append((f"kern/nsd_quant_s{s:g}", us,
-                    f"elem_sparsity={sp:.3f} tile_skip={tiles_skipped:.3f}"))
+        out.append(BenchResult(
+            name=f"kern/nsd_quant_s{s:g}", value=us, unit="us",
+            derived={"elem_sparsity": sp, "tile_skip": tiles_skipped},
+            gates={"elem_sparsity": Gate(abs=0.05, direction="low")}))
 
     us = _time(lambda: dithered_backward_matmuls(
         g, x, w, key, 2.0, int8_operands=True))
-    out.append(("kern/dithered_bwd_int8", us,
-                f"shape=({T},{K},{N}) both products int8-MXU path"))
+    out.append(BenchResult(
+        name="kern/dithered_bwd_int8", value=us, unit="us",
+        context={"shape": f"({T},{K},{N})",
+                 "note": "both products int8-MXU path"}))
 
     # structured row dither: fraction of rows (=MXU work) removed
     for alpha in (1.0, 2.0):
         c = row_dither_compact(g, key, alpha, capacity=T)
         kept = float(c.n_rows) / T
         us = _time(lambda: row_dither_compact(g, key, alpha, capacity=T))
-        out.append((f"kern/row_dither_a{alpha:g}", us,
-                    f"rows_kept={kept:.3f} contraction_flops_x{kept:.3f}"))
+        out.append(BenchResult(
+            name=f"kern/row_dither_a{alpha:g}", value=us, unit="us",
+            derived={"rows_kept": kept},
+            gates={"rows_kept": Gate(abs=0.15, direction="both")}))
+
+    # wire-format bitmap pack/unpack on the s=8 operating point
+    k8 = nsd_quantize_kernel(g, key, 8.0, bm=128, bn=128)[0]
+    out.extend(_bench_pack(k8))
     return out

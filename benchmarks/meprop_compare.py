@@ -5,6 +5,7 @@ from __future__ import annotations
 
 from typing import Dict, List
 
+from repro.bench import BenchResult, Gate
 from repro.configs import paper_models as pm
 from repro.core import DitherPolicy
 
@@ -31,21 +32,34 @@ def run(steps: int = 60) -> List[Dict]:
     return rows
 
 
-def bench(quick: bool = True):
+def bench(quick: bool = True) -> List[BenchResult]:
+    """One result per (method, operating point). Dithered points gate both
+    accuracy and sparsity; meProp points gate only accuracy (their sparsity
+    is the dialed-in k, not a claim)."""
     rows = run(steps=40 if quick else 100)
     out = []
     for r in rows:
-        out.append((
-            f"fig4/{r['method']}@{r['knob']}", r["us"],
-            f"acc={r['acc']:.1f}% sparsity={r['sparsity']:.1f}%"))
+        gates = {"acc": Gate(abs=10.0, direction="low")}
+        if r["method"] == "dithered":
+            gates["sparsity"] = Gate(abs=8.0, direction="low")
+        out.append(BenchResult(
+            name=f"fig4/{r['method']}@{r['knob']}",
+            value=r["us"],
+            unit="us/step",
+            derived={"acc": r["acc"], "sparsity": r["sparsity"]},
+            gates=gates,
+        ))
     return out
 
 
-def bench_hard(quick: bool = True):
+def bench_hard(quick: bool = True) -> List[BenchResult]:
     """fig4 on a HARD synthetic task (8x8, noise 3.0): the paper's ordering
     claim shows starkly here — biased top-k collapses while unbiased dither
     tracks the baseline. (The default task saturates at 100% accuracy and
-    cannot discriminate.)"""
+    cannot discriminate.) The hard task is noisier than the default, so
+    accuracy bands are wider, and meProp points are ungated entirely —
+    their collapse is the expected result, not a regression.
+    """
     from repro.models.api import cnn_model
     from repro.models.cnn import CNNConfig
 
@@ -57,18 +71,26 @@ def bench_hard(quick: bool = True):
     steps = 60 if quick else 150
     out = []
     r = train_classifier(model(), None, steps=steps, noise=3.0)
-    out.append(("fig4-hard/baseline", r["us_per_step"],
-                f"acc={r['acc']:.1f}%"))
+    out.append(BenchResult(
+        name="fig4-hard/baseline", value=r["us_per_step"], unit="us/step",
+        derived={"acc": r["acc"]},
+        gates={"acc": Gate(abs=20.0, direction="low")}))
     for s in (2.0, 4.0, 8.0):
         pol = DitherPolicy(variant="paper", s=s, collect_stats=True,
                            stats_tag=f"f4h/d{s}/")
         r = train_classifier(model(), pol, steps=steps, noise=3.0)
-        out.append((f"fig4-hard/dithered@s={s:g}", r["us_per_step"],
-                    f"acc={r['acc']:.1f}% sparsity={r.get('sparsity', 0):.1f}%"))
+        out.append(BenchResult(
+            name=f"fig4-hard/dithered@s={s:g}", value=r["us_per_step"],
+            unit="us/step",
+            derived={"acc": r["acc"], "sparsity": r.get("sparsity", 0.0)},
+            gates={"acc": Gate(abs=20.0, direction="low"),
+                   "sparsity": Gate(abs=8.0, direction="low")}))
     for k in (0.1, 0.03, 0.01):
         pol = DitherPolicy(variant="meprop", meprop_k_frac=k,
                            collect_stats=True, stats_tag=f"f4h/m{k}/")
         r = train_classifier(model(), pol, steps=steps, noise=3.0)
-        out.append((f"fig4-hard/meprop@k={k:g}", r["us_per_step"],
-                    f"acc={r['acc']:.1f}% sparsity={r.get('sparsity', 0):.1f}%"))
+        out.append(BenchResult(
+            name=f"fig4-hard/meprop@k={k:g}", value=r["us_per_step"],
+            unit="us/step",
+            derived={"acc": r["acc"], "sparsity": r.get("sparsity", 0.0)}))
     return out

@@ -5,7 +5,9 @@ from __future__ import annotations
 
 import json
 import os
-from typing import List, Tuple
+from typing import List
+
+from repro.bench import BenchResult
 
 DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..",
                             "results", "dryrun_grid.json")
@@ -42,24 +44,42 @@ def render(cells, mesh: str = "16x16") -> str:
     return "\n".join(lines)
 
 
-def bench(quick: bool = True) -> List[Tuple[str, float, str]]:
+def bench(quick: bool = True) -> List[BenchResult]:
+    """Ungated reader rows: the dry-run grid is an offline artifact, so
+    its absence is recorded (not failed) and its terms are informational
+    trajectory, not a CI gate.
+
+    The per-tag summary row is ALWAYS emitted under the same stable name
+    whether or not the grid file exists — the committed baseline holds
+    these names, and generating the grid later must surface the per-cell
+    rows as ``new`` (passing), never flip the summary to ``missing``
+    (failing)."""
     out = []
     for tag, path in (("baseline", DEFAULT_PATH),
                       ("optimized", OPTIMIZED_PATH)):
-        if not os.path.exists(path):
-            out.append((f"roofline/{tag}", 0.0,
-                        "grid not found - run repro.launch.dryrun --all"))
-            continue
-        for c in load(path):
-            # multi-pod cells skip the scan-cost anchor correction (they
-            # exist to prove the pod axis lowers), so only single-pod rows
-            # carry valid roofline terms
-            if c["status"] != "OK" or c["mesh"] != "16x16":
-                continue
-            r = c["report"]
-            out.append((
-                f"roofline-{tag}/{c['arch']}/{c['shape']}",
-                max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
-                f"dom={r['dominant']} frac={r['roofline_fraction']:.4f} "
-                f"useful={r['useful_ratio']:.3f}"))
+        cells = []
+        if os.path.exists(path):
+            for c in load(path):
+                # multi-pod cells skip the scan-cost anchor correction
+                # (they exist to prove the pod axis lowers), so only
+                # single-pod rows carry valid roofline terms
+                if c["status"] != "OK" or c["mesh"] != "16x16":
+                    continue
+                r = c["report"]
+                cells.append(BenchResult(
+                    name=f"roofline-{tag}/{c['arch']}/{c['shape']}",
+                    value=max(r["compute_s"], r["memory_s"],
+                              r["collective_s"]) * 1e6,
+                    unit="us",
+                    derived={"roofline_fraction": r["roofline_fraction"],
+                             "useful_ratio": r["useful_ratio"]},
+                    context={"dominant": r["dominant"]}))
+            note = "grid loaded"
+        else:
+            note = "grid not found - run repro.launch.dryrun --all"
+        out.append(BenchResult(
+            name=f"roofline/{tag}", value=0.0, unit="us",
+            derived={"cells": float(len(cells))},
+            context={"note": note}))
+        out.extend(cells)
     return out

@@ -1,20 +1,43 @@
-"""Benchmark runner — one entry per paper table/figure.
+"""Legacy CSV front-end over ``benchmarks.suite`` (the one runner).
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only table1,...]
 
-Prints ``name,us_per_call,derived`` CSV rows. Paper mapping:
+Prints ``name,us_per_call,derived`` CSV rows exactly as before; execution,
+JSON persistence and error handling all live in ``benchmarks.suite`` (a
+suite that raises prints its traceback there and this process exits
+non-zero — failures are never swallowed into a green exit). For the
+regression gate use ``python -m benchmarks.suite --check``.
+
+Paper mapping of the legacy names:
   table1     -> Table 1 (acc + sparsity, 4 methods x models)
   fig3       -> Fig 3/.7/.8 (convergence parity)
-  fig4       -> Fig 4/.9 (dither vs meProp at matched sparsity)
+  fig4       -> Fig 4/.9 (dither vs meProp, incl. hard-task variant)
   fig5-6     -> Fig 5/6/.10/.11 (distributed: s(N) scaling)
-  kern       -> kernel microbenches (tile-skip & int8 path)
+  kern       -> kernel microbenches (tile-skip, int8 path, bitmap pack)
   roofline   -> dry-run roofline table (deliverable g)
 """
 from __future__ import annotations
 
 import argparse
 import sys
-import traceback
+
+from benchmarks import suite as suitelib
+
+# legacy CLI name -> suite.py name. NOTE: fig4 and fig4-hard are both
+# aliases for the combined meprop_compare suite (suite granularity is the
+# unit of execution and baselining now), so selecting either runs the
+# standard sweep AND the hard-task variant; `--only fig4,fig4-hard` runs
+# the suite once, not twice.
+LEGACY_NAMES = {
+    "table1": "table1_sparsity",
+    "fig3": "convergence",
+    "fig4": "meprop_compare",
+    "fig4-hard": "meprop_compare",
+    "fig5-6": "distributed_nodes",
+    "kern": "kernel_bench",
+    "complexity": "complexity",
+    "roofline": "roofline_table",
+}
 
 
 def main() -> None:
@@ -22,40 +45,24 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="full model set + longer runs")
     ap.add_argument("--only", default="",
-                    help="comma list: table1,fig3,fig4,fig5-6,kern,roofline")
+                    help=f"comma list: {','.join(LEGACY_NAMES)}")
     args = ap.parse_args()
-    quick = not args.full
-    only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (complexity, convergence, distributed_nodes,
-                            kernel_bench, meprop_compare, roofline_table,
-                            table1_sparsity)
+    names: list = []
+    for legacy in (args.only.split(",") if args.only else LEGACY_NAMES):
+        if legacy not in LEGACY_NAMES:
+            ap.error(f"unknown suite {legacy!r}; known: "
+                     f"{','.join(LEGACY_NAMES)}")
+        mapped = LEGACY_NAMES[legacy]
+        if mapped not in names:
+            names.append(mapped)
 
-    suites = {
-        "table1": table1_sparsity.bench,
-        "fig3": convergence.bench,
-        "fig4": meprop_compare.bench,
-        "fig4-hard": meprop_compare.bench_hard,
-        "fig5-6": distributed_nodes.bench,
-        "kern": kernel_bench.bench,
-        "complexity": complexity.bench,
-        "roofline": roofline_table.bench,
-    }
     print("name,us_per_call,derived")
-    failed = 0
-    for name, fn in suites.items():
-        if only is not None and name not in only:
-            continue
-        try:
-            for row_name, us, derived in fn(quick=quick):
-                print(f"{row_name},{us:.1f},{derived}")
-                sys.stdout.flush()
-        except Exception:
-            failed += 1
-            traceback.print_exc()
-            print(f"{name},nan,SUITE_FAILED")
-    if failed:
-        sys.exit(1)
+    runs, failed = suitelib.run_suites(names, quick=not args.full)
+    for run in runs.values():
+        for r in run.results:
+            print(f"{r.name},{r.value:.1f},{r.derived_str()}")
+    sys.exit(1 if failed else 0)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,200 @@
+"""The one benchmark runner: execute suites, persist BENCH_*.json, gate.
+
+    PYTHONPATH=src python -m benchmarks.suite [--full] [--only a,b]
+        [--check] [--rebaseline] [--results-dir D] [--baseline-dir D]
+
+Each suite under ``benchmarks/`` exposes ``bench(quick) ->
+List[BenchResult]``; this runner wraps the results in a provenance-stamped
+``SuiteRun`` (git sha, jax version, backend, quick flag) and writes
+``BENCH_<suite>.json`` to ``benchmarks/results/`` — the machine-readable
+perf trajectory the repo previously lacked.
+
+``--check`` compares every run against the committed baseline in
+``benchmarks/baselines/`` with the per-metric tolerance bands the suites
+declare (``repro.bench.compare`` policy: missing bench or out-of-band
+gated metric fails; new bench / absent baseline file passes) and exits
+non-zero on any regression. ``--rebaseline`` copies the fresh results
+over the committed baselines — rerun it after an intentional perf or
+metric change and commit the diff.
+
+A suite that raises is reported with a full traceback and the runner
+exits non-zero (``status: error`` in the summary) — exceptions are never
+swallowed into a green exit code. ``benchmarks.run`` is a thin CSV
+front-end over this module; there is exactly one runner.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import traceback
+from typing import Dict, List, Optional, Tuple
+
+from repro.bench import SuiteRun, compare_runs, make_suite_run
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+RESULTS_DIR = os.path.join(HERE, "results")
+BASELINE_DIR = os.path.join(HERE, "baselines")
+
+
+def _suite_fns() -> Dict[str, callable]:
+    """Import lazily so ``--help`` stays fast and import errors surface
+    per-suite rather than killing the whole runner."""
+    from benchmarks import (complexity, convergence, distributed_nodes,
+                            kernel_bench, meprop_compare, roofline_table,
+                            table1_sparsity)
+
+    def meprop_both(quick: bool = True):
+        return (meprop_compare.bench(quick=quick)
+                + meprop_compare.bench_hard(quick=quick))
+
+    return {
+        "table1_sparsity": table1_sparsity.bench,
+        "convergence": convergence.bench,
+        "meprop_compare": meprop_both,
+        "distributed_nodes": distributed_nodes.bench,
+        "kernel_bench": kernel_bench.bench,
+        "complexity": complexity.bench,
+        "roofline_table": roofline_table.bench,
+    }
+
+
+SUITE_NAMES = ("table1_sparsity", "convergence", "meprop_compare",
+               "distributed_nodes", "kernel_bench", "complexity",
+               "roofline_table")
+
+
+def result_path(suite: str, results_dir: str = RESULTS_DIR) -> str:
+    return os.path.join(results_dir, f"BENCH_{suite}.json")
+
+
+def baseline_path(suite: str, baseline_dir: str = BASELINE_DIR) -> str:
+    return os.path.join(baseline_dir, f"BENCH_{suite}.json")
+
+
+def write_run(run: SuiteRun, path: str) -> str:
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    with open(path, "w") as f:
+        # allow_nan=False: a NaN metric would serialize as a bare `NaN`
+        # literal, making the artifact unreadable for strict JSON parsers
+        # (jq, JS) — fail loudly at write time instead
+        json.dump(run.to_dict(), f, indent=1, sort_keys=True,
+                  allow_nan=False)
+        f.write("\n")
+    return path
+
+
+def load_run(path: str) -> Optional[SuiteRun]:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return SuiteRun.from_dict(json.load(f))
+
+
+def run_suites(names: List[str], *, quick: bool = True,
+               results_dir: str = RESULTS_DIR
+               ) -> Tuple[Dict[str, SuiteRun], List[str]]:
+    """Execute ``names`` in order; returns (completed runs, failed names).
+
+    A failing suite gets its traceback printed and is recorded in the
+    failure list — never silently skipped, never fatal to later suites.
+    """
+    fns = _suite_fns()
+    runs: Dict[str, SuiteRun] = {}
+    failed: List[str] = []
+    for name in names:
+        print(f"[suite] running {name} ({'quick' if quick else 'full'})",
+              file=sys.stderr, flush=True)
+        try:
+            results = fns[name](quick=quick)
+            run = make_suite_run(name, results, quick=quick)
+            # inside the try: a NaN metric makes write_run's strict json
+            # raise, which must fail THIS suite, not abort the rest
+            path = write_run(run, result_path(name, results_dir))
+        except Exception:
+            traceback.print_exc()
+            print(f"[suite] {name}: ERROR (see traceback above)",
+                  file=sys.stderr, flush=True)
+            failed.append(name)
+            continue
+        print(f"[suite] {name}: {len(run.results)} results -> {path}",
+              file=sys.stderr, flush=True)
+        runs[name] = run
+    return runs, failed
+
+
+def check_runs(runs: Dict[str, SuiteRun], *,
+               baseline_dir: str = BASELINE_DIR,
+               verbose: bool = False) -> List[str]:
+    """Compare runs against committed baselines; returns failing suites."""
+    failing = []
+    for name, run in runs.items():
+        base = load_run(baseline_path(name, baseline_dir))
+        report = compare_runs(run, base)
+        print(report.render(verbose=verbose), flush=True)
+        if not report.ok:
+            failing.append(name)
+    return failing
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="run benchmark suites, write BENCH_*.json, gate "
+                    "against committed baselines")
+    ap.add_argument("--full", action="store_true",
+                    help="full model set + longer runs (default: quick)")
+    ap.add_argument("--quick", action="store_true",
+                    help="explicit quick mode (the default; kept so CI "
+                    "invocations self-document)")
+    ap.add_argument("--only", default="",
+                    help=f"comma list of suites from: {','.join(SUITE_NAMES)}")
+    ap.add_argument("--check", action="store_true",
+                    help="compare against committed baselines; exit "
+                    "non-zero on regression")
+    ap.add_argument("--rebaseline", action="store_true",
+                    help="copy this run's results over the committed "
+                    "baselines (then commit the diff)")
+    ap.add_argument("--results-dir", default=RESULTS_DIR)
+    ap.add_argument("--baseline-dir", default=BASELINE_DIR)
+    ap.add_argument("--verbose", action="store_true",
+                    help="print every comparison, not just notable ones")
+    args = ap.parse_args(argv)
+    if args.full and args.quick:
+        ap.error("--full and --quick are mutually exclusive")
+
+    names = [n for n in args.only.split(",") if n] or list(SUITE_NAMES)
+    unknown = [n for n in names if n not in SUITE_NAMES]
+    if unknown:
+        ap.error(f"unknown suite(s) {unknown}; known: {SUITE_NAMES}")
+
+    runs, failed = run_suites(names, quick=not args.full,
+                              results_dir=args.results_dir)
+    rc = 0
+    if failed:
+        print(f"[suite] FAILED suites: {failed}", flush=True)
+        rc = 1
+
+    # check BEFORE rebaseline: `--rebaseline --check` must report drift
+    # against the OLD committed baselines, not the ones this run is about
+    # to write — otherwise the combination is a vacuous always-green gate
+    if args.check:
+        failing = check_runs(runs, baseline_dir=args.baseline_dir,
+                             verbose=args.verbose)
+        if failing:
+            print(f"[suite] perf gate FAILED: {failing}", flush=True)
+            rc = 1
+        else:
+            print("[suite] perf gate OK", flush=True)
+
+    if args.rebaseline:
+        for name, run in runs.items():
+            path = write_run(run, baseline_path(name, args.baseline_dir))
+            print(f"[suite] rebaselined {name} -> {path}", flush=True)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,6 +5,7 @@ from __future__ import annotations
 
 from typing import Dict, List
 
+from repro.bench import BenchResult, Gate
 from repro.configs import paper_models as pm
 from repro.core import DitherPolicy
 
@@ -55,17 +56,36 @@ def run(quick: bool = True, steps: int = 50) -> List[Dict]:
     return rows
 
 
-def bench(quick: bool = True):
-    """CSV rows for benchmarks.run: name,us_per_call,derived."""
+def bench(quick: bool = True) -> List[BenchResult]:
+    """BenchResults for benchmarks.suite — one per Table-1 model row.
+
+    Gated: accuracies must not drop (the paper's parity claim) and induced
+    sparsity must not collapse (the paper's efficiency claim). Bands cover
+    seed/platform jitter of a ~50-step synthetic run; timing is recorded
+    but never gated.
+    """
     out = []
     for row in run(quick=quick):
-        derived = (f"acc_base={row['baseline_acc']:.1f}%"
-                   f" acc_dith={row['dithered_acc']:.1f}%"
-                   f" sp_base={row['baseline_sparsity']:.1f}%"
-                   f" sp_dith={row['dithered_sparsity']:.1f}%"
-                   f" bits={row['dithered_bits']:.0f}"
-                   f" acc_8bit_dith={row['int8+dith_acc']:.1f}%"
-                   f" sp_8bit_dith={row['int8+dith_sparsity']:.1f}%")
-        out.append((f"table1/{row['model']}",
-                    row["us_per_step_dithered"], derived))
+        out.append(BenchResult(
+            name=f"table1/{row['model']}",
+            value=row["us_per_step_dithered"],
+            unit="us/step",
+            derived={
+                "baseline_acc": row["baseline_acc"],
+                "dithered_acc": row["dithered_acc"],
+                "int8_dith_acc": row["int8+dith_acc"],
+                "baseline_sparsity": row["baseline_sparsity"],
+                "dithered_sparsity": row["dithered_sparsity"],
+                "int8_dith_sparsity": row["int8+dith_sparsity"],
+                "dithered_bits": row["dithered_bits"],
+                "us_per_step_baseline": row["us_per_step_baseline"],
+            },
+            gates={
+                "dithered_acc": Gate(abs=10.0, direction="low"),
+                "int8_dith_acc": Gate(abs=10.0, direction="low"),
+                "dithered_sparsity": Gate(abs=8.0, direction="low"),
+                "int8_dith_sparsity": Gate(abs=8.0, direction="low"),
+                "dithered_bits": Gate(abs=1.0, direction="high"),
+            },
+        ))
     return out

@@ -10,8 +10,6 @@ power of two, gradient accumulation scaled up to hold the global batch).
 """
 import tempfile
 
-import jax
-import numpy as np
 
 from repro.configs import get_smoke_model
 from repro.core import DitherPolicy

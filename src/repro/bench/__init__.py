@@ -1,0 +1,23 @@
+"""repro.bench — machine-readable benchmark results + regression gate.
+
+Schema (``BenchResult``/``SuiteRun``/``Gate``) and comparator
+(``compare_runs``) shared by every suite under ``benchmarks/`` and the
+``benchmarks.suite`` runner that writes ``BENCH_<suite>.json`` files and
+enforces tolerance bands against committed baselines.
+"""
+from repro.bench.compare import CompareReport, Finding, compare_runs
+from repro.bench.schema import (BOUND_SLACK, SCHEMA_VERSION, BenchResult,
+                                Gate, SuiteRun, git_sha, make_suite_run)
+
+__all__ = [
+    "BOUND_SLACK",
+    "SCHEMA_VERSION",
+    "BenchResult",
+    "CompareReport",
+    "Finding",
+    "Gate",
+    "SuiteRun",
+    "compare_runs",
+    "git_sha",
+    "make_suite_run",
+]

@@ -69,7 +69,6 @@ def row_dither_compact(
     """
     shape = g.shape
     g2d = g.reshape(-1, shape[-1])
-    r = g2d.shape[0]
     p = _row_probs(g2d, alpha)
     u = jax.random.uniform(key, p.shape, dtype=jnp.float32)
     keep = u < p

@@ -13,7 +13,7 @@ shard by host without coordination (and re-shard after elastic resize).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Tuple
+from typing import Dict, Iterator
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +34,7 @@ from repro.core import nsd
 from repro.core import stats as statslib
 from repro.core.policy import DitherCtx, DitherPolicy, name_salt
 from repro.models.api import Model
-from repro.optim import OptConfig, apply_updates, init_opt_state
+from repro.optim import OptConfig, apply_updates
 from repro.utils.pytree import tree_map_with_path_str
 
 __all__ = ["SSGDConfig", "ErrorFeedbackState", "int8_allreduce_sim",

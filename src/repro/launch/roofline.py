@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 # --- TPU v5e per-chip constants (assignment-provided) ---
 PEAK_BF16_FLOPS = 197e12

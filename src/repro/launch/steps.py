@@ -1,7 +1,7 @@
 """Train / serve step factories shared by the trainer, server and dry-run."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

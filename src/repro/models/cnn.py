@@ -13,13 +13,12 @@ every pre-activation carries a probe ``tap`` for Table-1 telemetry.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import conv2d, dense
-from repro.core.policy import DitherCtx
 from repro.core.probe import tap
 from repro.models import layers as L
 
@@ -100,9 +99,6 @@ def init_lenet5(key, cfg: CNNConfig):
     ini.normal("c2_w", (5, 5, 6, 16), (None, None, None, None), fan_in=150)
     ini.zeros("c2_b", (16,), (None,))
     init_bn(ini, "bn2", 16)
-    flat = ((cfg.img_size // 4) - 1) ** 2 * 16 if cfg.img_size == 28 else \
-        (cfg.img_size // 4) ** 2 * 16
-    # compute exactly below in forward; use img 28 -> 4x4x16=256? keep generic
     d1 = _lenet5_flat(cfg.img_size) * 16
     ini.normal("fc1_w", (d1, 120), (None, None), fan_in=d1)
     ini.zeros("fc1_b", (120,), (None,))
@@ -267,7 +263,6 @@ def resnet18_forward(params, cfg: CNNConfig, x, *, ctx=None, taps=None):
     z = conv2d(h, params["stem_w"], padding="SAME", ctx=ctx, name="stem")
     z = tap(z, taps, "stem")
     h = jax.nn.relu(batchnorm(z, params["stem_bn_g"], params["stem_bn_b"]))
-    cin = 64
     bi = 0
     for cout, blocks, stride in _RESNET18:
         for b in range(blocks):
@@ -288,7 +283,6 @@ def resnet18_forward(params, cfg: CNNConfig, x, *, ctx=None, taps=None):
                 idn = batchnorm(idn, params[f"b{bi}_bnd_g"],
                                 params[f"b{bi}_bnd_b"])
             h = jax.nn.relu(h2 + idn)
-            cin = cout
             bi += 1
     h = jnp.mean(h, axis=(1, 2))
     return dense(h, params["fc_w"], params["fc_b"], ctx=ctx, name="fc")

@@ -8,7 +8,7 @@ decoder = causal self-attn + cross-attn + GELU MLP with learned positions.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

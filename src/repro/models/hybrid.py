@@ -9,12 +9,11 @@ Sub-quadratic by construction (window + O(1) SSM state) → carries long_500k.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import dense
 from repro.core.policy import DitherCtx
 from repro.models import layers as L
 from repro.models import mamba as M

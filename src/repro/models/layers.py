@@ -81,9 +81,9 @@ def stack_layers(layer_trees):
     return params, specs
 
 
-def layer_slice(stacked: Params, l: int) -> Params:
+def layer_slice(stacked: Params, idx: int) -> Params:
     """Static per-layer view of scanned (L, ...) params (decode path)."""
-    return jax.tree.map(lambda a: a[l], stacked)
+    return jax.tree.map(lambda a: a[idx], stacked)
 
 
 # ---------------------------------------------------------------------------

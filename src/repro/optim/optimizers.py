@@ -9,7 +9,7 @@ the train step extends to the moments automatically.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -83,8 +83,9 @@ def init_opt_state(params, cfg: OptConfig) -> Dict[str, Any]:
 
 def opt_state_specs(param_specs, cfg: OptConfig):
     """Logical-axis spec tree mirroring init_opt_state's structure."""
-    is_spec = lambda s: s is None or (isinstance(s, tuple) and all(
-        a is None or isinstance(a, str) for a in s))
+    def is_spec(s):
+        return s is None or (isinstance(s, tuple) and all(
+            a is None or isinstance(a, str) for a in s))
     scalar = ()
     master = jax.tree.map(lambda s: s, param_specs, is_leaf=is_spec)
     out = {"step": scalar, "master": master}

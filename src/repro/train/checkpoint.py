@@ -135,7 +135,7 @@ class CheckpointManager:
         d = _step_dir(self.base, step)
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
-        crc_by_name = {l["name"]: l["crc"] for l in manifest["leaves"]}
+        crc_by_name = {leaf["name"]: leaf["crc"] for leaf in manifest["leaves"]}
         data: Dict[str, np.ndarray] = {}
         for fn in sorted(os.listdir(d)):
             if fn.startswith("shard_") and fn.endswith(".npz"):

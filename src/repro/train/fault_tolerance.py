@@ -25,8 +25,7 @@ from __future__ import annotations
 import dataclasses
 import signal
 import threading
-import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 
 # --------------------------------------------------------------------------

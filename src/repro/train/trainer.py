@@ -92,9 +92,9 @@ class Trainer:
 
             def acc_fn(carry, ib):
                 i, b = ib
-                l, g = jax.value_and_grad(one_loss)(params, b, i)
+                lv, g = jax.value_and_grad(one_loss)(params, b, i)
                 loss_acc, g_acc = carry
-                return (loss_acc + l / n,
+                return (loss_acc + lv / n,
                         jax.tree.map(lambda a, x: a + x / n, g_acc, g)), None
 
             zero = (jnp.zeros(()),

@@ -3,7 +3,6 @@ RoPE properties, and the Pallas kernel-variant training path."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import DitherCtx, DitherPolicy, dense
 from repro.models import layers as L

@@ -1,0 +1,245 @@
+"""repro.bench: schema round-trip + regression-comparator policy.
+
+The comparator is the thing CI trusts, so every policy branch is pinned
+here: missing baseline file, brand-new bench name, within-tolerance
+drift, injected regression (must fail), dropped bench (must fail), and
+the exact JSON round trip of the schema. The suite runner's CLI gate is
+exercised end-to-end on the cheap roofline suite.
+"""
+import json
+
+import pytest
+
+from repro.bench import (BenchResult, Gate, SuiteRun, compare_runs,
+                         make_suite_run)
+
+
+def _result(name="table1/lenet5", value=100.0, acc=97.0, sparsity=90.0,
+            **over):
+    kw = dict(
+        name=name, value=value, unit="us/step",
+        derived={"acc": acc, "sparsity": sparsity},
+        gates={"acc": Gate(abs=2.0, direction="low"),
+               "sparsity": Gate(rel=0.05, direction="low")},
+        context={"model": "lenet5"})
+    kw.update(over)
+    return BenchResult(**kw)
+
+
+def _run(results, suite="table1_sparsity", quick=True):
+    return SuiteRun(suite=suite, results=results, git_sha="abc1234",
+                    jax_version="0.4.37", platform="cpu", quick=quick)
+
+
+class TestSchemaRoundTrip:
+    def test_bench_result_json_round_trip(self):
+        r = _result()
+        r2 = BenchResult.from_dict(json.loads(json.dumps(r.to_dict())))
+        assert r2 == r
+
+    def test_suite_run_json_round_trip(self):
+        run = _run([_result(), _result(name="table1/mlp", acc=99.0)])
+        run2 = SuiteRun.from_dict(json.loads(json.dumps(run.to_dict())))
+        assert run2 == run
+        assert run2.by_name()["table1/lenet5"].gates["acc"].direction == "low"
+
+    def test_provenance_stamped(self):
+        run = make_suite_run("kernel_bench", [_result()], quick=True)
+        assert run.jax_version != "unknown"
+        assert run.platform in ("cpu", "tpu", "gpu", "METAL")
+
+    def test_derived_str_is_legacy_csv_cell(self):
+        s = _result().derived_str()
+        assert "acc=97" in s and "model=lenet5" in s
+
+
+class TestComparatorPolicy:
+    def test_missing_baseline_file_passes(self):
+        report = compare_runs(_run([_result()]), None)
+        assert report.ok
+        assert [f.status for f in report.findings] == ["no-baseline"]
+
+    def test_brand_new_bench_name_passes(self):
+        base = _run([_result()])
+        cur = _run([_result(), _result(name="table1/resnet18", acc=80.0)])
+        report = compare_runs(cur, base)
+        assert report.ok
+        assert {f.status for f in report.findings} >= {"new", "ok"}
+
+    def test_within_tolerance_drift_passes(self):
+        base = _run([_result(acc=97.0, sparsity=90.0)])
+        cur = _run([_result(acc=95.5, sparsity=86.0)])  # inside both bands
+        report = compare_runs(cur, base)
+        assert report.ok, report.render(verbose=True)
+
+    def test_injected_regression_fails(self):
+        base = _run([_result(acc=97.0)])
+        cur = _run([_result(acc=90.0)])  # 7 points below a ±2.0 band
+        report = compare_runs(cur, base)
+        assert not report.ok
+        (bad,) = report.regressions
+        assert (bad.bench, bad.metric) == ("table1/lenet5", "acc")
+
+    def test_dropped_bench_fails(self):
+        base = _run([_result(), _result(name="table1/mlp")])
+        cur = _run([_result()])
+        report = compare_runs(cur, base)
+        assert [f.status for f in report.regressions] == ["missing"]
+
+    def test_timing_drift_never_fails(self):
+        base = _run([_result(value=100.0)])
+        cur = _run([_result(value=5000.0)])  # 50x slower, ungated
+        assert compare_runs(cur, base).ok
+
+    def test_gate_direction_low_allows_improvement(self):
+        base = _run([_result(acc=90.0, sparsity=85.0)])
+        cur = _run([_result(acc=99.9, sparsity=95.0)])  # strictly better
+        assert compare_runs(cur, base).ok
+
+    def test_gate_direction_high_blocks_increase_only(self):
+        g = {"wire_ratio": Gate(rel=0.10, direction="high")}
+        base = _run([_result(derived={"wire_ratio": 0.06}, gates=g)])
+        up = _run([_result(derived={"wire_ratio": 0.09}, gates=g)])
+        down = _run([_result(derived={"wire_ratio": 0.01}, gates=g)])
+        assert not compare_runs(up, base).ok
+        assert compare_runs(down, base).ok
+
+    def test_exact_gate_abs_zero(self):
+        g = {"packs": Gate(abs=0.0, direction="both")}
+        base = _run([_result(derived={"packs": 10.0}, gates=g)])
+        same = _run([_result(derived={"packs": 10.0}, gates=g)])
+        off = _run([_result(derived={"packs": 11.0}, gates=g)])
+        assert compare_runs(same, base).ok
+        assert not compare_runs(off, base).ok
+
+    def test_gate_on_missing_metric_is_suite_bug(self):
+        g = {"ghost": Gate(abs=1.0)}
+        base = _run([_result(gates=g)])
+        cur = _run([_result(gates=g)])
+        report = compare_runs(cur, base)
+        assert not report.ok  # gate names a metric the suite never emitted
+
+    def test_quick_vs_full_mismatch_is_visible_not_gated(self):
+        """Full-mode numbers (bigger shapes, more steps) are incomparable
+        to a quick-mode baseline — the comparator must surface the
+        mismatch instead of failing spuriously."""
+        base = _run([_result(acc=97.0)], quick=True)
+        cur = _run([_result(acc=10.0)], quick=False)  # would hard-fail
+        report = compare_runs(cur, base)
+        assert report.ok
+        assert [f.status for f in report.findings] == ["mode-mismatch"]
+
+    def test_current_gates_are_authoritative(self):
+        """Retightening a band in suite code takes effect immediately even
+        though the committed baseline still carries the old gate."""
+        base = _run([_result(acc=97.0,
+                             gates={"acc": Gate(abs=50.0, direction="low")})])
+        cur = _run([_result(acc=90.0,
+                            gates={"acc": Gate(abs=2.0, direction="low")})])
+        assert not compare_runs(cur, base).ok
+
+
+class TestSuiteRunnerGate:
+    """End-to-end CLI gate on the cheapest suite (roofline reads files)."""
+
+    @pytest.fixture()
+    def dirs(self, tmp_path):
+        res, base = tmp_path / "results", tmp_path / "baselines"
+        res.mkdir(), base.mkdir()
+        return str(res), str(base)
+
+    def test_check_passes_without_baseline_and_writes_json(self, dirs):
+        from benchmarks import suite as suitelib
+        res, base = dirs
+        rc = suitelib.main(["--only", "roofline_table", "--check",
+                            "--results-dir", res, "--baseline-dir", base])
+        assert rc == 0
+        out = json.load(open(suitelib.result_path("roofline_table", res)))
+        assert out["suite"] == "roofline_table"
+        assert out["schema_version"] == 1
+        assert out["results"], "suite must emit at least one result"
+
+    def test_check_fails_on_injected_regression(self, dirs):
+        from benchmarks import suite as suitelib
+        res, base = dirs
+        # baseline expects a bench the current run doesn't produce
+        phantom = _run([_result(name="roofline/phantom")],
+                       suite="roofline_table")
+        suitelib.write_run(phantom,
+                           suitelib.baseline_path("roofline_table", base))
+        rc = suitelib.main(["--only", "roofline_table", "--check",
+                            "--results-dir", res, "--baseline-dir", base])
+        assert rc == 1
+
+    def test_rebaseline_then_check_is_green(self, dirs):
+        from benchmarks import suite as suitelib
+        res, base = dirs
+        rc = suitelib.main(["--only", "roofline_table", "--rebaseline",
+                            "--results-dir", res, "--baseline-dir", base])
+        assert rc == 0
+        rc = suitelib.main(["--only", "roofline_table", "--check",
+                            "--results-dir", res, "--baseline-dir", base])
+        assert rc == 0
+
+    def test_rebaseline_plus_check_gates_against_old_baseline(self, dirs):
+        """--check must compare against the PRE-rebaseline files; running
+        both flags together may not become a vacuous always-green gate."""
+        from benchmarks import suite as suitelib
+        res, base = dirs
+        phantom = _run([_result(name="roofline/phantom")],
+                       suite="roofline_table")
+        suitelib.write_run(phantom,
+                           suitelib.baseline_path("roofline_table", base))
+        rc = suitelib.main(["--only", "roofline_table", "--rebaseline",
+                            "--check", "--results-dir", res,
+                            "--baseline-dir", base])
+        assert rc == 1  # phantom bench was missing vs the OLD baseline
+        refreshed = json.load(
+            open(suitelib.baseline_path("roofline_table", base)))
+        names = {r["name"] for r in refreshed["results"]}
+        assert "roofline/phantom" not in names  # but baselines refreshed
+
+    def test_nan_metric_fails_one_suite_not_the_runner(self, dirs,
+                                                       monkeypatch):
+        """strict-JSON write errors (NaN metric) count as that suite's
+        failure; later suites still run and persist."""
+        from benchmarks import suite as suitelib
+
+        def fns():
+            return {
+                "bad": lambda quick=True: [
+                    _result(derived={"acc": float("nan")})],
+                "good": lambda quick=True: [_result()],
+            }
+
+        monkeypatch.setattr(suitelib, "_suite_fns", fns)
+        res, _ = dirs
+        runs, failed = suitelib.run_suites(["bad", "good"],
+                                           results_dir=res)
+        assert failed == ["bad"]
+        assert "good" in runs
+        json.load(open(suitelib.result_path("good", res)))  # intact
+
+    def test_roofline_summary_names_are_stable(self):
+        """The committed baseline holds roofline/{baseline,optimized};
+        those names must exist whether or not the grid file does, so
+        generating the grid later can never flip them to `missing`."""
+        from benchmarks import roofline_table
+        names = {r.name for r in roofline_table.bench()}
+        assert {"roofline/baseline", "roofline/optimized"} <= names
+
+    def test_suite_exception_exits_nonzero(self, dirs, monkeypatch):
+        """A raising suite prints its traceback and fails the run — the
+        legacy swallow-and-continue-green behavior must not come back."""
+        from benchmarks import suite as suitelib
+
+        def boom():
+            def bench(quick=True):
+                raise RuntimeError("injected suite failure")
+            return {"roofline_table": bench}
+
+        monkeypatch.setattr(suitelib, "_suite_fns", boom)
+        res, base = dirs
+        rc = suitelib.main(["--only", "roofline_table",
+                            "--results-dir", res, "--baseline-dir", base])
+        assert rc == 1

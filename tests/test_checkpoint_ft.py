@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.train import (CheckpointManager, PreemptionGuard, StragglerConfig,
+from repro.train import (CheckpointManager, StragglerConfig,
                          StragglerDetector, list_steps, make_restart_plan,
                          plan_elastic_mesh)
 

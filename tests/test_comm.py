@@ -95,19 +95,18 @@ class TestWireFormat:
                                       np.asarray(want))
 
 
-# Compiled-mode guard: interpret=True must pass everywhere; the compiled
-# variant is the red/green signal for the ROADMAP "TPU-compiled pack
-# kernels" item. On CPU the backend itself refuses compiled pallas_call,
-# and on real TPUs the lane-dim reshape still needs the sublane-rotate +
-# OR-reduce layout — xfail(strict=False) turns both into a visible xfail
-# today and an unexpected-pass marker the day the kernel compiles.
+# Compiled-mode guard: interpret=True must pass everywhere. The kernels
+# now use the Mosaic-lowerable sublane-rotate + OR-reduce layout (no
+# lane-dim reshape — tests/test_pack_layout.py pins that structurally),
+# but CPU still has no compiled pallas_call at all, so the compiled
+# variant stays xfail(strict=False): a visible xfail on CPU CI and a
+# plain pass on a real TPU host.
 INTERPRET_MODES = [
     True,
     pytest.param(False, marks=pytest.mark.xfail(
         strict=False,
-        reason="ROADMAP: bitmap pack/unpack only validates in interpret "
-               "mode; compiled TPU layout (sublane rotate + OR-reduce) "
-               "pending, and CPU has no compiled pallas at all")),
+        reason="CPU has no compiled pallas; on TPU the sublane-rotate "
+               "layout is expected to compile and pass")),
 ]
 
 

@@ -4,7 +4,6 @@ hybrid/meta-token paths."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models import hybrid as H
 from repro.models import transformer as tf

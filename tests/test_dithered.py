@@ -3,7 +3,6 @@ variant dispatch, telemetry."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (DitherCtx, DitherPolicy, conv2d, dense,
                         dithered_einsum, nsd)

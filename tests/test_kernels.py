@@ -6,7 +6,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import int8 as int8lib
 from repro.core import nsd
 from repro.kernels.bsp_matmul.bsp_matmul import bsp_matmul, bsp_matmul_int8
 from repro.kernels.bsp_matmul.ref import bsp_matmul_int8_ref, bsp_matmul_ref

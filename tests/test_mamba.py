@@ -6,7 +6,6 @@ import numpy as np
 import pytest
 
 from repro.models import mamba as M
-from repro.models import layers as L
 
 
 def _naive_ssd(x, dt, A, Bm, Cm):

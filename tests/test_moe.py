@@ -9,7 +9,6 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models.moe import MoEConfig, init_moe, moe_einsum
 

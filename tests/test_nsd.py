@@ -8,7 +8,6 @@ eq. 6 bound via tests/stat_utils.py — no hand-tuned fudge factors.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 import stat_utils
 
 from repro.core import nsd

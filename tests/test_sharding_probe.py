@@ -3,7 +3,6 @@ serving engine."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec
 
 from repro.core import int8 as int8lib

@@ -7,9 +7,7 @@ These are the system-level analogues of Table 1:
   * and it composes with 8-bit forward layers.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.paper_models import mlp_mnist
 from repro.core import DitherCtx, DitherPolicy
@@ -110,7 +108,7 @@ class TestTrainServeRoundtrip:
                 yield token_batch(tcfg, i)
                 i += 1
 
-        out = trainer.fit(it())
+        trainer.fit(it())
         assert trainer.ckpt.latest_step() == 10
 
         # restore into a fresh trainer and serve
