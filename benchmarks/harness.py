@@ -2,29 +2,35 @@
 from __future__ import annotations
 
 import time
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple, Union
 
 import jax
 import numpy as np
 
-from repro.core import DitherCtx, DitherPolicy
+from repro.core import DitherCtx, DitherPolicy, PolicyProgram
 from repro.core import stats as statslib
+from repro.core.schedule import ControllerDriver, as_program
 from repro.data import ClassifConfig, classification_batch
 from repro.models.api import Model
 from repro.models.cnn import accuracy
 from repro.optim import OptConfig, apply_updates, init_opt_state
 
 
-def train_classifier(model: Model, policy: Optional[DitherPolicy], *,
+def train_classifier(model: Model,
+                     policy: Optional[Union[DitherPolicy, PolicyProgram]], *,
                      steps: int = 60, batch: int = 64, lr: float = 0.05,
                      seed: int = 0, noise: float = 0.5,
                      img: Optional[Tuple[int, int]] = None,
                      n_classes: int = 10) -> Dict[str, float]:
     """Paper-recipe SGD training on the synthetic classification set.
 
+    ``policy`` may be a full PolicyProgram (phases retrace at their
+    boundaries; knob schedules and the controller ride the compiled step).
     Returns acc%, mean dither sparsity%, worst-case bits, us/step.
     """
-    if policy is not None and policy.collect_stats:
+    program = as_program(policy)
+    collect = program is not None and program.base.collect_stats
+    if collect:
         statslib.reset()
     cfg = model.cfg
     img_size, channels = (cfg.img_size, cfg.in_channels) if img is None else img
@@ -38,30 +44,50 @@ def train_classifier(model: Model, policy: Optional[DitherPolicy], *,
     dcfg = ClassifConfig(n_classes=n_classes, img_size=img_size,
                          channels=channels, noise=noise, seed=seed)
 
-    @jax.jit
-    def step_fn(params, state, b, bk):
-        ctx = (DitherCtx.for_step(bk, state["step"], policy)
-               if policy is not None and policy.enabled else None)
+    def step_body(params, state, b, bk, ctrl, phase_pol):
+        ctx = (DitherCtx.for_step(bk, state["step"], phase_pol,
+                                  program=program, ctrl=ctrl or None)
+               if phase_pol is not None and program.step_enabled(phase_pol)
+               else None)
         loss, grads = jax.value_and_grad(
             lambda p: model.loss(p, b, ctx=ctx))(params)
         params, state, _ = apply_updates(params, grads, state, opt_cfg)
         return params, state, loss
 
+    step_fn = jax.jit(step_body, static_argnames=("phase_pol",))
+    ctrl = ControllerDriver(program)
+    if ctrl.active:
+        ctrl.ensure_init(lambda p, b, ctx: model.loss(p, b, ctx=ctx), params,
+                         classification_batch(dcfg, 0, batch=batch))
+
+    def phase_at(i: int):
+        return program.phase_policy_at(i) if program is not None else None
+
     # warmup/compile
     b0 = classification_batch(dcfg, 0, batch=batch)
-    params, state, _ = step_fn(params, state, b0, key)
-    t0 = time.perf_counter()
+    params, state, _ = step_fn(params, state, b0, key, ctrl.state,
+                               phase_pol=phase_at(0))
+    ctrl.tick()
+    # time each step body (incl. the loss sync) but keep the controller's
+    # host tick — which drains the async telemetry via an effects barrier —
+    # OUTSIDE the timed region, so controller runs report step cost, not
+    # host-sync overhead
+    timed_s = 0.0
     losses = []
     for i in range(1, steps):
         b = classification_batch(dcfg, i, batch=batch)
-        params, state, loss = step_fn(params, state, b, key)
+        t1 = time.perf_counter()
+        params, state, loss = step_fn(params, state, b, key, ctrl.state,
+                                      phase_pol=phase_at(i))
         losses.append(float(loss))
-    dt_us = (time.perf_counter() - t0) / max(steps - 1, 1) * 1e6
+        timed_s += time.perf_counter() - t1
+        ctrl.tick()
+    dt_us = timed_s / max(steps - 1, 1) * 1e6
     test = classification_batch(dcfg, 10**6, batch=512)
     acc = float(accuracy(params, cfg, test)) * 100
     out = {"acc": acc, "us_per_step": dt_us,
            "final_loss": losses[-1] if losses else float("nan")}
-    if policy is not None and policy.collect_stats:
+    if collect:
         out["sparsity"] = statslib.overall_sparsity() * 100
         out["max_bits"] = statslib.overall_max_bits()
     return out

@@ -10,18 +10,34 @@ Run as a module *only from a fresh process* (it imports repro.launch.dryrun
 which pins 512 host devices):
 
     PYTHONPATH=src python -m benchmarks.hillclimb --cell qwen2.5-32b:train_4k
+
+``bench()`` (the ``benchmarks.suite`` entry point) honors that constraint
+by running the cell in a subprocess — the suite's own jax is already
+initialized, so the 512-device pin could not take effect in-process — and
+folds the per-variant roofline rows into the BENCH_hillclimb.json
+SuiteRun like every other suite. Quick mode compiles the smoke config of
+one small arch (``--smoke``) with two variants; rows are informational
+trajectory (roofline terms of an AOT compile), not gated.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
+import tempfile
 from typing import Dict, List, Optional
 
 
 def variants_for(arch: str, shape: str) -> Dict[str, dict]:
-    """Named variant registry. Keys map to EXPERIMENTS.md §Perf entries."""
+    """Named variant registry. Keys map to EXPERIMENTS.md §Perf entries.
+
+    Must stay import-side-effect free: bench() calls it in the suite-runner
+    process just to derive placeholder row NAMES, so the dryrun import (an
+    XLA_FLAGS 512-device mutation at module top) happens lazily inside the
+    rules closures, which only ever run in the hillclimb subprocess."""
     from repro.core.policy import DitherPolicy
-    from repro.launch.dryrun import make_rules
 
     V: Dict[str, dict] = {"baseline(paper)": {}}
 
@@ -31,16 +47,22 @@ def variants_for(arch: str, shape: str) -> Dict[str, dict]:
 
     # sharding mutations
     def rules_seqshard(mesh, case, arch_id):
+        from repro.launch.dryrun import make_rules
+
         r = make_rules(mesh, case, arch_id)
         r.mapping["cache_seq"] = "model"
         return r
 
     def rules_fsdp(mesh, case, arch_id):
+        from repro.launch.dryrun import make_rules
+
         r = make_rules(mesh, case, arch_id)
         r.mapping["embed"] = "data" if "data" in mesh.shape else None
         return r
 
     def rules_no_act_constraints(mesh, case, arch_id):
+        from repro.launch.dryrun import make_rules
+
         r = make_rules(mesh, case, arch_id)
         for k in list(r.mapping):
             if k.startswith("act_"):
@@ -48,6 +70,8 @@ def variants_for(arch: str, shape: str) -> Dict[str, dict]:
         return r
 
     def rules_seq_parallel_train(mesh, case, arch_id):
+        from repro.launch.dryrun import make_rules
+
         r = make_rules(mesh, case, arch_id)
         r.mapping["seq"] = "model"
         return r
@@ -63,7 +87,9 @@ def variants_for(arch: str, shape: str) -> Dict[str, dict]:
 
 
 def run_variants(arch: str, shape: str, names: Optional[List[str]] = None,
-                 extra: Optional[Dict[str, dict]] = None):
+                 extra: Optional[Dict[str, dict]] = None,
+                 smoke: bool = False):
+    from repro.configs import get_smoke_model
     from repro.core.policy import DitherPolicy
     from repro.launch import dryrun
 
@@ -77,11 +103,17 @@ def run_variants(arch: str, shape: str, names: Optional[List[str]] = None,
         # default: the paper-faithful policy; variants may override (or None)
         policy = spec["policy"] if "policy" in spec \
             else DitherPolicy(variant="paper", s=2.0)
+        model_override = spec.get("model")
+        if smoke and model_override is None:
+            # CI-sized cells: the arch's reduced config on the real mesh,
+            # skipping the scan-anchor cost correction (compile-only probe)
+            model_override = get_smoke_model(arch)
         res = dryrun.run_cell(
             arch, shape,
             policy=policy,
             rules_override=spec.get("rules"),
-            model_override=spec.get("model"),
+            model_override=model_override,
+            correct_costs=not smoke,
             verbose=False)
         row = {"variant": name, "status": res.status,
                "compile_s": round(res.compile_s, 1)}
@@ -101,15 +133,96 @@ def run_variants(arch: str, shape: str, names: Optional[List[str]] = None,
     return rows
 
 
+QUICK_CELL = "gemma-2b:train_4k"
+QUICK_VARIANTS = ("baseline(paper)", "dither-off")
+FULL_CELL = "qwen2.5-32b:train_4k"
+SUBPROCESS_TIMEOUT_S = 1800
+
+
+def bench(quick: bool = True):
+    """benchmarks.suite entry point: hillclimb rows as BenchResults.
+
+    The cell runs in a fresh subprocess (dryrun must pin its 512 host
+    devices before jax initializes). A failed or timed-out compile emits
+    placeholder rows (status NOTRUN, the error in context) under the SAME
+    per-variant names — the comparator's missing-bench policy would
+    otherwise hard-fail ``--check`` on a CI host hiccup; since every
+    hillclimb metric is ungated trajectory, placeholders pass the gate
+    while keeping the failure visible in the artifact.
+    """
+    from repro.bench import BenchResult
+
+    cell = QUICK_CELL if quick else FULL_CELL
+    variants = QUICK_VARIANTS if quick else ()
+    here = os.path.dirname(os.path.abspath(__file__))
+    repo = os.path.dirname(here)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    rows, note = [], "ok"
+    with tempfile.TemporaryDirectory() as td:
+        out_path = os.path.join(td, "hillclimb.json")
+        cmd = [sys.executable, "-m", "benchmarks.hillclimb", "--cell", cell,
+               "--out", out_path]
+        if quick:
+            cmd += ["--smoke", "--variants", ",".join(QUICK_VARIANTS)]
+        try:
+            proc = subprocess.run(cmd, cwd=repo, env=env,
+                                  capture_output=True, text=True,
+                                  timeout=SUBPROCESS_TIMEOUT_S)
+            if proc.returncode != 0:
+                note = f"subprocess rc={proc.returncode}: " \
+                       f"{proc.stderr.strip()[-400:]}"
+            elif os.path.exists(out_path):
+                with open(out_path) as f:
+                    rows = json.load(f)
+            else:
+                note = "subprocess wrote no output"
+        except subprocess.TimeoutExpired:
+            note = f"subprocess timeout after {SUBPROCESS_TIMEOUT_S}s"
+
+    if not rows:
+        # placeholder rows keep the committed baseline's names present in
+        # BOTH modes; variants_for is import-side-effect free (its dryrun
+        # import is lazy inside the rules closures) so deriving names here
+        # cannot mutate this process's XLA_FLAGS / device count
+        expected = variants or tuple(variants_for(*cell.split(":")))
+        rows = [{"variant": v, "status": "NOTRUN", "compile_s": 0.0,
+                 "reason": note} for v in expected]
+
+    results = [BenchResult(
+        name="hillclimb/summary", value=0.0, unit="us",
+        derived={"cells": float(len(rows))},
+        context={"cell": cell, "mode": "smoke" if quick else "full",
+                 "variants": ",".join(variants) or "all", "note": note})]
+    for row in rows:
+        derived = {}
+        for k in ("compute_s", "memory_s", "collective_s", "frac", "useful"):
+            if k in row and isinstance(row[k], (int, float)):
+                derived[k] = float(row[k])
+        derived["status_ok"] = 1.0 if row.get("status") == "OK" else 0.0
+        results.append(BenchResult(
+            name=f"hillclimb/{cell}/{row['variant']}",
+            value=float(row.get("compile_s", 0.0)) * 1e6,
+            unit="us",
+            derived=derived,
+            context={k: str(row[k]) for k in ("status", "dominant", "reason")
+                     if k in row}))
+    return results
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", required=True, help="arch:shape")
     ap.add_argument("--variants", default="", help="comma list (default all)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the arch's reduced smoke config (CI-sized "
+                    "compile probe; skips the scan-anchor cost correction)")
     ap.add_argument("--out", default="")
     args = ap.parse_args()
     arch, shape = args.cell.split(":")
     names = [v for v in args.variants.split(",") if v] or None
-    rows = run_variants(arch, shape, names)
+    rows = run_variants(arch, shape, names, smoke=args.smoke)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(rows, f, indent=1, default=str)

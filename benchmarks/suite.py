@@ -42,8 +42,8 @@ def _suite_fns() -> Dict[str, callable]:
     """Import lazily so ``--help`` stays fast and import errors surface
     per-suite rather than killing the whole runner."""
     from benchmarks import (complexity, convergence, distributed_nodes,
-                            kernel_bench, meprop_compare, roofline_table,
-                            table1_sparsity)
+                            hillclimb, kernel_bench, layer_sparsity,
+                            meprop_compare, roofline_table, table1_sparsity)
 
     def meprop_both(quick: bool = True):
         return (meprop_compare.bench(quick=quick)
@@ -51,18 +51,20 @@ def _suite_fns() -> Dict[str, callable]:
 
     return {
         "table1_sparsity": table1_sparsity.bench,
+        "layer_sparsity": layer_sparsity.bench,
         "convergence": convergence.bench,
         "meprop_compare": meprop_both,
         "distributed_nodes": distributed_nodes.bench,
         "kernel_bench": kernel_bench.bench,
         "complexity": complexity.bench,
         "roofline_table": roofline_table.bench,
+        "hillclimb": hillclimb.bench,
     }
 
 
-SUITE_NAMES = ("table1_sparsity", "convergence", "meprop_compare",
-               "distributed_nodes", "kernel_bench", "complexity",
-               "roofline_table")
+SUITE_NAMES = ("table1_sparsity", "layer_sparsity", "convergence",
+               "meprop_compare", "distributed_nodes", "kernel_bench",
+               "complexity", "roofline_table", "hillclimb")
 
 
 def result_path(suite: str, results_dir: str = RESULTS_DIR) -> str:

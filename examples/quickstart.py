@@ -1,15 +1,22 @@
-"""Quickstart: dithered backprop in ~40 lines.
+"""Quickstart: dithered backprop with a per-layer policy program.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Trains a 2-layer MLP with the paper's NSD-quantized backward pass and prints
+Trains a 2-layer MLP with the paper's NSD-quantized backward pass under a
+PolicyProgram: an exact-backprop warmup phase, a linear ramp of the dither
+scale s, and a per-layer rule that dithers the first layer harder. Prints
 the induced pre-activation-gradient sparsity + worst-case bit-width — the
 two quantities of paper Table 1.
+
+The warmup -> paper phase switch recompiles once (the backward variant
+shapes the trace); the per-step s ramp is a traced knob and re-uses the
+compiled step for the whole run.
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import DitherCtx, DitherPolicy, dense
+from repro.core import (DitherCtx, DitherPolicy, LayerRule, Linear,
+                        PhaseSpec, PolicyProgram, dense)
 from repro.core import stats as statslib
 
 key = jax.random.PRNGKey(0)
@@ -25,9 +32,16 @@ params = {
     "w2": jax.random.normal(k2, (128, 1)) * 0.1,
 }
 
-# ONE knob: Delta = s * std(grad). collect_stats feeds the telemetry sink.
-policy = DitherPolicy(variant="paper", s=2.0, collect_stats=True,
-                      stats_tag="quickstart/")
+# The program: 20 exact warmup steps, then the paper's NSD backward with
+# Delta = s * std(grad) ramping from gentle (1.5) to aggressive (3.0),
+# while a rule pins fc1 at s=4.0 (per-layer override, last match wins).
+program = PolicyProgram(
+    base=DitherPolicy(variant="paper", s=2.0, collect_stats=True,
+                      stats_tag="quickstart/"),
+    phases=(PhaseSpec(0, "off"), PhaseSpec(20, "paper")),
+    s=Linear(20, 150, 1.5, 3.0),
+    rules=(LayerRule(pattern="fc1", s=4.0),),
+)
 
 
 def loss_fn(p, ctx):
@@ -36,15 +50,19 @@ def loss_fn(p, ctx):
     return jnp.mean((pred - Y) ** 2)
 
 
-@jax.jit
-def step(p, i):
-    ctx = DitherCtx.for_step(key, i, policy)
+# phase is a static arg (recompiles at the phase boundary, once); the step
+# index i and every knob the program derives from it are traced.
+def step(p, i, phase):
+    ctx = (DitherCtx.for_step(key, i, phase, program=program)
+           if phase.enabled else None)
     loss, g = jax.value_and_grad(loss_fn)(p, ctx)
     return jax.tree.map(lambda w, gw: w - 0.05 * gw, p, g), loss
 
 
+jit_step = jax.jit(step, static_argnames=("phase",))
+
 for i in range(200):
-    params, loss = step(params, i)
+    params, loss = jit_step(params, jnp.int32(i), program.phase_policy_at(i))
     if i % 50 == 0:
         print(f"step {i:4d} loss {float(loss):.4f}")
 
@@ -54,4 +72,5 @@ for layer, s in summ.items():
     print(f"{layer}: mean sparsity {s['mean_sparsity']*100:.1f}% "
           f"worst-case bits {s['max_bits']:.0f}")
 print(f"overall sparsity: {statslib.overall_sparsity()*100:.1f}% "
-      f"(paper reports 75-99% across models)")
+      f"(paper reports 75-99% across models; fc1 runs hotter — its rule "
+      f"pins s=4.0)")

@@ -13,12 +13,26 @@ from repro.core.nsd import (
 from repro.core.policy import (
     OFF,
     VARIANT_INT8,
+    VARIANT_KERNEL,
     VARIANT_MEPROP,
     VARIANT_OFF,
     VARIANT_PAPER,
     VARIANT_ROW,
     DitherCtx,
     DitherPolicy,
+    StaticSpec,
+    knobs_array,
+)
+from repro.core.schedule import (
+    Const,
+    LayerRule,
+    Linear,
+    PhaseSpec,
+    Piecewise,
+    PolicyProgram,
+    SparsityController,
+    as_program,
+    parse_program,
 )
 from repro.core.dithered import (
     conv2d,
@@ -26,14 +40,17 @@ from repro.core.dithered import (
     dithered_einsum,
     quantize_cotangent,
 )
-from repro.core import int8, meprop, probe, rowdither, stats
+from repro.core import int8, meprop, probe, rowdither, schedule, stats
 
 __all__ = [
     "QuantStats", "QuantizedGrad", "compute_delta", "dither_noise",
     "expected_sparsity_gaussian", "nsd_indices", "nsd_quantize",
     "nsd_quantize_int8", "quant_stats",
-    "OFF", "VARIANT_INT8", "VARIANT_MEPROP", "VARIANT_OFF", "VARIANT_PAPER",
-    "VARIANT_ROW", "DitherCtx", "DitherPolicy",
+    "OFF", "VARIANT_INT8", "VARIANT_KERNEL", "VARIANT_MEPROP", "VARIANT_OFF",
+    "VARIANT_PAPER", "VARIANT_ROW", "DitherCtx", "DitherPolicy", "StaticSpec",
+    "knobs_array",
+    "Const", "LayerRule", "Linear", "PhaseSpec", "Piecewise", "PolicyProgram",
+    "SparsityController", "as_program", "parse_program",
     "conv2d", "dense", "dithered_einsum", "quantize_cotangent",
-    "int8", "meprop", "probe", "rowdither", "stats",
+    "int8", "meprop", "probe", "rowdither", "schedule", "stats",
 ]

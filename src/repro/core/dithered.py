@@ -3,7 +3,7 @@
 Every weight-bearing contraction in the framework goes through ``dense`` /
 ``conv2d`` / ``dithered_einsum`` below. Forward is exact; the backward pass
 intercepts the pre-activation cotangent ``g`` (= delta_z in the paper),
-applies the policy's quantizer once, and reuses the quantized tensor for
+applies the resolved quantizer once, and reuses the quantized tensor for
 BOTH backward products:
 
     delta_a = g~ . W^T        (activation gradient, eq. 8)
@@ -11,7 +11,16 @@ BOTH backward products:
 
 Bias gradients (a cheap reduction, not a matmul) use the exact cotangent.
 
-Variants (policy.variant):
+Policy resolution is per layer name (``ctx.resolve(name)`` — rules, knob
+schedules and the sparsity controller live in ``repro.core.schedule``). The
+resolved result splits static from traced state:
+
+* ``StaticSpec`` (variant / telemetry) is the custom_vjp's static argument;
+* the numeric knobs ``[s, meprop_k_frac, row_alpha]`` arrive as a traced f32
+  ``(3,)`` array, so a schedule that changes ``s`` every step re-uses the
+  compiled backward — zero recompiles (pinned by tests/test_schedule.py).
+
+Variants (spec.variant):
   off     plain backprop
   paper   NSD in f32, products in the layer dtype      [faithful baseline]
   int8    NSD to (int8 k, Delta) + absmax-int8 x/w, both products on the
@@ -33,13 +42,16 @@ from repro.core import nsd
 from repro.core import rowdither
 from repro.core import stats as statslib
 from repro.core.policy import (
+    KNOB_MEPROP_K_FRAC,
+    KNOB_ROW_ALPHA,
+    KNOB_S,
     VARIANT_INT8,
     VARIANT_KERNEL,
     VARIANT_MEPROP,
     VARIANT_PAPER,
     VARIANT_ROW,
     DitherCtx,
-    DitherPolicy,
+    StaticSpec,
 )
 
 
@@ -48,30 +60,37 @@ from repro.core.policy import (
 # --------------------------------------------------------------------------
 
 def quantize_cotangent(
-    g: jax.Array, key: jax.Array, policy: DitherPolicy, name: str
+    g: jax.Array, key: jax.Array, knobs: jax.Array, spec: StaticSpec,
+    name: str
 ) -> jax.Array:
-    """Apply the policy's quantizer to a pre-activation cotangent."""
-    if policy.variant in (VARIANT_PAPER, VARIANT_INT8, VARIANT_KERNEL):
-        delta = nsd.compute_delta(g, policy.s)
+    """Apply the resolved quantizer to a pre-activation cotangent.
+
+    ``knobs`` is the traced [s, meprop_k_frac, row_alpha] vector; ``spec``
+    carries the static variant/telemetry switches.
+    """
+    if spec.variant in (VARIANT_PAPER, VARIANT_INT8, VARIANT_KERNEL):
+        delta = nsd.compute_delta(g, knobs[KNOB_S])
         k = nsd.nsd_indices(g, key, delta)
-        if policy.collect_stats:
-            statslib.emit(policy.stats_tag + name, nsd.quant_stats(k, delta))
+        if spec.collect_stats:
+            statslib.emit(spec.stats_tag + name, nsd.quant_stats(k, delta))
         return (k.astype(jnp.float32) * delta).astype(g.dtype)
-    if policy.variant == VARIANT_ROW:
-        out = rowdither.row_dither(g, key, policy.row_alpha)
-        if policy.collect_stats:
+    if spec.variant == VARIANT_ROW:
+        out = rowdither.row_dither(g, key, knobs[KNOB_ROW_ALPHA])
+        if spec.collect_stats:
             zero = 1.0 - jnp.mean((out != 0).astype(jnp.float32))
             statslib.emit(
-                policy.stats_tag + name,
+                spec.stats_tag + name,
                 nsd.QuantStats(zero, jnp.float32(32), jnp.float32(0)),
             )
         return out
-    if policy.variant == VARIANT_MEPROP:
-        out = meproplib.meprop_sparsify(g, policy.meprop_k_frac)
-        if policy.collect_stats:
+    if spec.variant == VARIANT_MEPROP:
+        k_frac = (spec.meprop_k_static if spec.meprop_k_static is not None
+                  else knobs[KNOB_MEPROP_K_FRAC])
+        out = meproplib.meprop_sparsify(g, k_frac)
+        if spec.collect_stats:
             zero = 1.0 - jnp.mean((out != 0).astype(jnp.float32))
             statslib.emit(
-                policy.stats_tag + name,
+                spec.stats_tag + name,
                 nsd.QuantStats(zero, jnp.float32(32), jnp.float32(0)),
             )
         return out
@@ -88,19 +107,19 @@ def _make_dithered_op(primal_fn: Callable) -> Callable:
     and pushes it through the *exact* vjp of the primal — this is precisely
     the paper's recipe and is correct for any linear primal."""
 
-    @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
-    def op(x, w, key, policy, name):
+    @functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+    def op(x, w, key, knobs, spec, name):
         return primal_fn(x, w)
 
-    def fwd(x, w, key, policy, name):
-        return primal_fn(x, w), (x, w, key)
+    def fwd(x, w, key, knobs, spec, name):
+        return primal_fn(x, w), (x, w, key, knobs)
 
-    def bwd(policy, name, res, g):
-        x, w, key = res
-        gq = quantize_cotangent(g, key, policy, name)
+    def bwd(spec, name, res, g):
+        x, w, key, knobs = res
+        gq = quantize_cotangent(g, key, knobs, spec, name)
         _, vjp = jax.vjp(primal_fn, x, w)
         dx, dw = vjp(gq)
-        return dx, dw, None
+        return dx, dw, None, None
 
     op.defvjp(fwd, bwd)
     return op
@@ -117,13 +136,13 @@ def _plain_matmul(x, w):
     )
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
-def _dithered_dense(x, w, key, policy, name):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _dithered_dense(x, w, key, knobs, spec, name):
     return _plain_matmul(x, w)
 
 
-def _dd_fwd(x, w, key, policy, name):
-    return _plain_matmul(x, w), (x, w, key)
+def _dd_fwd(x, w, key, knobs, spec, name):
+    return _plain_matmul(x, w), (x, w, key, knobs)
 
 
 def _kernel_shapes_ok(g2d, x2d, w, block=128):
@@ -131,33 +150,34 @@ def _kernel_shapes_ok(g2d, x2d, w, block=128):
             and x2d.shape[1] % block == 0)
 
 
-def _dd_bwd(policy, name, res, g):
-    x, w, key = res
+def _dd_bwd(spec, name, res, g):
+    x, w, key, knobs = res
+    s = knobs[KNOB_S]
     kdim = x.shape[-1]
     x2d = x.reshape(-1, kdim)
     g2d = g.reshape(-1, g.shape[-1])
 
-    if policy.variant == VARIANT_KERNEL and _kernel_shapes_ok(g2d, x2d, w):
+    if spec.variant == VARIANT_KERNEL and _kernel_shapes_ok(g2d, x2d, w):
         # Pallas path: fused NSD quantize + tile-skipping int8 matmuls
         # (interpret mode on CPU; compiled VMEM kernels on TPU). Falls back
         # to the jnp paper path for non-128-aligned layers.
         from repro.kernels.ops import dithered_backward_matmuls
 
-        if policy.collect_stats:
-            delta = nsd.compute_delta(g2d, policy.s)
+        if spec.collect_stats:
+            delta = nsd.compute_delta(g2d, s)
             k = nsd.nsd_indices(g2d, key, delta)
-            statslib.emit(policy.stats_tag + name, nsd.quant_stats(k, delta))
+            statslib.emit(spec.stats_tag + name, nsd.quant_stats(k, delta))
         dx2d, dw = dithered_backward_matmuls(
-            g2d, x2d, w, key, policy.s, int8_operands=True)
-        return dx2d.reshape(x.shape), dw, None
+            g2d, x2d, w, key, s, int8_operands=True)
+        return dx2d.reshape(x.shape), dw, None, None
 
-    if policy.variant == VARIANT_INT8:
+    if spec.variant == VARIANT_INT8:
         # NSD indices ARE an int8 tensor; x and w get absmax int8. Both
         # backward products then run on the int8 MXU path (2x bf16 on v5e).
-        delta = nsd.compute_delta(g2d, policy.s)
+        delta = nsd.compute_delta(g2d, s)
         k = nsd.nsd_indices(g2d, key, delta).astype(jnp.int8)
-        if policy.collect_stats:
-            statslib.emit(policy.stats_tag + name, nsd.quant_stats(k, delta))
+        if spec.collect_stats:
+            statslib.emit(spec.stats_tag + name, nsd.quant_stats(k, delta))
         xq = int8lib.quantize_int8(x2d)
         wq = int8lib.quantize_int8(w)
         # dx = g~ @ W^T : contract over the output dim
@@ -174,9 +194,10 @@ def _dd_bwd(policy, name, res, g):
             dx2d.astype(x.dtype).reshape(x.shape),
             dw.astype(w.dtype),
             None,
+            None,
         )
 
-    gq = quantize_cotangent(g2d, key, policy, name)
+    gq = quantize_cotangent(g2d, key, knobs, spec, name)
     dx2d = jax.lax.dot_general(
         gq, w, dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=gq.dtype,
@@ -185,7 +206,8 @@ def _dd_bwd(policy, name, res, g):
         x2d, gq, dimension_numbers=(((0,), (0,)), ((), ())),
         preferred_element_type=x2d.dtype,
     )
-    return dx2d.astype(x.dtype).reshape(x.shape), dw.astype(w.dtype), None
+    return dx2d.astype(x.dtype).reshape(x.shape), dw.astype(w.dtype), None, \
+        None
 
 
 _dithered_dense.defvjp(_dd_fwd, _dd_bwd)
@@ -199,13 +221,15 @@ def dense(
     ctx: Optional[DitherCtx] = None,
     name: str = "dense",
 ) -> jax.Array:
-    """y = x @ w (+ b); dithered backward when the ctx policy covers ``name``.
+    """y = x @ w (+ b); dithered backward when resolution covers ``name``.
 
-    When ctx is None (inference / serving / baseline) this is a plain matmul
-    with no custom_vjp in the trace at all.
+    When ctx is None (inference / serving / baseline) or the resolved
+    per-layer policy is off, this is a plain matmul with no custom_vjp in
+    the trace at all.
     """
-    if ctx is not None and ctx.policy.applies_to(name):
-        y = _dithered_dense(x, w, ctx.key_for(name), ctx.policy, name)
+    r = ctx.resolve(name) if ctx is not None else None
+    if r is not None:
+        y = _dithered_dense(x, w, r.key, r.knobs, r.spec, name)
     else:
         y = _plain_matmul(x, w)
     if b is not None:
@@ -250,9 +274,10 @@ def conv2d(
         tuple(strides), padding if isinstance(padding, str) else tuple(padding),
         tuple(lhs_dilation), tuple(rhs_dilation), feature_group_count,
     )
-    if ctx is not None and ctx.policy.applies_to(name):
+    r = ctx.resolve(name) if ctx is not None else None
+    if r is not None:
         op = _make_dithered_op(primal)
-        y = op(x, w, ctx.key_for(name), ctx.policy, name)
+        y = op(x, w, r.key, r.knobs, r.spec, name)
     else:
         y = primal(x, w)
     if b is not None:
@@ -281,7 +306,8 @@ def dithered_einsum(
 ) -> jax.Array:
     """einsum('...,...->...', x, w) with dithered backward on the cotangent."""
     primal = _einsum_primal(spec)
-    if ctx is not None and ctx.policy.applies_to(name):
+    r = ctx.resolve(name) if ctx is not None else None
+    if r is not None:
         op = _make_dithered_op(primal)
-        return op(x, w, ctx.key_for(name), ctx.policy, name)
+        return op(x, w, r.key, r.knobs, r.spec, name)
     return primal(x, w)

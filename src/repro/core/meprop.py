@@ -14,11 +14,29 @@ import jax
 import jax.numpy as jnp
 
 
-def meprop_sparsify(g: jax.Array, k_frac: float) -> jax.Array:
-    """Keep the top-``k_frac`` fraction of each row of ``g`` by magnitude."""
+def meprop_sparsify(g: jax.Array, k_frac) -> jax.Array:
+    """Keep the top-``k_frac`` fraction of each row of ``g`` by magnitude.
+
+    ``k_frac`` may be a Python float (static: per-row top_k threshold) or a
+    traced f32 scalar (policy-program schedules: k becomes a traced index
+    into the per-row sorted magnitudes, so stepping ``k_frac`` does not
+    retrace). The two paths compute the same threshold — the k-th largest
+    |g| per row — and are pinned equal in tests/test_schedule.py.
+    """
     if g.ndim < 1:
         return g
     n = g.shape[-1]
+    if isinstance(k_frac, jax.Array):
+        flat = g.reshape(-1, n)
+        mag = jnp.abs(flat.astype(jnp.float32))
+        k = jnp.clip(jnp.round(k_frac * n).astype(jnp.int32), 1, n)
+        sorted_desc = -jnp.sort(-mag, axis=-1)
+        idx = jnp.broadcast_to(k - 1, (flat.shape[0], 1))
+        thresh = jnp.take_along_axis(sorted_desc, idx, axis=-1)
+        # k == n keeps every entry (mag >= row minimum is trivially true)
+        mask = mag >= thresh
+        out = jnp.where(mask, flat, jnp.zeros_like(flat))
+        return out.reshape(g.shape)
     k = max(1, int(round(k_frac * n)))
     if k >= n:
         return g

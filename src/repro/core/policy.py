@@ -1,17 +1,32 @@
-"""Dither policy — the single knob surface for the paper's technique.
+"""Dither policy — the knob surface for the paper's technique.
 
 The paper has exactly one global hyperparameter: the scale factor ``s`` in
-``Delta = s * std(grad)``. The policy object carries that plus the framework
-concerns around it (which layers participate, which backward variant runs,
-whether telemetry is collected). It is a frozen (hashable) dataclass so it
-can ride through ``jax.custom_vjp`` as a static argument.
+``Delta = s * std(grad)``. Historically this repo carried ``s`` (and the
+other numeric knobs) as *static* ``custom_vjp`` arguments, so changing it
+meant recompiling every backward matmul. The policy surface is now split in
+two along the static/traced line:
+
+* ``StaticSpec`` — the fields that legitimately shape the trace (backward
+  variant, telemetry on/off, tag). These stay static arguments of the
+  custom_vjp ops; changing them recompiles, which is correct and rare
+  (a phase switch in a :class:`repro.core.schedule.PolicyProgram`).
+* knobs — the numeric fields (``s``, ``meprop_k_frac``, ``row_alpha``),
+  packed into a traced f32 ``(3,)`` array by :func:`knobs_array`. A
+  schedule that changes ``s`` every step therefore triggers **zero**
+  recompiles (pinned by tests/test_schedule.py).
+
+``DitherPolicy`` remains the user-facing frozen dataclass; its numeric
+fields are the *defaults* that get baked into knobs when a
+``DitherCtx`` is built. Per-layer / per-step resolution lives in
+``repro.core.schedule`` and enters through :meth:`DitherCtx.resolve`.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Any, Dict, NamedTuple, Optional, Set
 
 import jax
+import jax.numpy as jnp
 import zlib
 
 
@@ -26,10 +41,83 @@ VARIANT_KERNEL = "kernel"  # Pallas kernel path: fused NSD + tile-skip matmuls
 VARIANTS = (VARIANT_OFF, VARIANT_PAPER, VARIANT_INT8, VARIANT_ROW,
             VARIANT_MEPROP, VARIANT_KERNEL)
 
+# Index layout of the traced knobs array (see knobs_array()).
+KNOB_S = 0
+KNOB_MEPROP_K_FRAC = 1
+KNOB_ROW_ALPHA = 2
+
+
+def validate_knob_values(s: Any, meprop_k_frac: Any, row_alpha: Any,
+                         owner: str) -> None:
+    """Shared numeric validation for DitherPolicy / LayerRule fields.
+
+    Only concrete (host-side) values are checked; ``None`` means "not
+    overridden" (LayerRule). Schedule-typed fields are validated by their
+    owner against every value the schedule can produce
+    (``repro.core.schedule``), so a ramp cannot smuggle an illegal knob
+    past construction.
+    """
+    if s is not None and not isinstance(s, jax.Array) and not s > 0:
+        raise ValueError(f"{owner}: s must be > 0, got {s!r}")
+    if meprop_k_frac is not None and not isinstance(meprop_k_frac, jax.Array) \
+            and not 0 < meprop_k_frac <= 1:
+        raise ValueError(
+            f"{owner}: meprop_k_frac must be in (0, 1], got {meprop_k_frac!r}")
+    if row_alpha is not None and not isinstance(row_alpha, jax.Array) \
+            and not row_alpha > 0:
+        raise ValueError(
+            f"{owner}: row_alpha must be > 0, got {row_alpha!r}")
+
+
+def knobs_array(s, meprop_k_frac, row_alpha) -> jax.Array:
+    """Pack the numeric knobs as a traced f32 (3,) vector.
+
+    This is THE boundary between policy configuration and the jitted
+    backward pass: everything in here may change per step without
+    retracing; everything in StaticSpec may not.
+    """
+    return jnp.stack([
+        jnp.asarray(s, jnp.float32),
+        jnp.asarray(meprop_k_frac, jnp.float32),
+        jnp.asarray(row_alpha, jnp.float32),
+    ])
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticSpec:
+    """The trace-shaping part of a resolved per-layer policy.
+
+    Rides through ``jax.custom_vjp`` as a static (hashable) argument;
+    deliberately excludes every numeric knob so knob schedules cannot
+    invalidate the compile cache. The one exception is
+    ``meprop_k_static``: an UNSCHEDULED meprop fraction is carried here so
+    the backward keeps the cheap ``lax.top_k(k)`` path (k small) instead
+    of the full per-row sort the traced path needs; it is set only for the
+    meprop variant, and a scheduled ``meprop_k_frac`` leaves it None
+    (traced, zero recompiles).
+    """
+
+    variant: str = VARIANT_PAPER
+    collect_stats: bool = False
+    stats_tag: str = ""
+    meprop_k_static: Optional[float] = None
+
+
+class Resolved(NamedTuple):
+    """What one layer's contraction gets after policy resolution."""
+
+    spec: StaticSpec  # static: variant + telemetry switches
+    knobs: jax.Array  # traced f32 (3,): [s, meprop_k_frac, row_alpha]
+    key: jax.Array  # per-(step, layer) dither RNG key
+
 
 @dataclasses.dataclass(frozen=True)
 class DitherPolicy:
-    """Per-run configuration of dithered backprop."""
+    """Per-run configuration of dithered backprop (the global defaults).
+
+    Per-layer / per-step overrides are expressed as a
+    :class:`repro.core.schedule.PolicyProgram` on top of this base.
+    """
 
     variant: str = VARIANT_PAPER
     s: float = 2.0  # Delta = s * std(grad); the paper's global knob
@@ -42,6 +130,8 @@ class DitherPolicy:
     def __post_init__(self):
         if self.variant not in VARIANTS:
             raise ValueError(f"unknown variant {self.variant!r}; one of {VARIANTS}")
+        validate_knob_values(self.s, self.meprop_k_frac, self.row_alpha,
+                             owner="DitherPolicy")
 
     @property
     def enabled(self) -> bool:
@@ -54,6 +144,17 @@ class DitherPolicy:
 
     def replace(self, **kw) -> "DitherPolicy":
         return dataclasses.replace(self, **kw)
+
+    def spec(self) -> StaticSpec:
+        return StaticSpec(variant=self.variant,
+                          collect_stats=self.collect_stats,
+                          stats_tag=self.stats_tag,
+                          meprop_k_static=(self.meprop_k_frac
+                                           if self.variant == VARIANT_MEPROP
+                                           else None))
+
+    def knobs(self) -> jax.Array:
+        return knobs_array(self.s, self.meprop_k_frac, self.row_alpha)
 
 
 # A do-nothing policy: models built with ctx=None or this policy run plain
@@ -68,30 +169,57 @@ def name_salt(name: str) -> int:
 
 @dataclasses.dataclass
 class DitherCtx:
-    """Threaded through model ``apply`` — step RNG + policy.
+    """Threaded through model ``apply`` — step RNG + policy resolution.
 
     ``key`` must differ per optimization step (fold the step index in); each
     layer folds its own name in so dither noise is i.i.d. across layers,
     steps, and (via the caller folding in a worker id) data-parallel workers,
     which is what makes the distributed averaging argument of paper §3.6 hold.
+
+    ``policy`` is the phase-resolved static base (see
+    ``PolicyProgram.phase_policy_at``); when ``program`` is set, per-layer
+    resolution (rules, knob schedules, controller scales) happens in
+    :meth:`resolve` at trace time — layer names are static strings, so
+    resolution costs nothing at run time and the resulting knobs are traced
+    scalars (changing them never recompiles).
     """
 
     key: jax.Array
     policy: DitherPolicy = dataclasses.field(default_factory=DitherPolicy)
+    # static PolicyProgram (repro.core.schedule); None = plain global policy
+    program: Any = None
+    # traced i32 step for knob schedules; None behaves as step 0
+    step: Optional[jax.Array] = None
+    # traced per-layer log-scale on s from the closed-loop sparsity
+    # controller: {layer_name: f32 scalar}; rides the checkpoint tree
+    ctrl: Optional[Dict[str, jax.Array]] = None
+    # trace-time layer-name recorder (schedule.discover_layer_names)
+    recorder: Optional[Set[str]] = None
 
     def key_for(self, name: str) -> jax.Array:
         return jax.random.fold_in(self.key, name_salt(name))
 
+    def resolve(self, name: str) -> Optional[Resolved]:
+        """Per-layer policy resolution; None = run plain backprop."""
+        if self.recorder is not None:
+            self.recorder.add(name)
+        if self.program is not None:
+            return self.program.resolve_layer(self, name)
+        if not self.policy.applies_to(name):
+            return None
+        return Resolved(spec=self.policy.spec(), knobs=self.policy.knobs(),
+                        key=self.key_for(name))
+
+    def with_key(self, key: jax.Array) -> "DitherCtx":
+        """Same resolution state, different RNG stream (micro-batches,
+        shard_map bodies)."""
+        return dataclasses.replace(self, key=key)
+
     @staticmethod
-    def for_step(base_key: jax.Array, step: jax.Array, policy: DitherPolicy,
-                 worker: int | jax.Array = 0) -> "DitherCtx":
+    def for_step(base_key: jax.Array, step, policy: DitherPolicy,
+                 worker: int | jax.Array = 0, *, program: Any = None,
+                 ctrl: Optional[Dict[str, jax.Array]] = None) -> "DitherCtx":
         k = jax.random.fold_in(base_key, step)
         k = jax.random.fold_in(k, worker)
-        return DitherCtx(key=k, policy=policy)
-
-
-def maybe_ctx(ctx: Optional[DitherCtx], name: str) -> Optional[DitherCtx]:
-    """Convenience: returns ctx only if the policy covers ``name``."""
-    if ctx is None or not ctx.policy.applies_to(name):
-        return None
-    return ctx
+        return DitherCtx(key=k, policy=policy, program=program,
+                         step=jnp.asarray(step, jnp.int32), ctrl=ctrl)

@@ -1,0 +1,672 @@
+"""Policy programs: per-layer, step-scheduled dithered backprop.
+
+The paper's own evidence (Fig. 4/5, §3.3) is that gradient sparsity and
+required bit-width vary widely per layer and per training phase — a single
+frozen ``DitherPolicy(variant, s)`` leaves that structure on the table.
+This module turns the policy surface into a small *program*:
+
+* :class:`LayerRule` — ``pattern -> per-layer overrides`` of the variant
+  and the numeric knobs. Patterns are globs (``L*.mlp.*``) when they
+  contain glob metacharacters, plain substrings otherwise. Rules are
+  ordered; for each knob the LAST matching rule that sets it wins.
+* schedules (:class:`Const` / :class:`Piecewise` / :class:`Linear`) — any
+  numeric knob may be a function of the step. Schedules evaluate on the
+  *traced* step, so a per-step ``s`` ramp re-uses the compiled backward:
+  zero recompiles (pinned by tests/test_schedule.py).
+* :class:`PhaseSpec` — step-indexed *variant* switches (exact-backprop
+  warmup -> ``paper`` -> ``int8``). The variant shapes the trace, so each
+  phase boundary recompiles exactly once — resolved host-side via
+  :meth:`PolicyProgram.phase_policy_at`.
+* :class:`SparsityController` — a closed-loop integral controller that
+  nudges each layer's ``s`` toward a target sparsity using the per-layer
+  telemetry ``repro.core.stats`` already emits. Its state (per-layer
+  log-scales) is a pytree of scalars that rides the checkpoint tree and is
+  passed into the jitted step as a traced argument, so every data-parallel
+  node resolves identical policies.
+
+``PolicyProgram`` is hashable (frozen, tuple-valued) so it can sit in jit
+static arguments and custom_vjp closures; everything numeric it produces is
+traced.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import math
+import re
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import (
+    VARIANT_OFF,
+    VARIANT_PAPER,
+    VARIANTS,
+    DitherCtx,
+    DitherPolicy,
+    Resolved,
+    StaticSpec,
+    knobs_array,
+    validate_knob_values,
+)
+
+__all__ = [
+    "Const", "Piecewise", "Linear", "as_schedule", "eval_schedule",
+    "LayerRule", "PhaseSpec", "SparsityController", "PolicyProgram",
+    "as_program", "parse_program", "discover_layer_names",
+    "ControllerDriver", "TelemetryWindow",
+]
+
+
+# ---------------------------------------------------------------------------
+# step schedules (traced: evaluating at a new step never retraces)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Const:
+    """A knob pinned to one value (the degenerate schedule)."""
+
+    value: float
+
+    def at(self, step: jax.Array) -> jax.Array:
+        return jnp.asarray(self.value, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Piecewise:
+    """Piecewise-constant: ``points = ((step0, v0), (step1, v1), ...)``.
+
+    The value at ``step`` is the v of the last boundary <= step; steps
+    before the first boundary clamp to the first value. Boundary steps
+    belong to the NEW value (step == step1 -> v1), which is the convention
+    the boundary tests pin.
+    """
+
+    points: Tuple[Tuple[int, float], ...]
+
+    def __post_init__(self):
+        if not self.points:
+            raise ValueError("Piecewise: needs at least one (step, value) point")
+        object.__setattr__(self, "points",
+                           tuple((int(b), float(v)) for b, v in self.points))
+        bounds = [b for b, _ in self.points]
+        if bounds != sorted(set(bounds)):
+            raise ValueError(
+                f"Piecewise: boundaries must be strictly increasing, got {bounds}")
+
+    def at(self, step: jax.Array) -> jax.Array:
+        bounds = jnp.asarray([b for b, _ in self.points], jnp.int32)
+        vals = jnp.asarray([v for _, v in self.points], jnp.float32)
+        idx = jnp.sum((jnp.asarray(step, jnp.int32) >= bounds)
+                      .astype(jnp.int32)) - 1
+        return vals[jnp.clip(idx, 0, len(self.points) - 1)]
+
+
+@dataclasses.dataclass(frozen=True)
+class Linear:
+    """Linear ramp from ``start`` to ``end`` over [start_step, end_step],
+    clamped outside the window."""
+
+    start_step: int
+    end_step: int
+    start: float
+    end: float
+
+    def __post_init__(self):
+        if not self.end_step > self.start_step:
+            raise ValueError(
+                f"Linear: end_step must be > start_step, got "
+                f"[{self.start_step}, {self.end_step}]")
+
+    def at(self, step: jax.Array) -> jax.Array:
+        t = (jnp.asarray(step, jnp.float32) - self.start_step) / (
+            self.end_step - self.start_step)
+        t = jnp.clip(t, 0.0, 1.0)
+        return jnp.asarray(self.start, jnp.float32) + t * (
+            jnp.asarray(self.end, jnp.float32)
+            - jnp.asarray(self.start, jnp.float32))
+
+
+ScheduleLike = Union[float, int, Const, Piecewise, Linear]
+_SCHEDULE_TYPES = (Const, Piecewise, Linear)
+
+
+def as_schedule(x: ScheduleLike) -> Union[Const, Piecewise, Linear]:
+    if isinstance(x, _SCHEDULE_TYPES):
+        return x
+    return Const(float(x))
+
+
+def eval_schedule(x: Optional[ScheduleLike], step: jax.Array):
+    """float stays a (weak-typed) Python float — bit-identical to the legacy
+    global-policy path; schedules evaluate on the traced step."""
+    if isinstance(x, _SCHEDULE_TYPES):
+        return x.at(step)
+    return x
+
+
+def _schedule_values(x: ScheduleLike) -> Tuple[float, ...]:
+    """Every value a schedule can produce (endpoints/levels; Linear is
+    monotone so its endpoints bound the range)."""
+    if isinstance(x, Const):
+        return (x.value,)
+    if isinstance(x, Piecewise):
+        return tuple(v for _, v in x.points)
+    if isinstance(x, Linear):
+        return (x.start, x.end)
+    return (float(x),)
+
+
+def _validate_knob_schedules(s, meprop_k_frac, row_alpha, owner: str) -> None:
+    """Range-check knob fields whether they are plain floats or schedules —
+    a ramp must not smuggle an illegal value past construction."""
+    for field, value in (("s", s), ("meprop_k_frac", meprop_k_frac),
+                         ("row_alpha", row_alpha)):
+        if value is None:
+            continue
+        for v in _schedule_values(value):
+            validate_knob_values(
+                v if field == "s" else None,
+                v if field == "meprop_k_frac" else None,
+                v if field == "row_alpha" else None,
+                owner=owner)
+
+
+# ---------------------------------------------------------------------------
+# per-layer rules
+# ---------------------------------------------------------------------------
+
+_GLOB_CHARS = re.compile(r"[*?\[]")
+
+
+def pattern_matches(pattern: str, name: str) -> bool:
+    """Glob when the pattern contains glob metacharacters, else substring."""
+    if _GLOB_CHARS.search(pattern):
+        return fnmatch.fnmatchcase(name, pattern)
+    return pattern in name
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerRule:
+    """``pattern -> overrides``. Unset (None) fields inherit; ``variant``
+    may be "off" to exempt the matching layers entirely."""
+
+    pattern: str = "*"
+    variant: Optional[str] = None
+    s: Optional[ScheduleLike] = None
+    meprop_k_frac: Optional[ScheduleLike] = None
+    row_alpha: Optional[ScheduleLike] = None
+
+    def __post_init__(self):
+        if not self.pattern:
+            raise ValueError("LayerRule: pattern must be a non-empty string")
+        if self.variant is not None and self.variant not in VARIANTS:
+            raise ValueError(
+                f"LayerRule({self.pattern!r}): unknown variant "
+                f"{self.variant!r}; one of {VARIANTS}")
+        _validate_knob_schedules(self.s, self.meprop_k_frac, self.row_alpha,
+                                 owner=f"LayerRule({self.pattern!r})")
+
+    def matches(self, name: str) -> bool:
+        return pattern_matches(self.pattern, name)
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseSpec:
+    """From ``start`` (inclusive) onward, run ``variant`` — until the next
+    phase takes over. Steps before the first phase use the base variant."""
+
+    start: int
+    variant: str
+
+    def __post_init__(self):
+        if self.start < 0:
+            raise ValueError(f"PhaseSpec: start must be >= 0, got {self.start}")
+        if self.variant not in VARIANTS:
+            raise ValueError(
+                f"PhaseSpec@{self.start}: unknown variant {self.variant!r}; "
+                f"one of {VARIANTS}")
+
+
+# ---------------------------------------------------------------------------
+# closed-loop sparsity controller (host updates, traced application)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SparsityController:
+    """Integral controller on log(s) per layer: sparsity below target ->
+    raise s (bigger Delta -> more exact zeros), and vice versa.
+
+    The state is ``{layer_name: f32 log-scale}``; :meth:`update` runs on the
+    host between steps from the telemetry window, and the state enters the
+    jitted step as a traced pytree — so s moves every step with zero
+    recompiles, and checkpoints carry it (next to the EF residuals) for a
+    lossless resume.
+    """
+
+    target: float  # target mean pre-activation-gradient sparsity in (0, 1)
+    gain: float = 2.0  # log-space integral gain on (target - measured)
+    min_scale: float = 0.25  # bounds on the multiplier applied to s
+    max_scale: float = 4.0
+
+    def __post_init__(self):
+        if not 0.0 < self.target < 1.0:
+            raise ValueError(
+                f"SparsityController: target must be in (0, 1), got {self.target!r}")
+        if not self.gain > 0:
+            raise ValueError(
+                f"SparsityController: gain must be > 0, got {self.gain!r}")
+        if not 0 < self.min_scale <= 1.0 <= self.max_scale:
+            raise ValueError(
+                "SparsityController: need 0 < min_scale <= 1 <= max_scale, "
+                f"got [{self.min_scale!r}, {self.max_scale!r}]")
+
+    def init_state(self, names: Sequence[str]) -> Dict[str, jax.Array]:
+        return {n: jnp.zeros((), jnp.float32) for n in sorted(names)}
+
+    def update(self, state: Dict[str, jax.Array],
+               measured: Dict[str, float]) -> Dict[str, jax.Array]:
+        """One host-side controller tick. Names absent from ``state`` are
+        ignored — the state's pytree structure never changes mid-run."""
+        lo, hi = math.log(self.min_scale), math.log(self.max_scale)
+        new = dict(state)
+        for name, sparsity in measured.items():
+            if name in new:
+                nudged = jnp.asarray(new[name], jnp.float32) \
+                    + self.gain * (self.target - float(sparsity))
+                new[name] = jnp.clip(nudged, lo, hi)
+        return new
+
+
+# ---------------------------------------------------------------------------
+# the program
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PolicyProgram:
+    """Ordered per-layer rules + step schedules over a base DitherPolicy.
+
+    Resolution order for a layer ``name`` at step ``t``:
+
+    1. variant: base -> active phase (host-resolved, recompiles once per
+       boundary) -> last matching rule that sets it. "off" exempts the layer.
+    2. knobs: base numerics -> program-level schedules (``s`` /
+       ``meprop_k_frac`` / ``row_alpha``) -> last matching rule that sets
+       the knob -> controller log-scale on ``s``. All traced: never
+       recompiles.
+
+    A program whose only rule is the universal ``LayerRule()`` resolves to
+    exactly the base policy — bit-for-bit, pinned by the ``layer_sparsity``
+    benchmark's parity gate.
+    """
+
+    base: DitherPolicy = dataclasses.field(default_factory=DitherPolicy)
+    rules: Tuple[LayerRule, ...] = ()
+    phases: Tuple[PhaseSpec, ...] = ()
+    s: Optional[ScheduleLike] = None
+    meprop_k_frac: Optional[ScheduleLike] = None
+    row_alpha: Optional[ScheduleLike] = None
+    controller: Optional[SparsityController] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "rules", tuple(self.rules))
+        object.__setattr__(self, "phases", tuple(self.phases))
+        starts = [p.start for p in self.phases]
+        if starts != sorted(set(starts)):
+            raise ValueError(
+                f"PolicyProgram: phase starts must be strictly increasing, "
+                f"got {starts}")
+        _validate_knob_schedules(self.s, self.meprop_k_frac, self.row_alpha,
+                                 owner="PolicyProgram")
+        if self.controller is not None and not self.base.collect_stats:
+            raise ValueError(
+                "PolicyProgram: the sparsity controller consumes per-layer "
+                "telemetry — set collect_stats=True on the base policy")
+
+    # -- host-side (static) resolution --------------------------------------
+
+    def phase_policy_at(self, step: int) -> DitherPolicy:
+        """The static base policy for host step ``step`` (phases applied).
+
+        This is the value to pass as the jitted step's *static* policy
+        argument: it only changes at phase boundaries, so a run with a knob
+        schedule but no phases compiles exactly once.
+        """
+        variant = self.base.variant
+        for ph in self.phases:
+            if int(step) >= ph.start:
+                variant = ph.variant
+        if variant == self.base.variant:
+            return self.base
+        return self.base.replace(variant=variant)
+
+    def phase_boundaries(self) -> Tuple[int, ...]:
+        return tuple(p.start for p in self.phases)
+
+    @property
+    def ever_enabled(self) -> bool:
+        """True if any phase/rule can turn dithering on at some step."""
+        if self.base.enabled:
+            return True
+        if any(p.variant != VARIANT_OFF for p in self.phases):
+            return True
+        return self.rules_enable
+
+    @property
+    def rules_enable(self) -> bool:
+        """True if a rule pins an enabling variant — such layers dither even
+        while the phase variant is "off", so steps must still build a ctx."""
+        return any(r.variant not in (None, VARIANT_OFF) for r in self.rules)
+
+    def step_enabled(self, phase_policy: DitherPolicy) -> bool:
+        """Whether a step under ``phase_policy`` needs a DitherCtx at all."""
+        return phase_policy.enabled or self.rules_enable
+
+    # -- trace-time (per-layer) resolution ----------------------------------
+
+    def resolve_layer(self, ctx: DitherCtx, name: str) -> Optional[Resolved]:
+        base = ctx.policy
+        if any(pat in name for pat in base.exclude):
+            return None
+        variant = base.variant
+        s: Optional[ScheduleLike] = self.s if self.s is not None else base.s
+        kf = (self.meprop_k_frac if self.meprop_k_frac is not None
+              else base.meprop_k_frac)
+        ra = self.row_alpha if self.row_alpha is not None else base.row_alpha
+        for rule in self.rules:
+            if rule.matches(name):
+                if rule.variant is not None:
+                    variant = rule.variant
+                if rule.s is not None:
+                    s = rule.s
+                if rule.meprop_k_frac is not None:
+                    kf = rule.meprop_k_frac
+                if rule.row_alpha is not None:
+                    ra = rule.row_alpha
+        if variant == VARIANT_OFF:
+            return None
+        step = ctx.step if ctx.step is not None else jnp.zeros((), jnp.int32)
+        s_val = eval_schedule(s, step)
+        if ctx.ctrl:
+            log_scale = ctx.ctrl.get(name)
+            if log_scale is not None:
+                s_val = jnp.asarray(s_val, jnp.float32) * jnp.exp(log_scale)
+        knobs = knobs_array(s_val, eval_schedule(kf, step),
+                            eval_schedule(ra, step))
+        # unscheduled meprop fraction stays static -> cheap top_k backward;
+        # Piecewise/Linear schedules leave it None (traced, no retraces)
+        kf_static = None
+        if variant == "meprop":
+            if isinstance(kf, Const):
+                kf_static = kf.value
+            elif not isinstance(kf, _SCHEDULE_TYPES):
+                kf_static = float(kf)
+        spec = StaticSpec(variant=variant, collect_stats=base.collect_stats,
+                          stats_tag=base.stats_tag, meprop_k_static=kf_static)
+        return Resolved(spec=spec, knobs=knobs, key=ctx.key_for(name))
+
+    def replace(self, **kw) -> "PolicyProgram":
+        return dataclasses.replace(self, **kw)
+
+
+def as_program(policy) -> Optional[PolicyProgram]:
+    """Lift a DitherPolicy (or pass through a PolicyProgram / None)."""
+    if policy is None or isinstance(policy, PolicyProgram):
+        return policy
+    if isinstance(policy, DitherPolicy):
+        return PolicyProgram(base=policy)
+    raise TypeError(
+        f"expected DitherPolicy, PolicyProgram or None, got {type(policy)!r}")
+
+
+# ---------------------------------------------------------------------------
+# layer-name discovery (stable controller-state structure from step 0)
+# ---------------------------------------------------------------------------
+
+def discover_layer_names(loss_fn, params, batch) -> List[str]:
+    """All layer names that consult the policy in one loss evaluation.
+
+    Runs ``jax.eval_shape`` (no FLOPs, no allocation) with a recording ctx;
+    the trainer uses this before step 0 so the controller state's pytree
+    structure — which would otherwise only be known after the first real
+    step — is stable for the whole run (structure changes retrace).
+    ``loss_fn(params, batch, ctx)`` must thread ctx like ``Model.loss``.
+    """
+    recorder: set = set()
+    ctx = DitherCtx(key=jax.random.PRNGKey(0),
+                    policy=DitherPolicy(variant=VARIANT_PAPER),
+                    step=jnp.zeros((), jnp.int32), recorder=recorder)
+    jax.eval_shape(lambda p, b: loss_fn(p, b, ctx), params, batch)
+    return sorted(recorder)
+
+
+class ControllerDriver:
+    """Host-side protocol for a program's sparsity controller, shared by
+    the Trainer and the benchmark harness so they cannot diverge:
+
+    1. ``ensure_init`` — discover layer names once (eval_shape, no FLOPs)
+       and build the {layer: log-scale} state with a stable structure;
+    2. pass ``state`` into the jitted step as a traced argument;
+    3. ``tick`` — after each step, fold the new telemetry into the state.
+
+    No-ops throughout when the program has no controller.
+    """
+
+    def __init__(self, program: Optional[PolicyProgram]):
+        self.program = program
+        self.controller = program.controller if program is not None else None
+        self.state: Dict[str, jax.Array] = {}
+        self.window: Optional["TelemetryWindow"] = None
+        self._inited = False
+
+    @property
+    def active(self) -> bool:
+        return self.controller is not None
+
+    @property
+    def ready(self) -> bool:
+        return self._inited
+
+    def ensure_init(self, loss_fn, params, batch) -> List[str]:
+        """Idempotent (an explicit flag, not dict truthiness: a ctx-less
+        model legitimately discovers zero layers and must not re-trace the
+        loss every step). Returns the discovered names."""
+        if not self.active or self._inited:
+            return sorted(self.state)
+        names = discover_layer_names(loss_fn, params, batch)
+        self.state = self.controller.init_state(names)
+        self.window = TelemetryWindow(self.program.base.stats_tag)
+        self._inited = True
+        return names
+
+    def tick(self) -> None:
+        if self.window is None:
+            return
+        measured = self.window.measure()
+        if measured:
+            self.state = self.controller.update(self.state, measured)
+
+
+class TelemetryWindow:
+    """Host-side consumer of the per-layer sparsity telemetry: each
+    ``measure()`` returns the mean sparsity of the rows that arrived since
+    the previous call, keyed by layer name (tag minus the stats prefix).
+
+    Cursors are primed to the sink's CURRENT row counts at construction —
+    the global sink is never reset by the trainer, so without priming the
+    first tick of a second run (or an in-process resume) would fold the
+    previous run's entire history into the controller state."""
+
+    def __init__(self, stats_tag: str = ""):
+        from repro.core import stats as statslib
+
+        self.stats_tag = stats_tag
+        self._seen: Dict[str, int] = {
+            tag: statslib.row_count(tag) for tag in statslib.tags()
+            if tag.startswith(stats_tag)}
+
+    def measure(self) -> Dict[str, float]:
+        from repro.core import stats as statslib
+
+        out: Dict[str, float] = {}
+        for tag in statslib.tags():
+            if not tag.startswith(self.stats_tag):
+                continue
+            n_seen = self._seen.get(tag, 0)
+            new = statslib.rows_since(tag, n_seen)
+            if len(new):
+                out[tag[len(self.stats_tag):]] = float(new[:, 0].mean())
+                self._seen[tag] = n_seen + len(new)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# spec-string parser (the --policy-program CLI surface)
+# ---------------------------------------------------------------------------
+
+_SPEC_DOC = """\
+clauses separated by ';':
+  phase@STEP=VARIANT          variant switch from STEP on (off|paper|int8|row|meprop|kernel)
+  s=EXPR | k_frac=EXPR | row_alpha=EXPR
+                              program-wide knob (EXPR: FLOAT | lin(a,b,v0,v1)
+                              | step(b0:v0,b1:v1,...))
+  rule PATTERN:A[,A...]       per-layer overrides; A: off | variant=V | s=EXPR
+                              | k_frac=EXPR | row_alpha=EXPR. Glob pattern when
+                              it contains */?/[, substring otherwise; last
+                              matching rule wins per knob.
+  controller:target=F[,gain=F][,min=F][,max=F]
+                              closed-loop per-layer s toward target sparsity
+example:
+  phase@0=off;phase@30=paper;s=lin(30,200,4.0,2.0);rule lm_head:off;rule L*.mlp.*:s=3.0
+"""
+
+_KNOB_ALIASES = {"s": "s", "k_frac": "meprop_k_frac",
+                 "meprop_k_frac": "meprop_k_frac", "row_alpha": "row_alpha"}
+
+
+def _split_top(text: str, sep: str) -> List[str]:
+    """Split on ``sep`` outside parentheses."""
+    parts, depth, cur = [], 0, []
+    for ch in text:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        if ch == sep and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    parts.append("".join(cur))
+    return [p for p in (p.strip() for p in parts) if p]
+
+
+def _parse_expr(text: str, clause: str) -> ScheduleLike:
+    text = text.strip()
+    m = re.fullmatch(r"lin\(([^)]*)\)", text)
+    if m:
+        args = [a.strip() for a in m.group(1).split(",")]
+        if len(args) != 4:
+            raise ValueError(
+                f"policy-program clause {clause!r}: lin() takes "
+                f"(start_step, end_step, v0, v1), got {text!r}")
+        return Linear(int(args[0]), int(args[1]), float(args[2]),
+                      float(args[3]))
+    m = re.fullmatch(r"step\(([^)]*)\)", text)
+    if m:
+        points = []
+        for pt in m.group(1).split(","):
+            if ":" not in pt:
+                raise ValueError(
+                    f"policy-program clause {clause!r}: step() points are "
+                    f"STEP:VALUE, got {pt.strip()!r}")
+            b, v = pt.split(":", 1)
+            points.append((int(b.strip()), float(v.strip())))
+        return Piecewise(tuple(points))
+    try:
+        return float(text)
+    except ValueError:
+        raise ValueError(
+            f"policy-program clause {clause!r}: expected FLOAT, lin(...) or "
+            f"step(...), got {text!r}") from None
+
+
+def _parse_rule(body: str, clause: str) -> LayerRule:
+    if ":" not in body:
+        raise ValueError(
+            f"policy-program clause {clause!r}: rule syntax is "
+            f"'rule PATTERN:assign[,assign...]'")
+    pattern, assigns = body.split(":", 1)
+    kw: Dict[str, object] = {}
+    for a in _split_top(assigns, ","):
+        if a == "off":
+            kw["variant"] = VARIANT_OFF
+            continue
+        if "=" not in a:
+            raise ValueError(
+                f"policy-program clause {clause!r}: bad assignment {a!r}")
+        k, v = (t.strip() for t in a.split("=", 1))
+        if k == "variant":
+            kw["variant"] = v
+        elif k in _KNOB_ALIASES:
+            kw[_KNOB_ALIASES[k]] = _parse_expr(v, clause)
+        else:
+            raise ValueError(
+                f"policy-program clause {clause!r}: unknown rule key {k!r}")
+    return LayerRule(pattern=pattern.strip(), **kw)
+
+
+def _parse_controller(body: str, clause: str) -> SparsityController:
+    kw: Dict[str, float] = {}
+    names = {"target": "target", "gain": "gain", "min": "min_scale",
+             "max": "max_scale"}
+    for a in _split_top(body, ","):
+        if "=" not in a:
+            raise ValueError(
+                f"policy-program clause {clause!r}: bad assignment {a!r}")
+        k, v = (t.strip() for t in a.split("=", 1))
+        if k not in names:
+            raise ValueError(
+                f"policy-program clause {clause!r}: unknown controller key "
+                f"{k!r} (one of {sorted(names)})")
+        kw[names[k]] = float(v)
+    if "target" not in kw:
+        raise ValueError(
+            f"policy-program clause {clause!r}: controller needs target=F")
+    return SparsityController(**kw)
+
+
+def parse_program(spec: str, base: Optional[DitherPolicy] = None
+                  ) -> PolicyProgram:
+    """Parse the ``--policy-program`` spec string (grammar: ``_SPEC_DOC``,
+    printed verbatim in every parse error)."""
+    base = base if base is not None else DitherPolicy()
+    phases: List[PhaseSpec] = []
+    rules: List[LayerRule] = []
+    knobs: Dict[str, ScheduleLike] = {}
+    controller: Optional[SparsityController] = None
+    for clause in _split_top(spec, ";"):
+        m = re.fullmatch(r"phase@(\d+)\s*=\s*(\w+)", clause)
+        if m:
+            phases.append(PhaseSpec(int(m.group(1)), m.group(2)))
+            continue
+        if clause.startswith("rule "):
+            rules.append(_parse_rule(clause[len("rule "):], clause))
+            continue
+        if clause.startswith("controller:"):
+            controller = _parse_controller(clause[len("controller:"):], clause)
+            continue
+        if "=" in clause:
+            k, v = (t.strip() for t in clause.split("=", 1))
+            if k in _KNOB_ALIASES:
+                knobs[_KNOB_ALIASES[k]] = _parse_expr(v, clause)
+                continue
+        raise ValueError(
+            f"policy-program: cannot parse clause {clause!r}; grammar:\n"
+            + _SPEC_DOC)
+    if controller is not None and not base.collect_stats:
+        base = base.replace(collect_stats=True,
+                            stats_tag=base.stats_tag or "ctl/")
+    return PolicyProgram(base=base, rules=tuple(rules), phases=tuple(phases),
+                         controller=controller, **knobs)

@@ -67,6 +67,24 @@ def rows(tag: str) -> np.ndarray:
         return np.stack(_SINK[tag])
 
 
+def rows_since(tag: str, start: int) -> np.ndarray:
+    """Records from index ``start`` on, without restacking the history —
+    per-step consumers (the sparsity controller's telemetry window) stay
+    O(new records) instead of O(run length) per tick."""
+    _drain()
+    with _LOCK:
+        new = _SINK[tag][start:]
+        if not new:
+            return np.zeros((0, 3), np.float32)
+        return np.stack(new)
+
+
+def row_count(tag: str) -> int:
+    _drain()
+    with _LOCK:
+        return len(_SINK[tag])
+
+
 def tags() -> List[str]:
     _drain()
     with _LOCK:

@@ -33,6 +33,7 @@ from repro.comm.ring import ring_allreduce_nsd
 from repro.core import nsd
 from repro.core import stats as statslib
 from repro.core.policy import DitherCtx, DitherPolicy, name_salt
+from repro.core.schedule import PolicyProgram, as_program
 from repro.models.api import Model
 from repro.optim import OptConfig, apply_updates
 from repro.utils.pytree import tree_map_with_path_str
@@ -57,13 +58,24 @@ class SSGDConfig:
 
 
 def make_ssgd_step(model: Model, opt_cfg: OptConfig, dcfg: SSGDConfig,
-                   base_policy: DitherPolicy,
-                   comm_policy: Optional[CommPolicy] = None):
+                   base_policy: DitherPolicy | PolicyProgram,
+                   comm_policy: Optional[CommPolicy] = None, *,
+                   phase_step: int = 0):
     """One SSGD step: N per-node dithered grads -> server average -> update.
 
     The batch leaves must have a leading (n_nodes, per_node_batch, ...) axis.
     Per-node dither keys are folded from (step, worker) so noise is i.i.d.
     across nodes — the cancellation the paper relies on.
+
+    ``base_policy`` may be a :class:`repro.core.schedule.PolicyProgram`:
+    every node resolves per-layer rules and knob schedules from the SAME
+    program on the SAME traced step (and, when the program carries a
+    sparsity controller, the SAME ``ctrl`` log-scale tree passed to the
+    returned step function), so all data-parallel nodes see identical
+    policies by construction. A plain DitherPolicy keeps the legacy
+    behavior: its ``s`` is replaced by ``dcfg.s_for_n()``; a program is
+    used verbatim (its author owns the s/N trade). The static variant
+    phase is the one active at ``phase_step``.
 
     With ``comm_policy`` the node->server hop goes through the wire: each
     node's gradient leaves are compressed per the policy (per-node keys, so
@@ -79,10 +91,14 @@ def make_ssgd_step(model: Model, opt_cfg: OptConfig, dcfg: SSGDConfig,
     ``comm_error_bound`` (the reduce's pointwise bound vs the dense mean)
     to the step metrics.
     """
-    policy = base_policy.replace(s=dcfg.s_for_n())
+    program = as_program(base_policy)
+    if isinstance(base_policy, DitherPolicy):
+        program = program.replace(base=base_policy.replace(s=dcfg.s_for_n()))
+    policy = program.phase_policy_at(phase_step)
 
-    def node_grad(params, node_batch, base_key, step, worker):
-        ctx = DitherCtx.for_step(base_key, step, policy, worker=worker)
+    def node_grad(params, node_batch, base_key, step, worker, ctrl):
+        ctx = DitherCtx.for_step(base_key, step, policy, worker=worker,
+                                 program=program, ctrl=ctrl or None)
         loss, grads = jax.value_and_grad(
             lambda p: model.loss(p, node_batch, ctx=ctx))(params)
         return loss, grads
@@ -171,11 +187,11 @@ def make_ssgd_step(model: Model, opt_cfg: OptConfig, dcfg: SSGDConfig,
         grads = tree_map_with_path_str(leaf, grads)
         return grads, totals
 
-    def ssgd_step(params, opt_state, sharded_batch, base_key):
+    def ssgd_step(params, opt_state, sharded_batch, base_key, ctrl=None):
         step = opt_state["step"]
         workers = jnp.arange(dcfg.n_nodes)
         losses, grads = jax.vmap(
-            lambda b, w: node_grad(params, b, base_key, step, w),
+            lambda b, w: node_grad(params, b, base_key, step, w, ctrl),
             in_axes=(0, 0))(sharded_batch, workers)
         comm_metrics = {}
         reduced = False

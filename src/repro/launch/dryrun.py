@@ -214,7 +214,12 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
             lowered = _lower_for_case(model, case, rules, policy, opt_name)
             compiled = lowered.compile()
         compile_s = time.time() - t0
-        cost = dict(compiled.cost_analysis())
+        # cost_analysis() returns a bare dict on newer jax, a one-element
+        # list of dicts on the 0.4.x line CI pins
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
+        cost = dict(ca)
         mem = compiled.memory_analysis()
         mem_stats = {
             "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
@@ -288,10 +293,20 @@ def main() -> None:
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--dither", choices=["off", "paper", "int8", "row"],
                     default="paper")
+    ap.add_argument("--policy-program", default="",
+                    help="per-layer/step policy program spec (see "
+                    "repro.core.schedule.parse_program); the lowered step "
+                    "bakes phase 0 and resolves rules per layer name")
     ap.add_argument("--out", default="")
     args = ap.parse_args()
 
     policy = None if args.dither == "off" else DitherPolicy(variant=args.dither)
+    if args.policy_program:
+        from repro.core.schedule import parse_program
+
+        policy = parse_program(
+            args.policy_program,
+            base=policy if policy is not None else DitherPolicy(variant="off"))
     cells = []
     if args.all:
         targets = [(a, s) for a in ARCH_IDS for s in SHAPES]

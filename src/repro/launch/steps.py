@@ -7,24 +7,36 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.policy import DitherCtx, DitherPolicy
+from repro.core.schedule import PolicyProgram, as_program
 from repro.models.api import Model
 from repro.optim import OptConfig, apply_updates, init_opt_state
 
 
 def make_train_step(model: Model, opt_cfg: OptConfig,
-                    policy: Optional[DitherPolicy] = None):
+                    policy: Optional[DitherPolicy | PolicyProgram] = None,
+                    *, phase_step: int = 0):
     """(params, opt_state, batch, base_key) -> (params, opt_state, metrics).
 
     The dither key is folded from (base_key, step) so noise is fresh each
     step; under pjit the per-layer fold-ins give i.i.d. noise across the
     whole pre-activation tensor regardless of sharding.
+
+    ``policy`` may be a PolicyProgram: per-layer rules and knob schedules
+    resolve on the traced step inside this one compiled function. The
+    *variant* phase is static per trace — this factory bakes the phase
+    active at ``phase_step`` (the Trainer drives phases across a run;
+    dry-runs lower the phase they ask for).
     """
+    program = as_program(policy)
+    phase_policy = (program.phase_policy_at(phase_step)
+                    if program is not None else None)
 
     def train_step(params, opt_state, batch, base_key):
         step = opt_state["step"]
         ctx = None
-        if policy is not None and policy.enabled:
-            ctx = DitherCtx.for_step(base_key, step, policy)
+        if phase_policy is not None and program.step_enabled(phase_policy):
+            ctx = DitherCtx.for_step(base_key, step, phase_policy,
+                                     program=program)
 
         loss, grads = jax.value_and_grad(
             lambda p: model.loss(p, batch, ctx=ctx))(params)

@@ -19,6 +19,7 @@ import jax
 
 from repro.configs import ARCH_IDS, get_model, get_smoke_model
 from repro.core.policy import DitherPolicy
+from repro.core.schedule import parse_program
 from repro.data import TokenStreamConfig, token_batch
 from repro.optim import OptConfig
 from repro.train import Trainer, TrainerConfig
@@ -61,6 +62,11 @@ def main() -> None:
     ap.add_argument("--dither", choices=["off", "paper", "int8", "row",
                                          "meprop"], default="paper")
     ap.add_argument("--s", type=float, default=2.0)
+    ap.add_argument("--policy-program", default="",
+                    help="per-layer/step policy program spec, e.g. "
+                    "'phase@0=off;phase@30=paper;s=lin(30,200,4.0,2.0);"
+                    "rule lm_head:off' (see repro.core.schedule). Built on "
+                    "top of --dither/--s as the base policy.")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="")
@@ -75,6 +81,12 @@ def main() -> None:
         args.arch)
     policy = (None if args.dither == "off"
               else DitherPolicy(variant=args.dither, s=args.s))
+    if args.policy_program:
+        # --dither off stays off as the base: only explicit program clauses
+        # (phases / rule variants) re-enable dithering
+        base = (policy if policy is not None
+                else DitherPolicy(variant="off", s=args.s))
+        policy = parse_program(args.policy_program, base=base)
     trainer = Trainer(
         model,
         OptConfig(name="adamw", lr=args.lr, schedule="cosine",

@@ -206,14 +206,31 @@ def moe_a2a(params: Params, x2d: jax.Array, cfg: MoEConfig,
 
     key = ctx.key_for(name) if ctx is not None else jax.random.PRNGKey(0)
     policy = ctx.policy if ctx is not None else None
+    program = ctx.program if ctx is not None else None
+    # traced per-step policy state crosses the shard_map boundary as explicit
+    # (replicated) inputs: the step for knob schedules, and the controller's
+    # per-layer log-scales stacked into one vector (dict rebuilt inside from
+    # the static name tuple) — closures over outer tracers are not portable
+    # across shard_map implementations.
+    step = (ctx.step if ctx is not None and ctx.step is not None
+            else jnp.zeros((), jnp.int32))
+    ctrl_names = tuple(sorted(ctx.ctrl)) if ctx is not None and ctx.ctrl else ()
+    ctrl_vec = (jnp.stack([ctx.ctrl[n] for n in ctrl_names])
+                if ctrl_names else jnp.zeros((0,), jnp.float32))
 
-    def body(x_loc, router, w_gate_loc, w_up_loc, w_down_loc, key):
+    def body(x_loc, router, w_gate_loc, w_up_loc, w_down_loc, key, step,
+             ctrl_vec):
         # x_loc: (T_loc, d); w_*_loc: (E_loc, ...) — this device's experts
         T_loc, d = x_loc.shape
         E_loc = E // ep
         k = cfg.top_k
         cap = max(1, int(cfg.capacity_factor * T_loc * k / E))
-        inner_ctx = DitherCtx(key=key, policy=policy) if policy is not None else None
+        ctrl = ({n: ctrl_vec[i] for i, n in enumerate(ctrl_names)}
+                if ctrl_names else None)
+        inner_ctx = (DitherCtx(key=key, policy=policy, program=program,
+                               step=step, ctrl=ctrl,
+                               recorder=ctx.recorder if ctx else None)
+                     if policy is not None else None)
 
         top_i, top_p, aux = _routing({"router": router}, x_loc, cfg, inner_ctx)
         flat_choice = top_i.reshape(-1)  # (T_loc*k,)
@@ -254,11 +271,12 @@ def moe_a2a(params: Params, x2d: jax.Array, cfg: MoEConfig,
     out, aux = axlib.shard_map_compat(
         body, mesh=mesh,
         in_specs=(P(token_axes, None), P(None, None), P(ep_axis, None, None),
-                  P(ep_axis, None, None), P(ep_axis, None, None), P()),
+                  P(ep_axis, None, None), P(ep_axis, None, None), P(), P(),
+                  P()),
         out_specs=(P(token_axes, None), P()),
         check=False,
     )(x2d, params["router"], params["w_gate"], params["w_up"],
-      params["w_down"], key)
+      params["w_down"], key, step, ctrl_vec)
 
     if cfg.n_shared:
         shared = _shared_ffn(params, x2d, cfg, ctx, name)

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.comm.compression import (CommPolicy, compress_tree,
                                     init_comm_state)
 from repro.core.policy import DitherCtx, DitherPolicy
+from repro.core.schedule import ControllerDriver, PolicyProgram, as_program
 from repro.models.api import Model
 from repro.optim import OptConfig, apply_updates, init_opt_state
 from repro.train.checkpoint import CheckpointManager
@@ -37,14 +38,17 @@ class TrainerConfig:
 
 class Trainer:
     def __init__(self, model: Model, opt_cfg: OptConfig, tcfg: TrainerConfig,
-                 policy: Optional[DitherPolicy] = None,
+                 policy: Optional[DitherPolicy | PolicyProgram] = None,
                  eval_fn: Optional[Callable] = None,
                  comm_policy: Optional[CommPolicy] = None,
                  topology=None):
         self.model = model
         self.opt_cfg = opt_cfg
         self.tcfg = tcfg
+        # a plain DitherPolicy is lifted into the degenerate PolicyProgram;
+        # every step resolves per layer through the program path.
         self.policy = policy
+        self.program = as_program(policy)
         self.eval_fn = eval_fn
         # gradient wire path: accumulated grads go through the comm policy
         # (what a data-parallel node would put on the wire each step).
@@ -56,24 +60,35 @@ class Trainer:
         # fast (ICI) and, when the topology spans pods, slow (DCN) axis.
         self.topology = topology
         self._comm_state: Optional[Dict[str, Any]] = None
+        # closed-loop sparsity controller: shared host-side protocol
+        # (discover -> traced state -> per-step tick); the state rides the
+        # checkpoint tree next to the EF residuals, the telemetry cursor is
+        # host-only (re-measured from scratch on resume)
+        self._ctrl = ControllerDriver(self.program)
         self.guard = PreemptionGuard(install=False)
         self.ckpt = (CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep_ckpts)
                      if tcfg.ckpt_every and tcfg.ckpt_dir else None)
-        self._jit_step = jax.jit(self._step)
+        # phase_policy is static: a PolicyProgram phase boundary retraces
+        # exactly once; knob schedules / controller nudges are traced and
+        # re-use the compiled step (tests/test_schedule.py pins this).
+        self._jit_step = jax.jit(self._step, static_argnames=("phase_policy",))
         self.history: list = []
 
     # one optimizer step with optional micro-batch gradient accumulation
-    def _step(self, params, opt_state, batches, base_key, comm_state):
+    def _step(self, params, opt_state, batches, base_key, comm_state,
+              ctrl_state, phase_policy):
         step = opt_state["step"]
         ctx = None
-        if self.policy is not None and self.policy.enabled:
-            ctx = DitherCtx.for_step(base_key, step, self.policy)
+        if phase_policy is not None and self.program.step_enabled(phase_policy):
+            ctx = DitherCtx.for_step(base_key, step, phase_policy,
+                                     program=self.program,
+                                     ctrl=ctrl_state or None)
 
         def one_loss(p, b, i):
             c = None
             if ctx is not None:
                 # micro-batches get distinct noise: fold the slice index in
-                c = DitherCtx(jax.random.fold_in(ctx.key, i), ctx.policy)
+                c = ctx.with_key(jax.random.fold_in(ctx.key, i))
             return self.model.loss(p, b, ctx=c)
 
         n = self.tcfg.grad_accum
@@ -125,7 +140,31 @@ class Trainer:
         tree = {"params": params, "opt": opt_state}
         if self._comm_state:
             tree["comm"] = self._comm_state
+        if self._ctrl.state:
+            tree["ctrl"] = self._ctrl.state
         return tree
+
+    def _init_ctrl_state(self, params, batch) -> None:
+        """One-time controller setup (idempotent via the driver's flag).
+
+        Layer names are discovered by an eval_shape trace of the loss (no
+        FLOPs) so the {layer: log-scale} dict is complete before step 0 —
+        growing it mid-run would change the jitted step's input structure
+        and force a retrace."""
+        if not self._ctrl.active or self._ctrl.ready:
+            return
+        names = self._ctrl.ensure_init(
+            lambda p, b, ctx: self.model.loss(p, b, ctx=ctx), params, batch)
+        if self.ckpt is not None and self.ckpt.latest_step() is not None:
+            # the main restore ran before the batch (and thus the layer
+            # names) existed; pick the controller subtree up now
+            try:
+                self._ctrl.state = self.ckpt.restore(
+                    {"ctrl": self._ctrl.state})["ctrl"]
+                log.info("restored controller state")
+            except KeyError:
+                pass  # checkpoint predates the controller: scales restart at 1
+        log.info("sparsity controller: %d layers under control", len(names))
 
     def restore_or_init(self, key: jax.Array):
         params, specs = self.model.init(key)
@@ -140,6 +179,8 @@ class Trainer:
                                            "opt": opt_state})
             params, opt_state = state["params"], state["opt"]
             self._comm_state = state.get("comm", self._comm_state)
+            # controller state is restored later, in _init_ctrl_state: its
+            # template needs the layer names, which need the first batch
             log.info("restored checkpoint at step %d",
                      int(opt_state["step"]))
         return params, opt_state, specs
@@ -166,9 +207,17 @@ class Trainer:
             batch = next(batch_iter)
             if isinstance(batch, tuple):  # (step, batch) loaders
                 batch = batch[1]
+            self._init_ctrl_state(params, batch)
+            phase_policy = (self.program.phase_policy_at(step)
+                            if self.program is not None else None)
             params, opt_state, metrics, comm_state = self._jit_step(
-                params, opt_state, batch, base_key, comm_state)
+                params, opt_state, batch, base_key, comm_state,
+                self._ctrl.state, phase_policy=phase_policy)
             self._comm_state = comm_state
+            # controller tick: fold the step's per-layer telemetry into the
+            # log-scales (host-side; the updated state is a traced input
+            # next step, so no retrace)
+            self._ctrl.tick()
             if self.tcfg.log_every and (step + 1) % self.tcfg.log_every == 0:
                 loss = float(metrics["loss"])
                 row = {"step": step + 1, "loss": loss}

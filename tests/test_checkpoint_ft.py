@@ -170,3 +170,55 @@ class TestPreemption:
         # the trigger fires while batch 3 is being fetched, so step 3 still
         # completes; the checkpoint lands at the NEXT boundary (step 4)
         assert trainer.ckpt.latest_step() == 4
+
+
+class TestControllerResume:
+    def test_controller_state_rides_checkpoint(self, tmp_path, key):
+        """The sparsity controller's per-layer log-scales resume losslessly
+        (restored in _init_ctrl_state once the first batch names layers)."""
+        import numpy as np
+
+        from repro.configs import get_smoke_model
+        from repro.core import DitherPolicy, PolicyProgram, SparsityController
+        from repro.data import TokenStreamConfig, token_batch
+        from repro.optim import OptConfig
+        from repro.train import Trainer, TrainerConfig
+
+        model = get_smoke_model("mamba2-370m")
+        tcfg = TokenStreamConfig(vocab=model.cfg.vocab, seq_len=16, batch=2)
+
+        def it():
+            i = 0
+            while True:
+                yield token_batch(tcfg, i)
+                i += 1
+
+        def make_trainer(total_steps):
+            prog = PolicyProgram(
+                base=DitherPolicy(variant="paper", collect_stats=True,
+                                  stats_tag="cres/"),
+                controller=SparsityController(target=0.95, gain=3.0))
+            return Trainer(model, OptConfig(lr=1e-3),
+                           TrainerConfig(total_steps=total_steps, log_every=0,
+                                         ckpt_every=4,
+                                         ckpt_dir=str(tmp_path)),
+                           policy=prog)
+
+        t1 = make_trainer(4)
+        t1.fit(it())
+        t1.ckpt.wait()
+        saved = {k: float(v) for k, v in t1._ctrl.state.items()}
+        assert saved and any(v != 0.0 for v in saved.values())
+
+        # restore path in isolation: after the main restore (no batch yet),
+        # _init_ctrl_state discovers the layer names and picks the ctrl
+        # subtree up from the checkpoint — exactly, not re-zeroed
+        t2 = make_trainer(6)
+        params, _, _ = t2.restore_or_init(jax.random.PRNGKey(0))
+        t2._init_ctrl_state(params, token_batch(tcfg, 0))
+        restored = {k: float(v) for k, v in t2._ctrl.state.items()}
+        assert restored == saved
+        # and the resumed run continues from there
+        out = t2.fit(it())
+        assert int(out["opt_state"]["step"]) == 6
+        assert set(t2._ctrl.state) == set(saved)

@@ -1,0 +1,390 @@
+"""Policy programs: rule precedence, schedules, phases, controller,
+validation error messages, and the zero-recompile pin for traced knobs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Const, DitherCtx, DitherPolicy, LayerRule, Linear,
+                        PhaseSpec, Piecewise, PolicyProgram,
+                        SparsityController, dense, meprop, parse_program)
+from repro.core import stats as statslib
+from repro.core.schedule import as_program, discover_layer_names
+
+
+def _resolve_s(prog, name, step=0, ctrl=None):
+    ctx = DitherCtx.for_step(jax.random.PRNGKey(0), step,
+                             prog.phase_policy_at(step), program=prog,
+                             ctrl=ctrl)
+    r = ctx.resolve(name)
+    return None if r is None else float(r.knobs[0])
+
+
+class TestValidation:
+    def test_policy_s_must_be_positive(self):
+        with pytest.raises(ValueError, match="s must be > 0"):
+            DitherPolicy(s=0.0)
+        with pytest.raises(ValueError, match="s must be > 0"):
+            DitherPolicy(s=-1.5)
+
+    def test_policy_meprop_k_frac_range(self):
+        with pytest.raises(ValueError,
+                           match=r"meprop_k_frac must be in \(0, 1\]"):
+            DitherPolicy(meprop_k_frac=0.0)
+        with pytest.raises(ValueError,
+                           match=r"meprop_k_frac must be in \(0, 1\]"):
+            DitherPolicy(meprop_k_frac=1.5)
+        DitherPolicy(meprop_k_frac=1.0)  # boundary is legal
+
+    def test_policy_row_alpha_positive(self):
+        with pytest.raises(ValueError, match="row_alpha must be > 0"):
+            DitherPolicy(row_alpha=-0.1)
+
+    def test_rule_validation_carries_pattern(self):
+        with pytest.raises(ValueError, match=r"LayerRule\('fc1'\).*s must"):
+            LayerRule(pattern="fc1", s=-2.0)
+        with pytest.raises(ValueError, match="unknown variant"):
+            LayerRule(pattern="fc1", variant="bogus")
+        with pytest.raises(ValueError, match="pattern must be a non-empty"):
+            LayerRule(pattern="")
+
+    def test_schedule_validation(self):
+        with pytest.raises(ValueError, match="strictly increasing"):
+            Piecewise(((5, 1.0), (5, 2.0)))
+        with pytest.raises(ValueError, match="end_step must be >"):
+            Linear(10, 10, 1.0, 2.0)
+
+    def test_schedule_values_range_checked(self):
+        """A ramp cannot smuggle an illegal knob value past construction."""
+        with pytest.raises(ValueError, match="s must be > 0"):
+            PolicyProgram(s=Linear(0, 10, -4.0, 2.0))
+        with pytest.raises(ValueError, match="s must be > 0"):
+            LayerRule(pattern="fc", s=Piecewise(((0, 2.0), (5, 0.0))))
+        with pytest.raises(ValueError,
+                           match=r"meprop_k_frac must be in \(0, 1\]"):
+            PolicyProgram(meprop_k_frac=Const(1.5))
+        with pytest.raises(ValueError, match="row_alpha must be > 0"):
+            parse_program("rule fc:row_alpha=lin(0,5,1.0,-1.0)")
+        # legal endpoints pass whether float or schedule
+        PolicyProgram(s=Linear(0, 10, 4.0, 0.5),
+                      meprop_k_frac=Piecewise(((0, 0.2), (5, 0.05))))
+
+    def test_phase_validation(self):
+        with pytest.raises(ValueError, match="unknown variant"):
+            PhaseSpec(0, "nope")
+        with pytest.raises(ValueError, match="strictly increasing"):
+            PolicyProgram(phases=(PhaseSpec(10, "paper"), PhaseSpec(5, "int8")))
+
+    def test_controller_validation(self):
+        with pytest.raises(ValueError, match=r"target must be in \(0, 1\)"):
+            SparsityController(target=1.0)
+        with pytest.raises(ValueError, match="gain must be > 0"):
+            SparsityController(target=0.9, gain=0.0)
+        with pytest.raises(ValueError, match="collect_stats=True"):
+            PolicyProgram(base=DitherPolicy(),
+                          controller=SparsityController(target=0.9))
+
+
+class TestRules:
+    def test_last_match_wins_per_knob(self):
+        prog = PolicyProgram(
+            base=DitherPolicy(variant="paper", s=2.0),
+            rules=(LayerRule(pattern="fc", s=3.0, row_alpha=0.5),
+                   LayerRule(pattern="fc1", s=4.0)))
+        # fc1 matches both: s from the LAST rule, row_alpha survives from
+        # the earlier one (per-knob layering)
+        assert _resolve_s(prog, "fc1") == 4.0
+        ctx = DitherCtx.for_step(jax.random.PRNGKey(0), 0, prog.base,
+                                 program=prog)
+        assert float(ctx.resolve("fc1").knobs[2]) == 0.5
+        assert _resolve_s(prog, "fc0") == 3.0
+        assert _resolve_s(prog, "other") == 2.0
+
+    def test_glob_vs_substring(self):
+        prog = PolicyProgram(
+            base=DitherPolicy(s=2.0),
+            rules=(LayerRule(pattern="L*.mlp.*", s=3.0),
+                   LayerRule(pattern="attn", s=4.0)))
+        assert _resolve_s(prog, "L3.mlp.up") == 3.0
+        assert _resolve_s(prog, "L3.attn.q") == 4.0  # substring
+        assert _resolve_s(prog, "mlp.up") == 2.0  # glob needs the L prefix
+
+    def test_off_rule_excludes_layer(self):
+        prog = PolicyProgram(base=DitherPolicy(),
+                             rules=(LayerRule(pattern="lm_head",
+                                              variant="off"),))
+        assert _resolve_s(prog, "lm_head") is None
+        assert _resolve_s(prog, "fc0") is not None
+
+    def test_base_exclude_still_respected(self):
+        prog = as_program(DitherPolicy(exclude=("lm_head",)))
+        assert _resolve_s(prog, "my_lm_head") is None
+        assert _resolve_s(prog, "fc0") is not None
+
+    def test_universal_rule_matches_global_policy_bitwise(self, key):
+        x = jax.random.normal(key, (8, 16))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (16, 24)) * 0.1
+        pol = DitherPolicy(variant="paper", s=2.0)
+
+        def grad_with(ctx):
+            return jax.grad(lambda w: jnp.sum(
+                dense(x, w, ctx=ctx, name="fc") ** 2))(w)
+
+        g_global = grad_with(DitherCtx.for_step(key, 3, pol))
+        prog = PolicyProgram(base=pol, rules=(LayerRule(),))
+        g_prog = grad_with(DitherCtx.for_step(key, 3, pol, program=prog))
+        np.testing.assert_array_equal(np.asarray(g_global),
+                                      np.asarray(g_prog))
+
+
+class TestSchedules:
+    def test_piecewise_boundary_steps(self):
+        sched = Piecewise(((0, 1.0), (5, 2.0), (9, 3.0)))
+        vals = [float(sched.at(jnp.int32(i))) for i in (0, 4, 5, 8, 9, 100)]
+        assert vals == [1.0, 1.0, 2.0, 2.0, 3.0, 3.0]
+
+    def test_piecewise_clamps_before_first_boundary(self):
+        sched = Piecewise(((10, 5.0),))
+        assert float(sched.at(jnp.int32(0))) == 5.0
+
+    def test_linear_endpoints_and_clamp(self):
+        sched = Linear(10, 20, 4.0, 2.0)
+        assert float(sched.at(jnp.int32(0))) == 4.0
+        assert float(sched.at(jnp.int32(10))) == 4.0
+        assert float(sched.at(jnp.int32(15))) == pytest.approx(3.0)
+        assert float(sched.at(jnp.int32(20))) == 2.0
+        assert float(sched.at(jnp.int32(999))) == 2.0
+
+    def test_const_and_program_level_schedule(self):
+        prog = PolicyProgram(base=DitherPolicy(s=2.0), s=Const(3.5))
+        assert _resolve_s(prog, "fc") == 3.5
+
+    def test_phase_policy_at(self):
+        prog = PolicyProgram(
+            base=DitherPolicy(variant="paper"),
+            phases=(PhaseSpec(0, "off"), PhaseSpec(10, "paper"),
+                    PhaseSpec(20, "int8")))
+        assert prog.phase_policy_at(0).variant == "off"
+        assert prog.phase_policy_at(9).variant == "off"
+        assert prog.phase_policy_at(10).variant == "paper"
+        assert prog.phase_policy_at(25).variant == "int8"
+        assert prog.ever_enabled
+
+    def test_meprop_traced_matches_static(self, key):
+        g = jax.random.normal(key, (16, 64))
+        for frac in (0.05, 0.1, 0.33, 1.0):
+            a = meprop.meprop_sparsify(g, frac)
+            b = meprop.meprop_sparsify(g, jnp.float32(frac))
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_unscheduled_meprop_frac_stays_static(self):
+        """A constant k_frac rides StaticSpec (cheap top_k backward); only
+        a real schedule pays the traced per-row sort path."""
+        base = DitherPolicy(variant="meprop", meprop_k_frac=0.25)
+        assert base.spec().meprop_k_static == 0.25
+        assert DitherPolicy(variant="paper").spec().meprop_k_static is None
+        ctx = DitherCtx.for_step(jax.random.PRNGKey(0), 0, base,
+                                 program=PolicyProgram(base=base))
+        assert ctx.resolve("fc").spec.meprop_k_static == 0.25
+        sched = PolicyProgram(base=base,
+                              meprop_k_frac=Piecewise(((0, 0.2), (5, 0.1))))
+        ctx2 = DitherCtx.for_step(jax.random.PRNGKey(0), 0, base,
+                                  program=sched)
+        assert ctx2.resolve("fc").spec.meprop_k_static is None
+
+    def test_off_base_with_enabling_rule(self):
+        """--dither off + a rule that turns a layer on: the step must build
+        a ctx, and only the rule's layers dither."""
+        prog = PolicyProgram(base=DitherPolicy(variant="off"),
+                             rules=(LayerRule(pattern="probe",
+                                              variant="paper"),))
+        assert prog.rules_enable
+        assert prog.step_enabled(prog.phase_policy_at(0))
+        assert _resolve_s(prog, "probe") is not None
+        assert _resolve_s(prog, "other") is None
+
+
+class TestCompileCounter:
+    def test_s_ramp_causes_no_rejit(self, key):
+        """The acceptance pin: a stepwise s ramp over a multi-step loop
+        compiles the backward exactly once per layer shape."""
+        x = jax.random.normal(key, (8, 16))
+        prog = PolicyProgram(
+            base=DitherPolicy(variant="paper", collect_stats=True,
+                              stats_tag="cc/"),
+            s=Piecewise(((0, 1.0), (2, 2.0), (4, 4.0))))
+        traces = []
+
+        @jax.jit
+        def step(w, i, k):
+            traces.append(1)  # appended at trace time only
+            ctx = DitherCtx.for_step(k, i, prog.base, program=prog)
+            # two layer shapes under one program
+            def loss(w):
+                h = dense(x, w["w1"], ctx=ctx, name="fc1")
+                return jnp.sum(dense(h, w["w2"], ctx=ctx, name="fc2") ** 2)
+            g = jax.grad(loss)(w)
+            return jax.tree.map(lambda a, b: a - 0.01 * b, w, g)
+
+        statslib.reset()
+        w = {"w1": jax.random.normal(key, (16, 24)) * 0.1,
+             "w2": jax.random.normal(jax.random.fold_in(key, 1), (24, 8)) * 0.1}
+        for i in range(6):
+            w = step(w, jnp.int32(i), key)
+        assert len(traces) == 1, f"s ramp retraced {len(traces)} times"
+        # and the ramp actually took effect: deltas differ across steps
+        jax.effects_barrier()
+        deltas = statslib.rows("cc/fc1")[:, 2]
+        assert len(np.unique(np.round(deltas / deltas[0], 3))) >= 3, deltas
+
+    def test_phase_switch_retraces_exactly_once(self, key):
+        x = jax.random.normal(key, (8, 16))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (16, 8)) * 0.1
+        prog = PolicyProgram(base=DitherPolicy(variant="paper"),
+                             phases=(PhaseSpec(0, "paper"),
+                                     PhaseSpec(3, "int8")))
+        traces = []
+
+        def step(w, i, k, phase):
+            traces.append(1)
+            ctx = DitherCtx.for_step(k, i, phase, program=prog)
+            g = jax.grad(lambda w: jnp.sum(
+                dense(x, w, ctx=ctx, name="fc") ** 2))(w)
+            return w - 0.01 * g
+
+        jit_step = jax.jit(step, static_argnames=("phase",))
+        for i in range(6):
+            w = jit_step(w, jnp.int32(i), key,
+                         phase=prog.phase_policy_at(i))
+        assert len(traces) == 2, traces
+
+    def test_controller_state_update_causes_no_rejit(self, key):
+        x = jax.random.normal(key, (8, 16))
+        prog = PolicyProgram(
+            base=DitherPolicy(variant="paper", collect_stats=True,
+                              stats_tag="cr/"),
+            controller=SparsityController(target=0.9))
+        traces = []
+
+        def step(w, i, k, ctrl):
+            traces.append(1)
+            ctx = DitherCtx.for_step(k, i, prog.base, program=prog,
+                                     ctrl=ctrl)
+            g = jax.grad(lambda w: jnp.sum(
+                dense(x, w, ctx=ctx, name="fc") ** 2))(w)
+            return w - 0.01 * g
+
+        jit_step = jax.jit(step)
+        w = jax.random.normal(key, (16, 8)) * 0.1
+        ctrl = prog.controller.init_state(["fc"])
+        for i in range(5):
+            w = jit_step(w, jnp.int32(i), key, ctrl)
+            ctrl = prog.controller.update(ctrl, {"fc": 0.5 + 0.05 * i})
+        assert len(traces) == 1, traces
+
+
+class TestController:
+    def test_converges_on_synthetic_plant(self):
+        """Integral control against a monotone sparsity(s) response."""
+        ctl = SparsityController(target=0.9, gain=2.0)
+        state = ctl.init_state(["a", "b"])
+
+        def plant(log_scale, base):
+            # monotone saturating response of sparsity to s = base*exp(ls)
+            s = base * float(jnp.exp(log_scale))
+            return 1.0 - float(np.exp(-0.9 * s))
+
+        for _ in range(50):
+            measured = {"a": plant(state["a"], 1.0),
+                        "b": plant(state["b"], 4.0)}
+            state = ctl.update(state, measured)
+        assert abs(plant(state["a"], 1.0) - 0.9) < 0.03
+        assert abs(plant(state["b"], 4.0) - 0.9) < 0.03
+
+    def test_clips_to_scale_bounds(self):
+        ctl = SparsityController(target=0.99, gain=50.0, min_scale=0.5,
+                                 max_scale=2.0)
+        state = ctl.init_state(["a"])
+        state = ctl.update(state, {"a": 0.0})  # huge positive error
+        assert float(state["a"]) == pytest.approx(np.log(2.0))
+        state = ctl.update(state, {"a": 1.0})  # error the other way
+        assert float(state["a"]) >= np.log(0.5) - 1e-6
+
+    def test_unknown_layer_names_ignored(self):
+        ctl = SparsityController(target=0.9)
+        state = ctl.init_state(["a"])
+        new = ctl.update(state, {"ghost": 0.1})
+        assert set(new) == {"a"} and float(new["a"]) == 0.0
+
+    def test_telemetry_window_incremental(self, key):
+        """measure() consumes only new rows (O(new) per tick) and never
+        re-reports a row."""
+        from repro.core import DitherPolicy as DP
+        from repro.core.schedule import TelemetryWindow
+        statslib.reset()
+        x = jax.random.normal(key, (8, 16))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (16, 8))
+        win = TelemetryWindow("tw/")
+        pol = DP(variant="paper", collect_stats=True, stats_tag="tw/")
+        for i in range(3):
+            ctx = DitherCtx.for_step(key, i, pol)
+            jax.grad(lambda w: jnp.sum(dense(x, w, ctx=ctx, name="fc") ** 2)
+                     )(w)
+            m = win.measure()
+            assert set(m) == {"fc"} and 0.0 <= m["fc"] <= 1.0
+        assert win.measure() == {}  # nothing new
+        assert statslib.row_count("tw/fc") == 3
+        # a SECOND window (new run / in-process resume) must not consume the
+        # first run's history: cursors are primed at construction
+        win2 = TelemetryWindow("tw/")
+        assert win2.measure() == {}
+        ctx = DitherCtx.for_step(key, 99, pol)
+        jax.grad(lambda w: jnp.sum(dense(x, w, ctx=ctx, name="fc") ** 2))(w)
+        assert set(win2.measure()) == {"fc"}
+
+    def test_discover_layer_names(self, key):
+        def loss(p, b, ctx):
+            h = dense(b, p["w1"], ctx=ctx, name="enc.fc1")
+            return jnp.sum(dense(h, p["w2"], ctx=ctx, name="enc.fc2") ** 2)
+
+        params = {"w1": jnp.zeros((16, 8)), "w2": jnp.zeros((8, 4))}
+        batch = jnp.zeros((2, 16))
+        assert discover_layer_names(loss, params, batch) == [
+            "enc.fc1", "enc.fc2"]
+
+
+class TestParser:
+    def test_full_spec_round_trip(self):
+        prog = parse_program(
+            "phase@0=off;phase@30=paper;s=lin(30,200,4.0,2.0);"
+            "k_frac=step(0:0.1,50:0.05);rule lm_head:off;"
+            "rule L*.mlp.*:s=3.0,row_alpha=0.5;"
+            "controller:target=0.9,gain=3.0,min=0.5,max=2.0",
+            base=DitherPolicy(collect_stats=True, stats_tag="p/"))
+        assert prog.phases == (PhaseSpec(0, "off"), PhaseSpec(30, "paper"))
+        assert prog.s == Linear(30, 200, 4.0, 2.0)
+        assert prog.meprop_k_frac == Piecewise(((0, 0.1), (50, 0.05)))
+        assert prog.rules[0] == LayerRule(pattern="lm_head", variant="off")
+        assert prog.rules[1].s == 3.0 and prog.rules[1].row_alpha == 0.5
+        assert prog.controller == SparsityController(
+            target=0.9, gain=3.0, min_scale=0.5, max_scale=2.0)
+
+    def test_controller_forces_collect_stats(self):
+        prog = parse_program("controller:target=0.9")
+        assert prog.base.collect_stats
+
+    def test_parse_errors_name_the_clause(self):
+        with pytest.raises(ValueError, match="cannot parse clause 'bogus'"):
+            parse_program("bogus")
+        with pytest.raises(ValueError, match=r"lin\(\) takes"):
+            parse_program("s=lin(1,2)")
+        with pytest.raises(ValueError, match="unknown rule key"):
+            parse_program("rule fc:wat=1")
+        with pytest.raises(ValueError, match="controller needs target"):
+            parse_program("controller:gain=2.0")
+
+    def test_program_is_hashable_static_arg(self):
+        prog = parse_program("s=lin(0,10,4.0,2.0);rule fc:off")
+        assert hash(prog) == hash(parse_program("s=lin(0,10,4.0,2.0);rule fc:off"))
+        d = {prog: 1}
+        assert d[prog] == 1
