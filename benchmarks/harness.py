@@ -21,14 +21,20 @@ def train_classifier(model: Model,
                      steps: int = 60, batch: int = 64, lr: float = 0.05,
                      seed: int = 0, noise: float = 0.5,
                      img: Optional[Tuple[int, int]] = None,
-                     n_classes: int = 10) -> Dict[str, float]:
+                     n_classes: int = 10, memory=None) -> Dict[str, float]:
     """Paper-recipe SGD training on the synthetic classification set.
 
     ``policy`` may be a full PolicyProgram (phases retrace at their
     boundaries; knob schedules and the controller ride the compiled step).
-    Returns acc%, mean dither sparsity%, worst-case bits, us/step.
+    ``memory`` is a repro.memory MemoryPolicy (or spec string) selecting
+    each dithered layer's residual codec / remat. Returns acc%, mean
+    dither sparsity%, worst-case bits, us/step (+ the measured residual
+    compression when telemetry is on and a memory policy is set).
     """
+    from repro.memory.policy import as_memory_policy
+
     program = as_program(policy)
+    memory = as_memory_policy(memory)
     collect = program is not None and program.base.collect_stats
     if collect:
         statslib.reset()
@@ -46,7 +52,8 @@ def train_classifier(model: Model,
 
     def step_body(params, state, b, bk, ctrl, phase_pol):
         ctx = (DitherCtx.for_step(bk, state["step"], phase_pol,
-                                  program=program, ctrl=ctrl or None)
+                                  program=program, ctrl=ctrl or None,
+                                  memory=memory)
                if phase_pol is not None and program.step_enabled(phase_pol)
                else None)
         loss, grads = jax.value_and_grad(
@@ -90,6 +97,10 @@ def train_classifier(model: Model,
     if collect:
         out["sparsity"] = statslib.overall_sparsity() * 100
         out["max_bits"] = statslib.overall_max_bits()
+        if statslib.memory_tags():
+            out["residual_compression"] = (
+                statslib.overall_residual_compression(
+                    program.base.stats_tag))
     return out
 
 

@@ -1,0 +1,154 @@
+"""Residual-memory suite: the `repro.memory` acceptance gates.
+
+Four claims, gated on every PR:
+
+* **roundtrip** — the ``nsd`` residual codec is BIT-EXACT against the
+  ``repro.core.nsd`` reference for the same key (the only loss is the
+  unbiased NSD quantization itself; zero-width band), including
+  non-chunk-multiple shapes; the ``int8`` affine per-row codec's
+  reconstruction error stays within its characterized scale/2 bound.
+* **compression** — training LeNet-300-100 with NSD-coded residuals, the
+  measured residual bytes (occupancy-aware, summed over the dithered
+  layers and all steps) compress >= 3.5x vs the dense fp32 store
+  (``meets_3p5_floor`` is a hard zero-band gate on that floor, on top of
+  the banded ratio itself); the int8 ratio is banded alongside, and so is
+  the HBM-resident *capacity* ratio (what the live buffers actually
+  shrink by — see repro.memory.codec on measured vs capacity).
+* **convergence** — int8- and NSD-residual training lands within the
+  committed accuracy band of fp32-residual training on the same harness
+  (the paper's thesis extended to the saved activations: only the
+  weight-gradient product ``dW = x^T . g~`` sees the reconstruction).
+* **remat_vs_store** — recompute-in-VJP vs encode/decode step timing,
+  recorded UNGATED (wall clock on shared runners is noise).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench import BenchResult, Gate
+from repro.configs import paper_models as pm
+from repro.core import DitherPolicy, nsd
+from repro.core import stats as statslib
+from repro.memory import DEFAULT_NSD_S, decode, encode, resid_key
+
+from benchmarks.harness import train_classifier
+
+# (arm name, --memory-program spec); fp32 is the parity/reference arm
+ARMS = (("fp32", None), ("nsd", "default=nsd"), ("int8", "default=int8"),
+        ("remat", "default=remat"))
+
+
+def roundtrip_metrics(seed: int = 0) -> Dict[str, float]:
+    """Deterministic codec checks (no training)."""
+    key = jax.random.PRNGKey(seed)
+    out: Dict[str, float] = {}
+    # relu-activation-like tensor on a chunk multiple, and an odd shape
+    # that exercises the wire format's padding path
+    for i, (label, shape) in enumerate((("nsd_max_abs_diff", (64, 256)),
+                                        ("nsd_oddshape_max_abs_diff",
+                                         (7, 93)))):
+        kx = jax.random.fold_in(key, i)
+        x = jax.nn.relu(jax.random.normal(kx, shape, jnp.float32))
+        kr = resid_key(jax.random.fold_in(kx, 1))
+        dec = decode("nsd", encode("nsd", x, kr))
+        ref = nsd.nsd_quantize(x, kr, DEFAULT_NSD_S)
+        out[label] = float(jnp.max(jnp.abs(dec - ref)))
+    x = jax.random.normal(jax.random.fold_in(key, 7), (32, 128)) * 3.0
+    enc = encode("int8", x, key)
+    err = jnp.abs(decode("int8", enc) - x).reshape(-1, x.shape[-1])
+    out["int8_err_over_bound"] = float(jnp.max(err / (enc.scale / 2.0)))
+    return out
+
+
+def run(quick: bool = True) -> Dict[str, Dict]:
+    steps = 40 if quick else 120
+    model = pm.lenet300100()
+    arms: Dict[str, Dict[str, float]] = {}
+    for name, mem in ARMS:
+        pol = DitherPolicy(variant="paper", s=2.0, collect_stats=True,
+                           stats_tag=f"mb{name}/")
+        res = train_classifier(model, pol, steps=steps, memory=mem)
+        # harness resets the sink per run: snapshot the compression now
+        res["compression_x"] = statslib.overall_residual_compression(
+            f"mb{name}/")
+        res["capacity_compression_x"] = statslib.overall_residual_compression(
+            f"mb{name}/", capacity=True)
+        arms[name] = res
+    return {"arms": arms, "roundtrip": roundtrip_metrics()}
+
+
+def bench(quick: bool = True) -> List[BenchResult]:
+    out = run(quick=quick)
+    arms, rt = out["arms"], out["roundtrip"]
+    nsd_x = arms["nsd"]["compression_x"]
+    results = [
+        BenchResult(
+            name="memory_bench/roundtrip",
+            value=0.0, unit="us",
+            derived=dict(rt),
+            gates={
+                # the acceptance bar: pack->unpack == the nsd reference,
+                # bit for bit — zero-width bands
+                "nsd_max_abs_diff": Gate(abs=0.0, direction="both"),
+                "nsd_oddshape_max_abs_diff": Gate(abs=0.0, direction="both"),
+                # characterized bound: error/(scale/2) <= 1 (+fp headroom)
+                "int8_err_over_bound": Gate(abs=0.05, direction="high"),
+            },
+        ),
+        BenchResult(
+            name="memory_bench/compression",
+            value=arms["nsd"]["us_per_step"], unit="us/step",
+            derived={
+                "nsd_compression_x": nsd_x,
+                "nsd_capacity_compression_x":
+                    arms["nsd"]["capacity_compression_x"],
+                "int8_compression_x": arms["int8"]["compression_x"],
+                "fp32_compression_x": arms["fp32"]["compression_x"],
+                # hard floor from the issue: >= 3.5x on the dithered layers
+                "meets_3p5_floor": 1.0 if nsd_x >= 3.5 else 0.0,
+            },
+            gates={
+                "nsd_compression_x": Gate(rel=0.10, direction="low"),
+                "nsd_capacity_compression_x": Gate(rel=0.05,
+                                                   direction="low"),
+                "int8_compression_x": Gate(rel=0.05, direction="low"),
+                "fp32_compression_x": Gate(abs=0.0, direction="both"),
+                "meets_3p5_floor": Gate(abs=0.0, direction="both"),
+            },
+        ),
+    ]
+    base = arms["fp32"]
+    for name in ("fp32", "nsd", "int8"):
+        r = arms[name]
+        results.append(BenchResult(
+            name=f"memory_bench/convergence_{name}",
+            value=r["us_per_step"], unit="us/step",
+            derived={"acc": r["acc"], "final_loss": r["final_loss"],
+                     "dacc": r["acc"] - base["acc"],
+                     "sparsity": r["sparsity"]},
+            gates={"acc": Gate(abs=10.0, direction="low"),
+                   "dacc": Gate(abs=8.0, direction="low")},
+        ))
+    results.append(BenchResult(
+        name="memory_bench/remat_vs_store",
+        value=arms["remat"]["us_per_step"], unit="us/step",
+        derived={
+            "remat_us_per_step": arms["remat"]["us_per_step"],
+            "store_nsd_us_per_step": arms["nsd"]["us_per_step"],
+            "fp32_us_per_step": base["us_per_step"],
+            "remat_over_store": (arms["remat"]["us_per_step"]
+                                 / max(arms["nsd"]["us_per_step"], 1e-9)),
+            "remat_acc": arms["remat"]["acc"],
+        },
+        # timing contrast: recorded for the trajectory, never gated
+        gates={},
+    ))
+    return results
+
+
+if __name__ == "__main__":
+    for r in bench(quick=True):
+        print(r.name, f"{r.value:.1f}{r.unit}", r.derived_str())

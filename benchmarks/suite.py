@@ -43,7 +43,8 @@ def _suite_fns() -> Dict[str, callable]:
     per-suite rather than killing the whole runner."""
     from benchmarks import (complexity, convergence, distributed_nodes,
                             hillclimb, kernel_bench, layer_sparsity,
-                            meprop_compare, roofline_table, table1_sparsity)
+                            memory_bench, meprop_compare, roofline_table,
+                            table1_sparsity)
 
     def meprop_both(quick: bool = True):
         return (meprop_compare.bench(quick=quick)
@@ -52,6 +53,7 @@ def _suite_fns() -> Dict[str, callable]:
     return {
         "table1_sparsity": table1_sparsity.bench,
         "layer_sparsity": layer_sparsity.bench,
+        "memory_bench": memory_bench.bench,
         "convergence": convergence.bench,
         "meprop_compare": meprop_both,
         "distributed_nodes": distributed_nodes.bench,
@@ -62,9 +64,9 @@ def _suite_fns() -> Dict[str, callable]:
     }
 
 
-SUITE_NAMES = ("table1_sparsity", "layer_sparsity", "convergence",
-               "meprop_compare", "distributed_nodes", "kernel_bench",
-               "complexity", "roofline_table", "hillclimb")
+SUITE_NAMES = ("table1_sparsity", "layer_sparsity", "memory_bench",
+               "convergence", "meprop_compare", "distributed_nodes",
+               "kernel_bench", "complexity", "roofline_table", "hillclimb")
 
 
 def result_path(suite: str, results_dir: str = RESULTS_DIR) -> str:
@@ -151,8 +153,12 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true",
                     help="explicit quick mode (the default; kept so CI "
                     "invocations self-document)")
-    ap.add_argument("--only", default="",
-                    help=f"comma list of suites from: {','.join(SUITE_NAMES)}")
+    ap.add_argument("--only", "--suites", dest="only", default="",
+                    help=f"comma list of suites from: {','.join(SUITE_NAMES)}"
+                    ". Combine with --rebaseline to refresh ONLY the "
+                    "affected suites' baselines — a blanket rebaseline "
+                    "would also shift every other suite's bands to "
+                    "whatever this host happened to measure.")
     ap.add_argument("--check", action="store_true",
                     help="compare against committed baselines; exit "
                     "non-zero on regression")

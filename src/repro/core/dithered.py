@@ -15,10 +15,24 @@ Policy resolution is per layer name (``ctx.resolve(name)`` — rules, knob
 schedules and the sparsity controller live in ``repro.core.schedule``). The
 resolved result splits static from traced state:
 
-* ``StaticSpec`` (variant / telemetry) is the custom_vjp's static argument;
+* ``StaticSpec`` (variant / telemetry / residual mode) is the custom_vjp's
+  static argument;
 * the numeric knobs ``[s, meprop_k_frac, row_alpha]`` arrive as a traced f32
   ``(3,)`` array, so a schedule that changes ``s`` every step re-uses the
   compiled backward — zero recompiles (pinned by tests/test_schedule.py).
+
+Residual memory (``repro.memory``): the forward residual each op saves for
+its backward — the activation ``x`` that the weight-gradient product
+consumes — goes through the layer's resolved residual codec
+(``spec.residual``): ``fwd`` stores ``codec.encode(x)`` instead of dense
+fp32 and ``bwd`` decodes, so between the forward and backward passes only
+the compressed form stays live. ``dx = g~ . W^T`` never touches ``x`` and
+is bit-identical to the dense-residual path; only ``dW = x^T . g~`` sees
+the (unbiased for nsd, scale/2-bounded for int8) reconstruction. Mode
+``"remat"`` instead wraps the op in ``jax.checkpoint`` — the VJP
+recomputes the forward from the op inputs rather than decoding. The codec
+choice is static per layer; knob schedules still recompile nothing
+(compile-counter pins in tests/test_memory.py).
 
 Variants (spec.variant):
   off     plain backprop
@@ -30,6 +44,7 @@ Variants (spec.variant):
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Callable, Optional
 
@@ -53,6 +68,102 @@ from repro.core.policy import (
     DitherCtx,
     StaticSpec,
 )
+
+
+# --------------------------------------------------------------------------
+# residual store: encode at fwd time, decode at bwd time
+# --------------------------------------------------------------------------
+
+def _residlib():
+    # lazy: repro.memory imports repro.comm which imports repro.core — a
+    # module-level import here would run mid-way through core/__init__
+    from repro.memory import codec
+
+    return codec
+
+
+def encode_residual(x: jax.Array, key: jax.Array, spec: StaticSpec,
+                    name: str):
+    """Encode a saved forward residual under the layer's static mode and,
+    when telemetry is on, record its measured / capacity / dense byte
+    counts (wire-equivalent occupancy, HBM-resident buffers, legacy fp32
+    store — see repro.memory.codec for the distinction)."""
+    codec = _residlib()
+    if spec.residual in ("fp32", "remat"):
+        enc = x  # identity: the residual tuple matches the legacy trace
+    else:
+        enc = codec.encode(spec.residual, x, codec.resid_key(key))
+    if spec.collect_stats:
+        statslib.emit_memory(
+            spec.stats_tag + name,
+            codec.measured_bytes(spec.residual, enc),
+            codec.capacity_bytes(spec.residual, enc),
+            codec.dense_nbytes(x.shape, x.dtype))
+    return enc
+
+
+def decode_residual(enc, spec: StaticSpec) -> jax.Array:
+    if spec.residual in ("fp32", "remat"):
+        return enc
+    return _residlib().decode(spec.residual, enc)
+
+
+def _record_footprint(ctx, r, name: str, x: jax.Array) -> None:
+    """Trace-time byte accounting for repro.memory.accounting reports."""
+    if ctx is None or ctx.mem_recorder is None or r is None:
+        return
+    codec = _residlib()
+    ctx.mem_recorder[name] = (
+        codec.stored_nbytes(r.spec.residual, x.shape, x.dtype),
+        codec.dense_nbytes(x.shape, x.dtype))
+
+
+# Identity marker whose custom fwd runs only under differentiation: remat
+# layers hang their memory-telemetry row on it so rows appear exactly when
+# a backward will consume the residual — the same semantics as the codec
+# paths, whose emit lives in the op's own custom_vjp fwd.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _remat_emit(y, tag, nbytes):
+    return y
+
+
+def _re_fwd(y, tag, nbytes):
+    # remat stores the raw op inputs: measured == capacity == dense
+    statslib.emit_memory(tag, nbytes, nbytes, nbytes)
+    return y, None
+
+
+def _re_bwd(tag, nbytes, res, g):
+    return (g,)
+
+
+_remat_emit.defvjp(_re_fwd, _re_bwd)
+
+
+def _apply_op(op: Callable, x, w, r, name: str):
+    """Invoke a dithered op under the layer's resolved residual mode.
+
+    Mode "remat" recomputes the op's forward in the VJP instead of
+    consuming stored residuals (jax.checkpoint; spec/name stay static
+    through the boundary). io_callback effects cannot live inside a
+    checkpointed region, so remat layers run the op with telemetry
+    stripped and emit their (identity) residual byte row through
+    ``_remat_emit`` outside the checkpoint: a remat layer contributes no
+    sparsity rows (and is invisible to the sparsity controller), which is
+    the price of the recompute path and is pinned in tests/test_memory.py.
+    """
+    spec = r.spec
+    if spec.residual != "remat":
+        return op(x, w, r.key, r.knobs, spec, name)
+    collect = spec.collect_stats
+    if collect:
+        spec = dataclasses.replace(spec, collect_stats=False)
+    y = jax.checkpoint(op, static_argnums=(4, 5))(
+        x, w, r.key, r.knobs, spec, name)
+    if collect:
+        y = _remat_emit(y, r.spec.stats_tag + name,
+                        _residlib().dense_nbytes(x.shape, x.dtype))
+    return y
 
 
 # --------------------------------------------------------------------------
@@ -112,10 +223,12 @@ def _make_dithered_op(primal_fn: Callable) -> Callable:
         return primal_fn(x, w)
 
     def fwd(x, w, key, knobs, spec, name):
-        return primal_fn(x, w), (x, w, key, knobs)
+        enc = encode_residual(x, key, spec, name)
+        return primal_fn(x, w), (enc, w, key, knobs)
 
     def bwd(spec, name, res, g):
-        x, w, key, knobs = res
+        enc, w, key, knobs = res
+        x = decode_residual(enc, spec)
         gq = quantize_cotangent(g, key, knobs, spec, name)
         _, vjp = jax.vjp(primal_fn, x, w)
         dx, dw = vjp(gq)
@@ -142,7 +255,8 @@ def _dithered_dense(x, w, key, knobs, spec, name):
 
 
 def _dd_fwd(x, w, key, knobs, spec, name):
-    return _plain_matmul(x, w), (x, w, key, knobs)
+    enc = encode_residual(x, key, spec, name)
+    return _plain_matmul(x, w), (enc, w, key, knobs)
 
 
 def _kernel_shapes_ok(g2d, x2d, w, block=128):
@@ -151,7 +265,8 @@ def _kernel_shapes_ok(g2d, x2d, w, block=128):
 
 
 def _dd_bwd(spec, name, res, g):
-    x, w, key, knobs = res
+    enc, w, key, knobs = res
+    x = decode_residual(enc, spec)
     s = knobs[KNOB_S]
     kdim = x.shape[-1]
     x2d = x.reshape(-1, kdim)
@@ -229,7 +344,8 @@ def dense(
     """
     r = ctx.resolve(name) if ctx is not None else None
     if r is not None:
-        y = _dithered_dense(x, w, r.key, r.knobs, r.spec, name)
+        _record_footprint(ctx, r, name, x)
+        y = _apply_op(_dithered_dense, x, w, r, name)
     else:
         y = _plain_matmul(x, w)
     if b is not None:
@@ -276,8 +392,8 @@ def conv2d(
     )
     r = ctx.resolve(name) if ctx is not None else None
     if r is not None:
-        op = _make_dithered_op(primal)
-        y = op(x, w, r.key, r.knobs, r.spec, name)
+        _record_footprint(ctx, r, name, x)
+        y = _apply_op(_make_dithered_op(primal), x, w, r, name)
     else:
         y = primal(x, w)
     if b is not None:
@@ -308,6 +424,6 @@ def dithered_einsum(
     primal = _einsum_primal(spec)
     r = ctx.resolve(name) if ctx is not None else None
     if r is not None:
-        op = _make_dithered_op(primal)
-        return op(x, w, r.key, r.knobs, r.spec, name)
+        _record_footprint(ctx, r, name, x)
+        return _apply_op(_make_dithered_op(primal), x, w, r, name)
     return primal(x, w)

@@ -101,6 +101,12 @@ class StaticSpec:
     collect_stats: bool = False
     stats_tag: str = ""
     meprop_k_static: Optional[float] = None
+    # residual-memory mode for the layer's saved forward residual (see
+    # repro.memory.codec.MODES): "fp32" is the legacy dense store; "remat"
+    # wraps the op in jax.checkpoint; the codecs store x compressed. Static
+    # per layer by construction — stamped from MemoryPolicy rules at trace
+    # time in DitherCtx.resolve, so knob schedules cannot touch it.
+    residual: str = "fp32"
 
 
 class Resolved(NamedTuple):
@@ -195,6 +201,12 @@ class DitherCtx:
     ctrl: Optional[Dict[str, jax.Array]] = None
     # trace-time layer-name recorder (schedule.discover_layer_names)
     recorder: Optional[Set[str]] = None
+    # static repro.memory.MemoryPolicy selecting the residual codec (or
+    # remat) per layer name; None = legacy dense fp32 residuals
+    memory: Any = None
+    # trace-time residual-footprint recorder: {name: (stored, dense) bytes}
+    # (repro.memory.accounting.residual_report)
+    mem_recorder: Optional[Dict[str, tuple]] = None
 
     def key_for(self, name: str) -> jax.Array:
         return jax.random.fold_in(self.key, name_salt(name))
@@ -204,11 +216,22 @@ class DitherCtx:
         if self.recorder is not None:
             self.recorder.add(name)
         if self.program is not None:
-            return self.program.resolve_layer(self, name)
-        if not self.policy.applies_to(name):
-            return None
-        return Resolved(spec=self.policy.spec(), knobs=self.policy.knobs(),
-                        key=self.key_for(name))
+            r = self.program.resolve_layer(self, name)
+        elif not self.policy.applies_to(name):
+            r = None
+        else:
+            r = Resolved(spec=self.policy.spec(), knobs=self.policy.knobs(),
+                         key=self.key_for(name))
+        # residual-memory resolution is centralized here so the plain-policy
+        # and program paths cannot diverge; the mode lands in the STATIC
+        # spec, never in the traced knobs.
+        if r is not None and self.memory is not None:
+            mode = self.memory.mode_for(name)
+            if mode != r.spec.residual:
+                r = Resolved(
+                    spec=dataclasses.replace(r.spec, residual=mode),
+                    knobs=r.knobs, key=r.key)
+        return r
 
     def with_key(self, key: jax.Array) -> "DitherCtx":
         """Same resolution state, different RNG stream (micro-batches,
@@ -218,8 +241,10 @@ class DitherCtx:
     @staticmethod
     def for_step(base_key: jax.Array, step, policy: DitherPolicy,
                  worker: int | jax.Array = 0, *, program: Any = None,
-                 ctrl: Optional[Dict[str, jax.Array]] = None) -> "DitherCtx":
+                 ctrl: Optional[Dict[str, jax.Array]] = None,
+                 memory: Any = None) -> "DitherCtx":
         k = jax.random.fold_in(base_key, step)
         k = jax.random.fold_in(k, worker)
         return DitherCtx(key=k, policy=policy, program=program,
-                         step=jnp.asarray(step, jnp.int32), ctrl=ctrl)
+                         step=jnp.asarray(step, jnp.int32), ctrl=ctrl,
+                         memory=memory)

@@ -215,10 +215,23 @@ class LayerRule:
 @dataclasses.dataclass(frozen=True)
 class PhaseSpec:
     """From ``start`` (inclusive) onward, run ``variant`` — until the next
-    phase takes over. Steps before the first phase use the base variant."""
+    phase takes over. Steps before the first phase use the base variant.
+
+    A phase may also set per-phase knob *defaults* (plain floats): they
+    replace the base policy's numerics while the phase is active and
+    inherit through later phases that leave them unset. Precedence stays
+    base < phase default < program-level schedule < rule < controller —
+    schedules and rules override a phase default. Knob defaults ride the
+    static phase policy, so a phase that only changes a default still
+    retraces once at its boundary (like a variant switch); schedules
+    remain the zero-retrace mechanism for per-step knob motion.
+    """
 
     start: int
     variant: str
+    s: Optional[float] = None
+    meprop_k_frac: Optional[float] = None
+    row_alpha: Optional[float] = None
 
     def __post_init__(self):
         if self.start < 0:
@@ -227,6 +240,8 @@ class PhaseSpec:
             raise ValueError(
                 f"PhaseSpec@{self.start}: unknown variant {self.variant!r}; "
                 f"one of {VARIANTS}")
+        validate_knob_values(self.s, self.meprop_k_frac, self.row_alpha,
+                             owner=f"PhaseSpec@{self.start}")
 
 
 # ---------------------------------------------------------------------------
@@ -327,19 +342,31 @@ class PolicyProgram:
     # -- host-side (static) resolution --------------------------------------
 
     def phase_policy_at(self, step: int) -> DitherPolicy:
-        """The static base policy for host step ``step`` (phases applied).
+        """The static base policy for host step ``step`` (phases applied:
+        variant plus any per-phase knob defaults, which inherit through
+        later phases that leave them unset).
 
         This is the value to pass as the jitted step's *static* policy
         argument: it only changes at phase boundaries, so a run with a knob
         schedule but no phases compiles exactly once.
         """
         variant = self.base.variant
+        s, kf, ra = self.base.s, self.base.meprop_k_frac, self.base.row_alpha
         for ph in self.phases:
             if int(step) >= ph.start:
                 variant = ph.variant
-        if variant == self.base.variant:
+                if ph.s is not None:
+                    s = ph.s
+                if ph.meprop_k_frac is not None:
+                    kf = ph.meprop_k_frac
+                if ph.row_alpha is not None:
+                    ra = ph.row_alpha
+        if (variant, s, kf, ra) == (self.base.variant, self.base.s,
+                                    self.base.meprop_k_frac,
+                                    self.base.row_alpha):
             return self.base
-        return self.base.replace(variant=variant)
+        return self.base.replace(variant=variant, s=s, meprop_k_frac=kf,
+                                 row_alpha=ra)
 
     def phase_boundaries(self) -> Tuple[int, ...]:
         return tuple(p.start for p in self.phases)
@@ -527,7 +554,11 @@ class TelemetryWindow:
 
 _SPEC_DOC = """\
 clauses separated by ';':
-  phase@STEP=VARIANT          variant switch from STEP on (off|paper|int8|row|meprop|kernel)
+  phase@STEP=VARIANT[,KNOB=F...]
+                              variant switch from STEP on (off|paper|int8|row|meprop|kernel);
+                              optional per-phase knob DEFAULTS (s/k_frac/
+                              row_alpha, plain floats) that rules and
+                              schedules override
   s=EXPR | k_frac=EXPR | row_alpha=EXPR
                               program-wide knob (EXPR: FLOAT | lin(a,b,v0,v1)
                               | step(b0:v0,b1:v1,...))
@@ -647,9 +678,22 @@ def parse_program(spec: str, base: Optional[DitherPolicy] = None
     knobs: Dict[str, ScheduleLike] = {}
     controller: Optional[SparsityController] = None
     for clause in _split_top(spec, ";"):
-        m = re.fullmatch(r"phase@(\d+)\s*=\s*(\w+)", clause)
+        m = re.fullmatch(r"phase@(\d+)\s*=\s*(.+)", clause)
         if m:
-            phases.append(PhaseSpec(int(m.group(1)), m.group(2)))
+            parts = _split_top(m.group(2), ",")
+            kw: Dict[str, float] = {}
+            for a in parts[1:]:
+                if "=" not in a:
+                    raise ValueError(
+                        f"policy-program clause {clause!r}: phase knob "
+                        f"defaults are KNOB=FLOAT, got {a!r}")
+                k, v = (t.strip() for t in a.split("=", 1))
+                if k not in _KNOB_ALIASES:
+                    raise ValueError(
+                        f"policy-program clause {clause!r}: unknown phase "
+                        f"knob {k!r} (one of {sorted(_KNOB_ALIASES)})")
+                kw[_KNOB_ALIASES[k]] = float(v)
+            phases.append(PhaseSpec(int(m.group(1)), parts[0].strip(), **kw))
             continue
         if clause.startswith("rule "):
             rules.append(_parse_rule(clause[len("rule "):], clause))

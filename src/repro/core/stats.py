@@ -25,12 +25,18 @@ _SINK: Dict[str, List[np.ndarray]] = defaultdict(list)
 # tag -> list of (wire_bytes, dense_bytes) rows — the comm-side counters
 # (bytes-on-wire of compressed gradient exchange; see repro.comm.telemetry)
 _COMM_SINK: Dict[str, List[np.ndarray]] = defaultdict(list)
+# tag -> list of (measured, capacity, dense) byte rows — the residual-
+# memory counters: occupancy-aware wire-equivalent bytes, the HBM-resident
+# capacity of the encoded buffers, and the dense fp32 store they replace
+# (see repro.memory.codec for the measured-vs-capacity distinction)
+_MEM_SINK: Dict[str, List[np.ndarray]] = defaultdict(list)
 
 
 def reset() -> None:
     with _LOCK:
         _SINK.clear()
         _COMM_SINK.clear()
+        _MEM_SINK.clear()
 
 
 def _record(tag: str, row: np.ndarray) -> np.ndarray:
@@ -178,3 +184,85 @@ def comm_summary() -> Dict[str, Dict[str, float]]:
             "n_records": int(len(r)),
         }
     return out
+
+
+# ---------------------------------------------------------------------------
+# residual-memory counters: bytes the backward keeps alive per layer
+# ---------------------------------------------------------------------------
+
+def _record_memory(tag: str, row: np.ndarray) -> np.ndarray:
+    with _LOCK:
+        _MEM_SINK[tag].append(np.asarray(row))
+    return np.zeros((), np.int32)
+
+
+def emit_memory(tag: str, measured_bytes: jax.Array, capacity_bytes,
+                dense_bytes) -> None:
+    """Record one layer's (measured, capacity, dense) residual byte counts
+    from inside a (possibly jitted) custom_vjp forward."""
+    row = jnp.stack([jnp.asarray(measured_bytes, jnp.float32),
+                     jnp.asarray(capacity_bytes, jnp.float32),
+                     jnp.asarray(dense_bytes, jnp.float32)])
+    jax.experimental.io_callback(
+        lambda r, _tag=tag: _record_memory(_tag, r),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        row,
+        ordered=False,
+    )
+
+
+def memory_rows(tag: str) -> np.ndarray:
+    """(n, 3) array of [measured, capacity, dense] byte records for a tag."""
+    _drain()
+    with _LOCK:
+        if not _MEM_SINK[tag]:
+            return np.zeros((0, 3), np.float32)
+        return np.stack(_MEM_SINK[tag])
+
+
+def memory_tags() -> List[str]:
+    _drain()
+    with _LOCK:
+        return sorted(_MEM_SINK.keys())
+
+
+def memory_summary() -> Dict[str, Dict[str, float]]:
+    """Per-tag residual byte totals and the two compression factors:
+    ``capacity_compression`` (dense / HBM-resident capacity — size batch
+    headroom from THIS one) and ``occupancy_compression`` (dense /
+    wire-equivalent measured bytes — what a byte-true compacted store
+    would achieve)."""
+    out = {}
+    for tag in memory_tags():
+        r = memory_rows(tag)
+        if len(r) == 0:
+            continue
+        measured, cap, dense = (float(r[:, i].sum()) for i in range(3))
+        out[tag] = {
+            "measured_bytes": measured,
+            "capacity_bytes": cap,
+            "dense_bytes": dense,
+            "occupancy_compression": (dense / measured if measured
+                                      else float("nan")),
+            "capacity_compression": dense / cap if cap else float("nan"),
+            "n_records": int(len(r)),
+        }
+    return out
+
+
+def overall_residual_compression(prefix: str = "", *,
+                                 capacity: bool = False) -> float:
+    """dense/measured (or dense/capacity) over every recorded layer x step
+    under a tag prefix."""
+    col = 1 if capacity else 0
+    stored = dense = 0.0
+    for tag in memory_tags():
+        if not tag.startswith(prefix):
+            continue
+        r = memory_rows(tag)
+        if len(r):
+            stored += float(r[:, col].sum())
+            dense += float(r[:, 2].sum())
+    if stored <= 0:
+        return float("nan")
+    return dense / stored

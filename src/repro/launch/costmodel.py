@@ -116,6 +116,42 @@ def compression_speedup(wire_bytes: float, dense_bytes: float) -> float:
     return float(dense_bytes) / float(wire_bytes)
 
 
+def price_memory(stored_bytes: float, dense_bytes: float, *,
+                 n_chips: int = 1, batch: int = 1,
+                 fixed_bytes_per_chip: float = 0.0,
+                 hbm_bytes: float = rl.HBM_CAP) -> Dict[str, float]:
+    """Price a step's residual store against per-chip HBM capacity.
+
+    ``stored_bytes``/``dense_bytes`` are the MEASURED (or eval_shape
+    -accounted, see ``repro.memory.accounting``) global residual totals of
+    one training step at ``batch``; ``fixed_bytes_per_chip`` is the
+    batch-independent footprint (params + optimizer state + compiler
+    temps), typically ``memory_analysis().argument_size_in_bytes``. The
+    max-batch estimate assumes residuals scale linearly with batch (they
+    are activations) and everything else stays fixed:
+
+        est_max_batch = batch * (hbm - fixed) / residual_per_chip
+
+    reported for both the compressed store and the dense-fp32 store —
+    their ratio is the batch headroom the codec buys. A modeled estimate
+    (residuals are the dominant, but not the only, batch-proportional
+    term), not a measured ceiling.
+    """
+    out = {
+        "residual_stored_per_chip": float(stored_bytes) / max(n_chips, 1),
+        "residual_dense_per_chip": float(dense_bytes) / max(n_chips, 1),
+        "residual_compression": (float(dense_bytes) / float(stored_bytes)
+                                 if stored_bytes > 0 else float("inf")),
+    }
+    headroom = max(hbm_bytes - float(fixed_bytes_per_chip), 0.0)
+    for kind in ("stored", "dense"):
+        per_chip = out[f"residual_{kind}_per_chip"]
+        out[f"est_max_batch_{kind}"] = (
+            float(batch) * headroom / per_chip if per_chip > 0
+            else float("inf"))
+    return out
+
+
 def rebuild(model: model_api.Model, **overrides) -> model_api.Model:
     cfg = dataclasses.replace(model.cfg, **overrides)
     if model.family in ("dense", "moe", "vlm"):

@@ -148,7 +148,7 @@ class CellResult:
     report: Optional[Dict[str, Any]] = None
 
 
-def _lower_for_case(model, case, rules, policy, opt_name):
+def _lower_for_case(model, case, rules, policy, opt_name, memory=None):
     """Lower the real step for one cell (used for the full model AND for the
     layer-anchor cost models). Must run inside use_rules(rules)."""
     key = jax.ShapeDtypeStruct(
@@ -174,7 +174,7 @@ def _lower_for_case(model, case, rules, policy, opt_name):
             opt_shape, opt_state_specs(specs, opt_cfg), rules)
         batch_sds = _batch_sds(
             model.train_batch_specs(case.global_batch, case.seq_len), rules)
-        step = make_train_step(model, opt_cfg, policy)
+        step = make_train_step(model, opt_cfg, policy, memory=memory)
         return jax.jit(step).lower(params_sds, opt_sds, batch_sds, key)
     if case.kind == "prefill":
         batch_sds = _batch_sds(
@@ -192,11 +192,40 @@ def _lower_for_case(model, case, rules, policy, opt_name):
     return jax.jit(step).lower(params_sds, cache_sds, tok, t_sds)
 
 
+def _residual_memory_stats(model, case, policy, memory, n_chips: int,
+                           mem_stats: Dict[str, Any]) -> Dict[str, float]:
+    """Residual-footprint accounting for one train cell: eval_shape the
+    loss with a recorder ctx (no FLOPs), price the stored/dense totals
+    against per-chip HBM, and estimate the max batch the cell supports
+    under each store (repro.memory.accounting + costmodel.price_memory)."""
+    from repro.launch import costmodel
+    from repro.memory.accounting import footprint_totals, residual_report
+
+    params_sds = jax.eval_shape(lambda k: model.init(k)[0],
+                                jax.random.PRNGKey(0))
+    batch_sds = model.train_batch_specs(case.global_batch, case.seq_len)
+    report = residual_report(
+        lambda p, b, c: model.loss(p, b, ctx=c), params_sds, batch_sds,
+        policy=policy, memory=memory)
+    stored, dense = footprint_totals(report)
+    if dense <= 0:  # policy covers no layers -> autodiff owns residuals
+        return {}
+    priced = costmodel.price_memory(
+        stored, dense, n_chips=n_chips, batch=case.global_batch,
+        fixed_bytes_per_chip=float(mem_stats.get("argument_bytes", 0)))
+    out = {"residual_layers": float(len(report)),
+           "residual_stored_bytes": float(stored),
+           "residual_dense_bytes": float(dense)}
+    # keep the artifacts strict-JSON-safe: drop inf/nan estimates
+    out.update({k: v for k, v in priced.items() if np.isfinite(v)})
+    return out
+
+
 def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
              policy: Optional[DitherPolicy] = None,
              rules_override=None, opt_name: str = "adamw",
              correct_costs: bool = True, model_override=None,
-             verbose: bool = True) -> CellResult:
+             memory=None, verbose: bool = True) -> CellResult:
     mesh_name = "2x16x16" if multi_pod else "16x16"
     case = SHAPES[shape_name]
     model = model_override if model_override is not None else get_model(arch_id)
@@ -211,7 +240,8 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
     t0 = time.time()
     try:
         with axlib.use_rules(rules):
-            lowered = _lower_for_case(model, case, rules, policy, opt_name)
+            lowered = _lower_for_case(model, case, rules, policy, opt_name,
+                                      memory=memory)
             compiled = lowered.compile()
         compile_s = time.time() - t0
         # cost_analysis() returns a bare dict on newer jax, a one-element
@@ -237,7 +267,8 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
 
             def anchor_lower(m):
                 with axlib.use_rules(rules):
-                    return _lower_for_case(m, case, rules, policy, opt_name)
+                    return _lower_for_case(m, case, rules, policy, opt_name,
+                                           memory=memory)
 
             totals, cost_dbg = costmodel.corrected_costs(model, anchor_lower)
             cost["flops"] = totals["flops"]
@@ -265,6 +296,13 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
             report.useful_ratio = report.model_flops_global / max(
                 report.flops_per_chip * n_chips, 1.0)
             report.memory_stats["cost_anchors"] = str(cost_dbg.get("anchors"))
+        if case.kind == "train" and policy is not None:
+            try:
+                report.memory_stats.update(_residual_memory_stats(
+                    model, case, policy, memory, n_chips, mem_stats))
+            except Exception as e:  # noqa: BLE001 — accounting is advisory
+                report.memory_stats["residual_error"] = (
+                    f"{type(e).__name__}: {e}")
         if verbose:
             log.info(
                 "%s x %s [%s] OK compile=%.1fs flops/chip=%.3e bytes/chip=%.3e "
@@ -297,6 +335,11 @@ def main() -> None:
                     help="per-layer/step policy program spec (see "
                     "repro.core.schedule.parse_program); the lowered step "
                     "bakes phase 0 and resolves rules per layer name")
+    ap.add_argument("--memory-program", default="",
+                    help="per-layer residual-memory spec (see repro.memory"
+                    "): residual codec (fp32|bf16|int8|nsd[@S]) or remat "
+                    "per dithered layer; the grid reports the resulting "
+                    "residual footprint and max-batch estimate per cell")
     ap.add_argument("--out", default="")
     args = ap.parse_args()
 
@@ -307,6 +350,11 @@ def main() -> None:
         policy = parse_program(
             args.policy_program,
             base=policy if policy is not None else DitherPolicy(variant="off"))
+    memory = None
+    if args.memory_program:
+        from repro.memory.policy import parse_memory_program
+
+        memory = parse_memory_program(args.memory_program)
     cells = []
     if args.all:
         targets = [(a, s) for a in ARCH_IDS for s in SHAPES]
@@ -319,7 +367,7 @@ def main() -> None:
             # the roofline table is single-pod only; multi-pod cells just
             # prove the "pod" axis lowers, so skip the anchor compiles there
             res = run_cell(arch, shape, multi_pod=mp, policy=policy,
-                           correct_costs=not mp)
+                           memory=memory, correct_costs=not mp)
             cells.append(dataclasses.asdict(res))
             print(f"{res.arch:22s} {res.shape:12s} {res.mesh:8s} "
                   f"{res.status:8s} {res.reason[:80]}")

@@ -28,6 +28,7 @@ from typing import Dict, List, Optional
 PEAK_BF16_FLOPS = 197e12
 PEAK_INT8_OPS = 394e12
 HBM_BW = 819e9  # bytes/s
+HBM_CAP = 16e9  # bytes of HBM per chip (v5e: 16 GB)
 ICI_BW = 50e9  # bytes/s per link (intra-pod)
 # Inter-pod data-center network: ~50 Gbps per host NIC. An order of
 # magnitude below ICI — the gap the hierarchical reduce is built around.

@@ -14,7 +14,7 @@ from repro.optim import OptConfig, apply_updates, init_opt_state
 
 def make_train_step(model: Model, opt_cfg: OptConfig,
                     policy: Optional[DitherPolicy | PolicyProgram] = None,
-                    *, phase_step: int = 0):
+                    *, phase_step: int = 0, memory=None):
     """(params, opt_state, batch, base_key) -> (params, opt_state, metrics).
 
     The dither key is folded from (base_key, step) so noise is fresh each
@@ -25,18 +25,23 @@ def make_train_step(model: Model, opt_cfg: OptConfig,
     resolve on the traced step inside this one compiled function. The
     *variant* phase is static per trace — this factory bakes the phase
     active at ``phase_step`` (the Trainer drives phases across a run;
-    dry-runs lower the phase they ask for).
+    dry-runs lower the phase they ask for). ``memory`` is a
+    ``repro.memory`` MemoryPolicy (or spec string) selecting each dithered
+    layer's residual codec / remat — static per layer, baked here.
     """
+    from repro.memory.policy import as_memory_policy
+
     program = as_program(policy)
     phase_policy = (program.phase_policy_at(phase_step)
                     if program is not None else None)
+    memory = as_memory_policy(memory)
 
     def train_step(params, opt_state, batch, base_key):
         step = opt_state["step"]
         ctx = None
         if phase_policy is not None and program.step_enabled(phase_policy):
             ctx = DitherCtx.for_step(base_key, step, phase_policy,
-                                     program=program)
+                                     program=program, memory=memory)
 
         loss, grads = jax.value_and_grad(
             lambda p: model.loss(p, batch, ctx=ctx))(params)

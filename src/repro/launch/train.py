@@ -67,6 +67,12 @@ def main() -> None:
                     "'phase@0=off;phase@30=paper;s=lin(30,200,4.0,2.0);"
                     "rule lm_head:off' (see repro.core.schedule). Built on "
                     "top of --dither/--s as the base policy.")
+    ap.add_argument("--memory-program", default="",
+                    help="per-layer residual-memory spec, e.g. "
+                    "'default=nsd;rule fc0:int8;rule c*:remat' (see "
+                    "repro.memory): which codec (fp32|bf16|int8|nsd[@S]) "
+                    "or remat each dithered layer's saved forward "
+                    "residual gets.")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="")
@@ -97,6 +103,7 @@ def main() -> None:
                       ckpt_dir=args.ckpt_dir,
                       ckpt_every=args.ckpt_every),
         policy=policy,
+        memory_policy=args.memory_program or None,
     )
     fn = batch_fn_for(model, args.batch, args.seq)
     counter = iter(range(10**9))

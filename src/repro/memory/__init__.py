@@ -1,0 +1,42 @@
+"""repro.memory — compressed residual store & per-layer rematerialization.
+
+codec.py       ResidualCodec family (fp32 / bf16 / int8 affine per-row /
+               nsd in the comm wire layout) + remat, with the static and
+               measured byte accountings
+policy.py      MemoryPolicy per-layer rules + the --memory-program DSL
+accounting.py  eval_shape residual-footprint reports for the dry-run grid
+"""
+from repro.memory.accounting import footprint_totals, residual_report
+from repro.memory.codec import (
+    DEFAULT_NSD_S,
+    MODE_BF16,
+    MODE_FP32,
+    MODE_INT8,
+    MODE_NSD,
+    MODE_REMAT,
+    MODES,
+    capacity_bytes,
+    decode,
+    dense_nbytes,
+    encode,
+    measured_bytes,
+    parse_mode,
+    resid_key,
+    stored_nbytes,
+    validate_mode,
+)
+from repro.memory.policy import (
+    MemoryPolicy,
+    MemoryRule,
+    as_memory_policy,
+    parse_memory_program,
+)
+
+__all__ = [
+    "DEFAULT_NSD_S", "MODE_BF16", "MODE_FP32", "MODE_INT8", "MODE_NSD",
+    "MODE_REMAT", "MODES", "capacity_bytes", "decode", "dense_nbytes",
+    "encode", "measured_bytes", "parse_mode", "resid_key", "stored_nbytes",
+    "validate_mode",
+    "MemoryPolicy", "MemoryRule", "as_memory_policy", "parse_memory_program",
+    "footprint_totals", "residual_report",
+]

@@ -1,0 +1,58 @@
+"""Residual-footprint accounting: bytes the backward keeps alive, per layer.
+
+``residual_report`` traces one loss evaluation under ``jax.eval_shape``
+(no FLOPs, no allocation — the same recorder mechanism as
+``schedule.discover_layer_names``) with a ``mem_recorder`` ctx, and returns
+``{layer_name: (stored_bytes, dense_bytes)}`` for every layer the dither
+policy covers: ``stored`` is the shape-static capacity of the encoded
+residual under the memory policy, ``dense`` what the legacy fp32 store
+would hold. The dry-run grid prices the totals through
+``launch.costmodel.price_memory`` into a peak-residual-per-chip figure and
+a max-batch estimate per cell.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import VARIANT_PAPER, DitherCtx, DitherPolicy
+from repro.core.schedule import as_program
+from repro.memory.policy import MemoryPolicy, as_memory_policy
+
+
+def residual_report(loss_fn: Callable, params, batch, *,
+                    policy=None,
+                    memory: Optional[MemoryPolicy | str] = None,
+                    step: int = 0) -> Dict[str, Tuple[int, int]]:
+    """Per-layer ``(stored_bytes, dense_bytes)`` of one loss evaluation.
+
+    ``loss_fn(params, batch, ctx)`` must thread ctx like ``Model.loss``;
+    ``params``/``batch`` may be ShapeDtypeStructs. ``policy`` is the dither
+    policy or program the run uses (default: the paper variant, which
+    covers every ditherable layer); layers it leaves un-dithered do not
+    appear — autodiff owns their residuals.
+
+    Caveat (same as XLA's cost analysis): a ``lax.scan``-stacked model
+    traces its layer body ONCE, so scanned stacks report one body's worth
+    of residual bytes, not depth x body. Compression ratios are unaffected
+    (every layer of a uniform stack scales identically); absolute totals
+    for scanned models are per-body figures.
+    """
+    program = as_program(policy if policy is not None
+                         else DitherPolicy(variant=VARIANT_PAPER))
+    phase0 = program.phase_policy_at(step)
+    rec: Dict[str, Tuple[int, int]] = {}
+    ctx = DitherCtx(key=jax.random.PRNGKey(0), policy=phase0,
+                    program=program, step=jnp.asarray(step, jnp.int32),
+                    memory=as_memory_policy(memory), mem_recorder=rec)
+    jax.eval_shape(lambda p, b: loss_fn(p, b, ctx), params, batch)
+    return rec
+
+
+def footprint_totals(report: Dict[str, Tuple[int, int]]) -> Tuple[int, int]:
+    """(total stored, total dense) bytes over a :func:`residual_report`."""
+    stored = sum(s for s, _ in report.values())
+    dense = sum(d for _, d in report.values())
+    return stored, dense

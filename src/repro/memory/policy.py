@@ -1,0 +1,127 @@
+"""Per-layer residual-memory policy: which codec (or remat) each layer gets.
+
+``MemoryPolicy`` mirrors the rule machinery of
+``repro.core.schedule.LayerRule`` — ordered glob/substring patterns, last
+match wins — but selects a *residual mode* (``repro.memory.codec.MODES``)
+instead of dither knobs. Resolution happens by static layer name at trace
+time through :meth:`repro.core.policy.DitherCtx.resolve`, which stamps the
+mode onto the resolved ``StaticSpec.residual``; the choice is therefore
+static per layer and can never invalidate the compiled step on a knob
+schedule (the PR-4 traced-knobs invariant, pinned by compile-counter
+tests in tests/test_memory.py).
+
+The subsystem covers the layers dithered backprop covers: a layer whose
+dither resolution is ``None`` (policy off / excluded) runs the plain
+primal with autodiff's own dense residuals.
+
+CLI surface (``--memory-program`` on ``launch/train.py`` and
+``launch/dryrun.py``)::
+
+    default=nsd;rule fc0:int8;rule c*:remat;rule lm_head:fp32
+
+clauses separated by ';':
+  default=MODE          base mode for every dithered layer (default fp32)
+  rule PATTERN:MODE     per-layer override; glob when the pattern contains
+                        */?/[, substring otherwise; last match wins
+MODE: fp32 | bf16 | int8 | nsd | nsd@S | remat
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+from repro.core.schedule import pattern_matches
+from repro.memory.codec import MODE_FP32, validate_mode
+
+# a literal, not a __doc__ slice: -OO strips docstrings (schedule.py idiom)
+_SPEC_DOC = """\
+clauses separated by ';':
+  default=MODE          base mode for every dithered layer (default fp32)
+  rule PATTERN:MODE     per-layer override; glob when the pattern contains
+                        */?/[, substring otherwise; last match wins
+MODE: fp32 | bf16 | int8 | nsd | nsd@S | remat
+"""
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryRule:
+    """``pattern -> residual mode`` for the matching layers."""
+
+    pattern: str = "*"
+    mode: str = MODE_FP32
+
+    def __post_init__(self):
+        if not self.pattern:
+            raise ValueError("MemoryRule: pattern must be a non-empty string")
+        try:
+            validate_mode(self.mode)
+        except ValueError as e:
+            raise ValueError(f"MemoryRule({self.pattern!r}): {e}") from None
+
+    def matches(self, name: str) -> bool:
+        return pattern_matches(self.pattern, name)
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryPolicy:
+    """Ordered per-layer residual rules over a default mode (frozen and
+    hashable, so it can ride in jit closures / static arguments)."""
+
+    default: str = MODE_FP32
+    rules: Tuple[MemoryRule, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "rules", tuple(self.rules))
+        try:
+            validate_mode(self.default)
+        except ValueError as e:
+            raise ValueError(f"MemoryPolicy: {e}") from None
+
+    def mode_for(self, name: str) -> str:
+        mode = self.default
+        for rule in self.rules:
+            if rule.matches(name):
+                mode = rule.mode
+        return mode
+
+    def replace(self, **kw) -> "MemoryPolicy":
+        return dataclasses.replace(self, **kw)
+
+
+def parse_memory_program(spec: str) -> MemoryPolicy:
+    """Parse the ``--memory-program`` spec string (grammar in the module
+    docstring, printed verbatim in every parse error)."""
+    default = MODE_FP32
+    rules = []
+    for clause in (c.strip() for c in spec.split(";")):
+        if not clause:
+            continue
+        if clause.startswith("rule "):
+            body = clause[len("rule "):]
+            if ":" not in body:
+                raise ValueError(
+                    f"memory-program clause {clause!r}: rule syntax is "
+                    f"'rule PATTERN:MODE'; grammar:\n{_SPEC_DOC}")
+            pattern, mode = body.split(":", 1)
+            rules.append(MemoryRule(pattern=pattern.strip(),
+                                    mode=mode.strip()))
+            continue
+        if clause.startswith("default="):
+            default = clause[len("default="):].strip()
+            validate_mode(default)
+            continue
+        raise ValueError(
+            f"memory-program: cannot parse clause {clause!r}; grammar:\n"
+            + _SPEC_DOC)
+    return MemoryPolicy(default=default, rules=tuple(rules))
+
+
+def as_memory_policy(x: Union[None, str, MemoryPolicy]
+                     ) -> Optional[MemoryPolicy]:
+    """Lift a spec string (or pass through a MemoryPolicy / None)."""
+    if x is None or isinstance(x, MemoryPolicy):
+        return x
+    if isinstance(x, str):
+        return parse_memory_program(x) if x else None
+    raise TypeError(
+        f"expected MemoryPolicy, spec string or None, got {type(x)!r}")

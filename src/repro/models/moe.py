@@ -229,7 +229,10 @@ def moe_a2a(params: Params, x2d: jax.Array, cfg: MoEConfig,
                 if ctrl_names else None)
         inner_ctx = (DitherCtx(key=key, policy=policy, program=program,
                                step=step, ctrl=ctrl,
-                               recorder=ctx.recorder if ctx else None)
+                               recorder=ctx.recorder if ctx else None,
+                               memory=ctx.memory if ctx else None,
+                               mem_recorder=(ctx.mem_recorder if ctx
+                                             else None))
                      if policy is not None else None)
 
         top_i, top_p, aux = _routing({"router": router}, x_loc, cfg, inner_ctx)

@@ -41,7 +41,9 @@ class Trainer:
                  policy: Optional[DitherPolicy | PolicyProgram] = None,
                  eval_fn: Optional[Callable] = None,
                  comm_policy: Optional[CommPolicy] = None,
-                 topology=None):
+                 topology=None, memory_policy=None):
+        from repro.memory.policy import as_memory_policy
+
         self.model = model
         self.opt_cfg = opt_cfg
         self.tcfg = tcfg
@@ -49,6 +51,10 @@ class Trainer:
         # every step resolves per layer through the program path.
         self.policy = policy
         self.program = as_program(policy)
+        # repro.memory MemoryPolicy (or spec string): residual codec /
+        # remat per dithered layer. Static — baked into the jitted step's
+        # closure; set it before fit(), not mid-run.
+        self.memory_policy = as_memory_policy(memory_policy)
         self.eval_fn = eval_fn
         # gradient wire path: accumulated grads go through the comm policy
         # (what a data-parallel node would put on the wire each step).
@@ -82,7 +88,8 @@ class Trainer:
         if phase_policy is not None and self.program.step_enabled(phase_policy):
             ctx = DitherCtx.for_step(base_key, step, phase_policy,
                                      program=self.program,
-                                     ctrl=ctrl_state or None)
+                                     ctrl=ctrl_state or None,
+                                     memory=self.memory_policy)
 
         def one_loss(p, b, i):
             c = None

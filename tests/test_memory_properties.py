@@ -1,0 +1,98 @@
+"""Hypothesis property tests for the residual codecs.
+
+Kept separate from test_memory.py: hypothesis ships in the [test] extra,
+not as a hard dependency, and a bare module-level import would abort the
+whole suite's collection under -x when it is absent (same policy as
+test_nsd_properties.py). Adversarial surface: non-multiple-of-8 shapes
+(the wire format's bitmap/padding path), all-zero tensors (empty bitmap),
+int8/NSD clip saturation, and single-element tensors.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import nsd  # noqa: E402
+from repro.memory import decode, encode, measured_bytes, resid_key  # noqa: E402
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.integers(1, 9), cols=st.integers(1, 41),
+       s=st.floats(0.25, 4.0), scale=st.floats(1e-3, 1e3),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_nsd_codec_bit_exact_any_shape(rows, cols, s, scale, seed):
+    """encode->decode == the nsd reference for ANY shape — including sizes
+    that are no multiple of the chunk (or even of 8), which exercise the
+    bitmap padding and the truncation back to the original size."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (rows, cols), jnp.float32) * scale
+    k = resid_key(jax.random.fold_in(key, 1))
+    mode = f"nsd@{s}"
+    dec = decode(mode, encode(mode, x, k))
+    ref = nsd.nsd_quantize(x, k, s)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(ref))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 700), seed=st.integers(0, 2**31 - 1))
+def test_property_all_zero_tensor_empty_bitmap(n, seed):
+    """An all-zero residual packs to an EMPTY bitmap (no set bits, nnz=0),
+    decodes to exact zeros, and its measured bytes are the fixed overhead
+    alone."""
+    x = jnp.zeros((n,), jnp.float32)
+    k = resid_key(jax.random.PRNGKey(seed))
+    enc = encode("nsd", x, k)
+    assert int(enc.nnz) == 0
+    assert int(jnp.sum(enc.bitmap.astype(jnp.int32))) == 0
+    np.testing.assert_array_equal(np.asarray(decode("nsd", enc)),
+                                  np.zeros((n,), np.float32))
+    fixed = 4 + enc.n_chunks * (4 + enc.chunk // 8)
+    assert int(measured_bytes("nsd", enc)) == fixed
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.integers(1, 6), cols=st.integers(2, 33),
+       outlier=st.floats(1e3, 1e7), seed=st.integers(0, 2**31 - 1))
+def test_property_int8_bound_survives_saturation(rows, cols, outlier, seed):
+    """Affine per-row int8 with a huge outlier: the quantizer saturates its
+    code range yet every element's error stays within scale/2 (the scale
+    absorbs the outlier; the bound is per row, not global)."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (rows, cols), jnp.float32)
+    x = x.at[0, 0].set(outlier)
+    enc = encode("int8", x, key)
+    assert int(jnp.max(enc.q.astype(jnp.int32))) == 127  # saturated code
+    err = jnp.abs(decode("int8", enc) - x).reshape(-1, cols)
+    assert float(jnp.max(err / (enc.scale / 2.0))) <= 1.001
+
+
+@settings(max_examples=25, deadline=None)
+@given(scale=st.floats(1.0, 1e4), s=st.floats(0.25, 1.0),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_nsd_codec_matches_reference_under_clip(scale, s, seed):
+    """Heavy-tailed inputs push |k| past INT8_CLIP: the clip applies
+    identically inside the codec and the reference, so the round trip
+    stays bit-exact even when saturating."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (64,), jnp.float32)
+    x = x.at[0].set(float(scale) * 1e3)  # guarantees k clipping at small s
+    k = resid_key(jax.random.fold_in(key, 1))
+    mode = f"nsd@{s}"
+    enc = encode(mode, x, k)
+    np.testing.assert_array_equal(
+        np.asarray(decode(mode, enc)),
+        np.asarray(nsd.nsd_quantize(x, k, s)))
+    assert int(jnp.max(jnp.abs(enc.levels.astype(jnp.int32)))) <= nsd.INT8_CLIP
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), cols=st.integers(1, 19))
+def test_property_int8_constant_rows_exact(seed, cols):
+    """Zero-range rows (scale guard) decode exactly."""
+    val = float(jax.random.uniform(jax.random.PRNGKey(seed), ()) * 10 - 5)
+    x = jnp.full((3, cols), val, jnp.float32)
+    dec = decode("int8", encode("int8", x, jax.random.PRNGKey(seed)))
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(x))

@@ -353,6 +353,85 @@ class TestController:
             "enc.fc1", "enc.fc2"]
 
 
+class TestPhaseDefaults:
+    """Per-phase knob defaults (ROADMAP PR-4 open item): a phase may set
+    default s / meprop_k_frac / row_alpha; precedence stays
+    base < phase default < program schedule < rule < controller."""
+
+    def test_phase_default_applies_from_its_start(self):
+        prog = PolicyProgram(
+            base=DitherPolicy(variant="paper", s=2.0),
+            phases=(PhaseSpec(0, "paper"), PhaseSpec(10, "paper", s=4.0)))
+        assert prog.phase_policy_at(0).s == 2.0
+        assert prog.phase_policy_at(9).s == 2.0
+        assert prog.phase_policy_at(10).s == 4.0
+        assert _resolve_s(prog, "fc", step=9) == 2.0
+        assert _resolve_s(prog, "fc", step=10) == 4.0
+
+    def test_defaults_inherit_through_later_phases(self):
+        prog = PolicyProgram(
+            base=DitherPolicy(variant="paper", s=2.0, row_alpha=1.0),
+            phases=(PhaseSpec(0, "paper", s=3.0, row_alpha=0.5),
+                    PhaseSpec(10, "int8"),  # sets nothing: s=3.0 persists
+                    PhaseSpec(20, "int8", s=2.5)))
+        assert prog.phase_policy_at(5).s == 3.0
+        p15 = prog.phase_policy_at(15)
+        assert p15.variant == "int8" and p15.s == 3.0 and p15.row_alpha == 0.5
+        assert prog.phase_policy_at(25).s == 2.5
+
+    def test_program_schedule_overrides_phase_default(self):
+        prog = PolicyProgram(
+            base=DitherPolicy(variant="paper", s=2.0),
+            phases=(PhaseSpec(0, "paper", s=4.0),),
+            s=Const(3.5))
+        assert _resolve_s(prog, "fc", step=5) == 3.5
+
+    def test_rule_overrides_schedule_and_phase_default(self):
+        prog = PolicyProgram(
+            base=DitherPolicy(variant="paper", s=2.0),
+            phases=(PhaseSpec(0, "paper", s=4.0),),
+            s=Const(3.5),
+            rules=(LayerRule(pattern="fc0", s=1.5),))
+        assert _resolve_s(prog, "fc0", step=5) == 1.5
+        assert _resolve_s(prog, "fc1", step=5) == 3.5
+
+    def test_no_defaults_returns_base_object(self):
+        base = DitherPolicy(variant="paper", s=2.0)
+        prog = PolicyProgram(base=base, phases=(PhaseSpec(0, "paper"),))
+        assert prog.phase_policy_at(5) is base
+
+    def test_phase_knob_validation(self):
+        with pytest.raises(ValueError, match=r"PhaseSpec@5.*s must be > 0"):
+            PhaseSpec(5, "paper", s=-1.0)
+        with pytest.raises(ValueError,
+                           match=r"meprop_k_frac must be in \(0, 1\]"):
+            PhaseSpec(0, "meprop", meprop_k_frac=2.0)
+
+    def test_parser_phase_defaults(self):
+        prog = parse_program("phase@0=off;phase@10=paper,s=3.0,k_frac=0.2;"
+                             "phase@20=int8,row_alpha=0.5")
+        assert prog.phases == (
+            PhaseSpec(0, "off"),
+            PhaseSpec(10, "paper", s=3.0, meprop_k_frac=0.2),
+            PhaseSpec(20, "int8", row_alpha=0.5))
+
+    def test_parser_phase_errors(self):
+        with pytest.raises(ValueError, match="unknown phase knob"):
+            parse_program("phase@0=paper,wat=1.0")
+        with pytest.raises(ValueError, match="unknown variant"):
+            parse_program("phase@0=bogus,s=2.0")
+
+    def test_meprop_phase_default_stays_static(self):
+        """A phase's constant k_frac default keeps the cheap top_k path
+        (meprop_k_static), like a base-policy constant."""
+        prog = PolicyProgram(
+            base=DitherPolicy(variant="meprop", meprop_k_frac=0.1),
+            phases=(PhaseSpec(0, "meprop", meprop_k_frac=0.25),))
+        pol = prog.phase_policy_at(0)
+        ctx = DitherCtx.for_step(jax.random.PRNGKey(0), 0, pol, program=prog)
+        assert ctx.resolve("fc").spec.meprop_k_static == 0.25
+
+
 class TestParser:
     def test_full_spec_round_trip(self):
         prog = parse_program(
