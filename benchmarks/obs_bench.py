@@ -1,0 +1,173 @@
+"""Observability subsystem benchmarks: bus overhead, monitors, report.
+
+Three claims gated on every PR:
+
+* **bus overhead** — telemetry through the metrics bus (io_callback
+  emission from the jitted backward, per-generation stacked-view cache)
+  costs a bounded multiple of the telemetry-off step. The gate is on the
+  on/off *ratio*, not the raw timing (repo policy: wall-clock is recorded,
+  never gated), with a generous band — CI hosts are noisy and the model is
+  tiny, so the emission path is a worst-case share of the step.
+* **monitor trips** — the health detectors fire deterministically on
+  synthetic pathologies (NaN loss, sparsity collapse), the suite
+  rate-limits a persisting condition, and escalation raises. Zero-band
+  gates: trip counts are exact.
+* **report render** — a real training run drains into a run directory
+  (``benchmarks/results/obs_run`` so the CI artifact upload keeps it) and
+  the offline report renders every expected section from the JSONL alone.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import time
+from typing import List
+
+import numpy as np
+
+from repro.bench import BenchResult, Gate
+from repro.configs import paper_models as pm
+from repro.core import DitherPolicy
+from repro.core import stats as statslib
+from repro.obs.bus import MetricsBus, get_bus, set_bus
+from repro.obs.monitor import (LossMonitor, MonitorAlert, MonitorSuite,
+                               SparsityMonitor)
+from repro.obs.runlog import RunLog, read_run
+from repro.obs.report import render
+from repro.obs.trace import Tracer
+
+from benchmarks.harness import train_classifier
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "results")
+RUN_DIR = os.path.join(RESULTS_DIR, "obs_run")
+
+
+def _bus_overhead(quick: bool) -> BenchResult:
+    steps = 30 if quick else 100
+    model = pm.lenet300100()
+    off = train_classifier(
+        model, DitherPolicy(variant="paper", s=2.0), steps=steps)
+    on = train_classifier(
+        model, DitherPolicy(variant="paper", s=2.0, collect_stats=True,
+                            stats_tag="obsB/"), steps=steps)
+    rows = sum(statslib.row_count(t) for t in statslib.tags()
+               if t.startswith("obsB/"))
+    ratio = on["us_per_step"] / max(off["us_per_step"], 1e-9)
+    return BenchResult(
+        name="obs/bus_overhead",
+        value=on["us_per_step"],
+        derived={
+            "overhead_ratio": ratio,
+            "us_per_step_off": off["us_per_step"],
+            "rows_per_step": rows / max(steps - 1, 1),
+        },
+        # ratio gate only, generous: LeNet-300-100 steps are ~100us, so the
+        # io_callback landing cost is a worst-case fraction of the step;
+        # anything beyond baseline + max(75% rel, 1.0 abs) is a real
+        # emission-path regression, not host noise
+        gates={"overhead_ratio": Gate(rel=0.75, abs=1.0, direction="high")},
+        context={"steps": steps, "model": "lenet300100"},
+    )
+
+
+def _monitor_trip() -> BenchResult:
+    t0 = time.perf_counter()
+    bus = MetricsBus()
+
+    # NaN loss -> one critical trip
+    loss_mon = LossMonitor(bus=bus)
+    bus.record("train", "train", [1.0, 2.5])
+    bus.record("train", "train", [2.0, float("nan")])
+    loss_trips = len(loss_mon.tick(2))
+
+    # collapsed sparsity -> one warning; persisting -> rate-limited
+    sp_mon = SparsityMonitor(setpoint=0.9, band=0.1, min_rows=1, bus=bus)
+    suite = MonitorSuite([sp_mon], reemit_every=100, bus=bus)
+    bus.record("dither", "fc0", [0.1, 4.0, 0.1])
+    sparsity_trips = len(suite.tick(1))
+    reemits = 0
+    for s in range(2, 6):
+        bus.record("dither", "fc0", [0.1, 4.0, 0.1])
+        reemits += len(suite.tick(s))
+
+    # escalation raises on critical
+    esc = MonitorSuite([LossMonitor(bus=bus)], escalate=True, bus=bus)
+    bus.record("train", "esc", [3.0, float("inf")])
+    try:
+        esc.tick(3)
+        raised = 0.0
+    except MonitorAlert:
+        raised = 1.0
+
+    dt_us = (time.perf_counter() - t0) * 1e6
+    zero = Gate(rel=0.0, abs=0.0, direction="both")
+    return BenchResult(
+        name="obs/monitor_trip",
+        value=dt_us,
+        derived={"loss_trips": float(loss_trips),
+                 "sparsity_trips": float(sparsity_trips),
+                 "rate_limited_reemits": float(reemits),
+                 "escalate_raised": raised},
+        gates={"loss_trips": zero, "sparsity_trips": zero,
+               "rate_limited_reemits": zero, "escalate_raised": zero},
+    )
+
+
+def _report_render(quick: bool) -> BenchResult:
+    steps = 25 if quick else 80
+    old_bus = get_bus()
+    bus = set_bus(MetricsBus())
+    try:
+        tracer = Tracer(bus)
+        with tracer.span("train"):
+            res = train_classifier(
+                pm.lenet300100(),
+                DitherPolicy(variant="paper", s=2.0, collect_stats=True,
+                             stats_tag="obsR/"),
+                steps=steps, memory="default=nsd")
+        bus.record("train", "train", [float(steps), res["final_loss"]])
+
+        shutil.rmtree(RUN_DIR, ignore_errors=True)
+        runlog = RunLog(RUN_DIR, bus=bus, context={
+            "tool": "obs_bench", "model": "lenet300100", "steps": steps})
+        lines = runlog.flush()
+        t0 = time.perf_counter()
+        text = render(RUN_DIR)
+        render_us = (time.perf_counter() - t0) * 1e6
+        _, streams = read_run(RUN_DIR)
+    finally:
+        set_bus(old_bus)
+
+    present = set(streams)
+    return BenchResult(
+        name="obs/report_render",
+        value=render_us,
+        derived={
+            "jsonl_lines": float(lines),
+            "report_chars": float(len(text)),
+            # zero-band presence flags: the report must have every section
+            # a dithered + memory-policied run produces
+            "has_dither": float("dither" in present),
+            "has_memory": float("memory" in present),
+            "has_phase": float("phase" in present),
+            "has_train": float("train" in present),
+            "overall_sparsity_pct": float(np.mean(
+                [r["sparsity"] for r in streams.get("dither", [])
+                 if r.get("sparsity") is not None]) * 100),
+        },
+        gates={
+            "has_dither": Gate(direction="both"),
+            "has_memory": Gate(direction="both"),
+            "has_phase": Gate(direction="both"),
+            "has_train": Gate(direction="both"),
+            "jsonl_lines": Gate(rel=0.0, abs=0.0, direction="both"),
+            "overall_sparsity_pct": Gate(rel=0.0, abs=3.0,
+                                         direction="both"),
+        },
+        context={"steps": steps, "run_dir": "benchmarks/results/obs_run"},
+    )
+
+
+def bench(quick: bool = True) -> List[BenchResult]:
+    return [_bus_overhead(quick), _monitor_trip(), _report_render(quick)]

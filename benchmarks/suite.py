@@ -43,8 +43,8 @@ def _suite_fns() -> Dict[str, callable]:
     per-suite rather than killing the whole runner."""
     from benchmarks import (complexity, convergence, distributed_nodes,
                             hillclimb, kernel_bench, layer_sparsity,
-                            memory_bench, meprop_compare, roofline_table,
-                            table1_sparsity)
+                            memory_bench, meprop_compare, obs_bench,
+                            roofline_table, table1_sparsity)
 
     def meprop_both(quick: bool = True):
         return (meprop_compare.bench(quick=quick)
@@ -61,12 +61,14 @@ def _suite_fns() -> Dict[str, callable]:
         "complexity": complexity.bench,
         "roofline_table": roofline_table.bench,
         "hillclimb": hillclimb.bench,
+        "obs_bench": obs_bench.bench,
     }
 
 
 SUITE_NAMES = ("table1_sparsity", "layer_sparsity", "memory_bench",
                "convergence", "meprop_compare", "distributed_nodes",
-               "kernel_bench", "complexity", "roofline_table", "hillclimb")
+               "kernel_bench", "complexity", "roofline_table", "hillclimb",
+               "obs_bench")
 
 
 def result_path(suite: str, results_dir: str = RESULTS_DIR) -> str:

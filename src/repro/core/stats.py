@@ -1,16 +1,28 @@
-"""Telemetry sink for dither statistics (sparsity / bit-width / delta).
+"""Telemetry facade for dither / comm / memory statistics.
 
 The paper's Table 1 reports the average sparsity of the pre-activation
 gradients over all layers and training iterations, and fig. 6b the
-worst-case bit-width. Those numbers are produced *inside* the backward pass,
-so we surface them with ``jax.experimental.io_callback`` into a process-local
-sink. This is a single-host debugging/telemetry path — the policy flag
-``collect_stats`` defaults to False and stays off for pjit multi-device runs.
+worst-case bit-width. Those numbers are produced *inside* jitted code, so
+they surface through ``jax.experimental.io_callback`` into a process-local
+store. That store is now the typed metrics bus in :mod:`repro.obs.bus` —
+this module is the thin compatibility shim over it, keeping the historical
+``emit`` / ``rows`` / ``summary`` API (and its exact numerics, pinned
+bit-for-bit by the ``layer_sparsity`` and ``memory_bench`` zero-band gates)
+while new consumers — the run-log exporter, the health monitors, the
+step-phase tracer — read the same rows through the bus directly.
+
+Stream mapping (see ``repro.obs.streams`` for the declared schemas):
+
+* ``emit``/``rows``/``summary``            -> stream ``"dither"``
+* ``emit_comm``/``comm_rows``/...          -> stream ``"comm"``
+* ``emit_memory``/``memory_rows``/...      -> stream ``"memory"``
+
+This remains a single-host debugging/telemetry path — the policy flag
+``collect_stats`` defaults to False and stays off for pjit multi-device
+runs.
 """
 from __future__ import annotations
 
-import threading
-from collections import defaultdict
 from typing import Dict, List
 
 import jax
@@ -18,83 +30,54 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.nsd import QuantStats
+from repro.obs.bus import get_bus
 
-_LOCK = threading.Lock()
-# tag -> list of (sparsity, bits, delta) rows
-_SINK: Dict[str, List[np.ndarray]] = defaultdict(list)
-# tag -> list of (wire_bytes, dense_bytes) rows — the comm-side counters
-# (bytes-on-wire of compressed gradient exchange; see repro.comm.telemetry)
-_COMM_SINK: Dict[str, List[np.ndarray]] = defaultdict(list)
-# tag -> list of (measured, capacity, dense) byte rows — the residual-
-# memory counters: occupancy-aware wire-equivalent bytes, the HBM-resident
-# capacity of the encoded buffers, and the dense fp32 store they replace
-# (see repro.memory.codec for the measured-vs-capacity distinction)
-_MEM_SINK: Dict[str, List[np.ndarray]] = defaultdict(list)
+STREAM_DITHER = "dither"
+STREAM_COMM = "comm"
+STREAM_MEMORY = "memory"
 
 
 def reset() -> None:
-    with _LOCK:
-        _SINK.clear()
-        _COMM_SINK.clear()
-        _MEM_SINK.clear()
+    """Clear every stream on the default bus (all legacy sinks at once)."""
+    get_bus().reset()
 
 
-def _record(tag: str, row: np.ndarray) -> np.ndarray:
-    with _LOCK:
-        _SINK[tag].append(np.asarray(row))
-    return np.zeros((), np.int32)
+def _drain() -> None:
+    """Block until in-flight io_callbacks have landed (readers call this:
+    emissions from a dispatched-but-undrained step would otherwise race)."""
+    jax.effects_barrier()
 
+
+# ---------------------------------------------------------------------------
+# dither sparsity / bit-width / delta (stream "dither")
+# ---------------------------------------------------------------------------
 
 def emit(tag: str, stats: QuantStats) -> None:
     """Call from inside a (possibly jitted) backward pass."""
     row = jnp.stack(
         [stats.sparsity, stats.max_bitwidth, stats.delta.astype(jnp.float32)]
     )
-    jax.experimental.io_callback(
-        lambda r, _tag=tag: _record(_tag, r),
-        jax.ShapeDtypeStruct((), jnp.int32),
-        row,
-        ordered=False,
-    )
-
-
-def _drain() -> None:
-    """Block until in-flight io_callbacks have landed (readers call this:
-    emissions from a dispatched-but-unfinished step would otherwise race)."""
-    jax.effects_barrier()
+    get_bus().emit(STREAM_DITHER, tag, row)
 
 
 def rows(tag: str) -> np.ndarray:
     """(n, 3) array of [sparsity, bits, delta] records for a tag."""
-    _drain()
-    with _LOCK:
-        if not _SINK[tag]:
-            return np.zeros((0, 3), np.float32)
-        return np.stack(_SINK[tag])
+    return get_bus().rows(STREAM_DITHER, tag)
 
 
 def rows_since(tag: str, start: int) -> np.ndarray:
     """Records from index ``start`` on, without restacking the history —
     per-step consumers (the sparsity controller's telemetry window) stay
     O(new records) instead of O(run length) per tick."""
-    _drain()
-    with _LOCK:
-        new = _SINK[tag][start:]
-        if not new:
-            return np.zeros((0, 3), np.float32)
-        return np.stack(new)
+    return get_bus().rows_since(STREAM_DITHER, tag, start)
 
 
 def row_count(tag: str) -> int:
-    _drain()
-    with _LOCK:
-        return len(_SINK[tag])
+    return get_bus().row_count(STREAM_DITHER, tag)
 
 
 def tags() -> List[str]:
-    _drain()
-    with _LOCK:
-        return sorted(_SINK.keys())
+    return get_bus().tags(STREAM_DITHER)
 
 
 def summary() -> Dict[str, Dict[str, float]]:
@@ -136,37 +119,20 @@ def overall_max_bits() -> float:
 # comm counters: bytes-on-wire of compressed gradient exchange
 # ---------------------------------------------------------------------------
 
-def _record_comm(tag: str, row: np.ndarray) -> np.ndarray:
-    with _LOCK:
-        _COMM_SINK[tag].append(np.asarray(row))
-    return np.zeros((), np.int32)
-
-
 def emit_comm(tag: str, wire_bytes: jax.Array, dense_bytes: jax.Array) -> None:
     """Record one exchange's (wire, dense) byte counts from inside jit."""
     row = jnp.stack([jnp.asarray(wire_bytes, jnp.float32),
                      jnp.asarray(dense_bytes, jnp.float32)])
-    jax.experimental.io_callback(
-        lambda r, _tag=tag: _record_comm(_tag, r),
-        jax.ShapeDtypeStruct((), jnp.int32),
-        row,
-        ordered=False,
-    )
+    get_bus().emit(STREAM_COMM, tag, row)
 
 
 def comm_rows(tag: str) -> np.ndarray:
     """(n, 2) array of [wire_bytes, dense_bytes] records for a tag."""
-    _drain()
-    with _LOCK:
-        if not _COMM_SINK[tag]:
-            return np.zeros((0, 2), np.float32)
-        return np.stack(_COMM_SINK[tag])
+    return get_bus().rows(STREAM_COMM, tag)
 
 
 def comm_tags() -> List[str]:
-    _drain()
-    with _LOCK:
-        return sorted(_COMM_SINK.keys())
+    return get_bus().tags(STREAM_COMM)
 
 
 def comm_summary() -> Dict[str, Dict[str, float]]:
@@ -190,12 +156,6 @@ def comm_summary() -> Dict[str, Dict[str, float]]:
 # residual-memory counters: bytes the backward keeps alive per layer
 # ---------------------------------------------------------------------------
 
-def _record_memory(tag: str, row: np.ndarray) -> np.ndarray:
-    with _LOCK:
-        _MEM_SINK[tag].append(np.asarray(row))
-    return np.zeros((), np.int32)
-
-
 def emit_memory(tag: str, measured_bytes: jax.Array, capacity_bytes,
                 dense_bytes) -> None:
     """Record one layer's (measured, capacity, dense) residual byte counts
@@ -203,27 +163,16 @@ def emit_memory(tag: str, measured_bytes: jax.Array, capacity_bytes,
     row = jnp.stack([jnp.asarray(measured_bytes, jnp.float32),
                      jnp.asarray(capacity_bytes, jnp.float32),
                      jnp.asarray(dense_bytes, jnp.float32)])
-    jax.experimental.io_callback(
-        lambda r, _tag=tag: _record_memory(_tag, r),
-        jax.ShapeDtypeStruct((), jnp.int32),
-        row,
-        ordered=False,
-    )
+    get_bus().emit(STREAM_MEMORY, tag, row)
 
 
 def memory_rows(tag: str) -> np.ndarray:
     """(n, 3) array of [measured, capacity, dense] byte records for a tag."""
-    _drain()
-    with _LOCK:
-        if not _MEM_SINK[tag]:
-            return np.zeros((0, 3), np.float32)
-        return np.stack(_MEM_SINK[tag])
+    return get_bus().rows(STREAM_MEMORY, tag)
 
 
 def memory_tags() -> List[str]:
-    _drain()
-    with _LOCK:
-        return sorted(_MEM_SINK.keys())
+    return get_bus().tags(STREAM_MEMORY)
 
 
 def memory_summary() -> Dict[str, Dict[str, float]]:

@@ -34,6 +34,7 @@ from repro.core import nsd
 from repro.core import stats as statslib
 from repro.core.policy import DitherCtx, DitherPolicy, name_salt
 from repro.core.schedule import PolicyProgram, as_program
+from repro.obs.trace import annotate
 from repro.models.api import Model
 from repro.optim import OptConfig, apply_updates
 from repro.utils.pytree import tree_map_with_path_str
@@ -60,7 +61,7 @@ class SSGDConfig:
 def make_ssgd_step(model: Model, opt_cfg: OptConfig, dcfg: SSGDConfig,
                    base_policy: DitherPolicy | PolicyProgram,
                    comm_policy: Optional[CommPolicy] = None, *,
-                   phase_step: int = 0):
+                   phase_step: int = 0, memory=None):
     """One SSGD step: N per-node dithered grads -> server average -> update.
 
     The batch leaves must have a leading (n_nodes, per_node_batch, ...) axis.
@@ -90,15 +91,24 @@ def make_ssgd_step(model: Model, opt_cfg: OptConfig, dcfg: SSGDConfig,
     are what a real deployment would put on the wire. Those topologies add
     ``comm_error_bound`` (the reduce's pointwise bound vs the dense mean)
     to the step metrics.
+
+    ``memory`` is a ``repro.memory`` MemoryPolicy (or spec string)
+    selecting each dithered layer's residual codec / remat on every node —
+    static per layer, baked into the compiled step exactly as the Trainer
+    path does (tests pin the two paths numerically identical).
     """
+    from repro.memory.policy import as_memory_policy
+
     program = as_program(base_policy)
     if isinstance(base_policy, DitherPolicy):
         program = program.replace(base=base_policy.replace(s=dcfg.s_for_n()))
     policy = program.phase_policy_at(phase_step)
+    memory = as_memory_policy(memory)
 
     def node_grad(params, node_batch, base_key, step, worker, ctrl):
         ctx = DitherCtx.for_step(base_key, step, policy, worker=worker,
-                                 program=program, ctrl=ctrl or None)
+                                 program=program, ctrl=ctrl or None,
+                                 memory=memory)
         loss, grads = jax.value_and_grad(
             lambda p: model.loss(p, node_batch, ctx=ctx))(params)
         return loss, grads
@@ -190,20 +200,25 @@ def make_ssgd_step(model: Model, opt_cfg: OptConfig, dcfg: SSGDConfig,
     def ssgd_step(params, opt_state, sharded_batch, base_key, ctrl=None):
         step = opt_state["step"]
         workers = jnp.arange(dcfg.n_nodes)
-        losses, grads = jax.vmap(
-            lambda b, w: node_grad(params, b, base_key, step, w, ctrl),
-            in_axes=(0, 0))(sharded_batch, workers)
+        with annotate("ssgd/grad"):
+            losses, grads = jax.vmap(
+                lambda b, w: node_grad(params, b, base_key, step, w, ctrl),
+                in_axes=(0, 0))(sharded_batch, workers)
         comm_metrics = {}
         reduced = False
         if comm_policy is not None:
             if comm_policy.topology != TOPO_PS and dcfg.n_nodes > 1:
-                grads, totals = allreduce_node_grads(grads, base_key, step)
+                with annotate("ssgd/reduce"):
+                    grads, totals = allreduce_node_grads(
+                        grads, base_key, step)
                 comm_metrics = {"comm_wire_bytes": totals["wire"],
                                 "comm_dense_bytes": totals["dense"],
                                 "comm_error_bound": totals["bound"]}
                 reduced = True
             else:
-                grads, totals = compress_node_grads(grads, base_key, step)
+                with annotate("ssgd/reduce"):
+                    grads, totals = compress_node_grads(
+                        grads, base_key, step)
                 comm_metrics = {"comm_wire_bytes": totals["wire"],
                                 "comm_dense_bytes": totals["dense"]}
             if comm_policy.collect_stats:
@@ -212,8 +227,9 @@ def make_ssgd_step(model: Model, opt_cfg: OptConfig, dcfg: SSGDConfig,
         if not reduced:
             # parameter server: average the (already noisy) node gradients
             grads = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
-        params, opt_state, metrics = apply_updates(
-            params, grads, opt_state, opt_cfg)
+        with annotate("ssgd/update"):
+            params, opt_state, metrics = apply_updates(
+                params, grads, opt_state, opt_cfg)
         metrics["loss"] = jnp.mean(losses)
         metrics.update(comm_metrics)
         return params, opt_state, metrics

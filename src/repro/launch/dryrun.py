@@ -341,6 +341,11 @@ def main() -> None:
                     "per dithered layer; the grid reports the resulting "
                     "residual footprint and max-batch estimate per cell")
     ap.add_argument("--out", default="")
+    ap.add_argument("--run-dir", default="",
+                    help="observability run directory: each cell's "
+                    "lower+compile wall-clock lands in the phase stream, "
+                    "renderable offline via "
+                    "'python -m repro.obs.report <run-dir>'")
     args = ap.parse_args()
 
     policy = None if args.dither == "off" else DitherPolicy(variant=args.dither)
@@ -361,13 +366,25 @@ def main() -> None:
     else:
         assert args.arch and args.shape, "--arch/--shape or --all"
         targets = [(args.arch, args.shape)]
+    runlog = None
+    if args.run_dir:
+        from repro.obs.runlog import RunLog
+
+        runlog = RunLog(args.run_dir, context={
+            "tool": "dryrun", "dither": args.dither,
+            "policy_program": args.policy_program,
+            "memory_program": args.memory_program})
     meshes = [False, True] if args.both_meshes else [args.multi_pod]
-    for arch, shape in targets:
+    from repro.obs.trace import get_tracer, span
+
+    for i, (arch, shape) in enumerate(targets):
+        get_tracer().set_step(i)
         for mp in meshes:
             # the roofline table is single-pod only; multi-pod cells just
             # prove the "pod" axis lowers, so skip the anchor compiles there
-            res = run_cell(arch, shape, multi_pod=mp, policy=policy,
-                           memory=memory, correct_costs=not mp)
+            with span("cell"), span(f"{arch}:{shape}"):
+                res = run_cell(arch, shape, multi_pod=mp, policy=policy,
+                               memory=memory, correct_costs=not mp)
             cells.append(dataclasses.asdict(res))
             print(f"{res.arch:22s} {res.shape:12s} {res.mesh:8s} "
                   f"{res.status:8s} {res.reason[:80]}")
@@ -379,6 +396,10 @@ def main() -> None:
         with open(args.out, "w") as f:
             json.dump(cells, f, indent=1)
         print(f"wrote {args.out}")
+    if runlog is not None:
+        runlog.close()
+        print(f"run dir: {args.run_dir} "
+              f"(render: python -m repro.obs.report {args.run_dir})")
 
 
 if __name__ == "__main__":

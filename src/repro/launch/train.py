@@ -77,6 +77,14 @@ def main() -> None:
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--run-dir", default="",
+                    help="observability run directory: drains the metrics "
+                    "bus (dither/comm/memory/phase/train/monitor streams) "
+                    "into JSONL + a provenance manifest; render with "
+                    "'python -m repro.obs.report <run-dir>'")
+    ap.add_argument("--escalate-monitors", action="store_true",
+                    help="with --run-dir: critical health events (NaN "
+                    "loss, sparsity collapse) raise instead of warn")
     ap.add_argument("--distributed", action="store_true")
     args = ap.parse_args()
 
@@ -93,6 +101,18 @@ def main() -> None:
         base = (policy if policy is not None
                 else DitherPolicy(variant="off", s=args.s))
         policy = parse_program(args.policy_program, base=base)
+    obs = None
+    if args.run_dir:
+        from repro.obs import run_obs
+
+        obs = run_obs(
+            args.run_dir,
+            context={"tool": "train", "arch": args.arch,
+                     "preset": args.preset, "steps": args.steps,
+                     "dither": args.dither, "s": args.s,
+                     "policy_program": args.policy_program,
+                     "memory_program": args.memory_program},
+            escalate=args.escalate_monitors)
     trainer = Trainer(
         model,
         OptConfig(name="adamw", lr=args.lr, schedule="cosine",
@@ -104,6 +124,7 @@ def main() -> None:
                       ckpt_every=args.ckpt_every),
         policy=policy,
         memory_policy=args.memory_program or None,
+        obs=obs,
     )
     fn = batch_fn_for(model, args.batch, args.seq)
     counter = iter(range(10**9))
@@ -115,6 +136,9 @@ def main() -> None:
     out = trainer.fit(it())
     log.info("final loss: %.4f",
              out["history"][-1]["loss"] if out["history"] else float("nan"))
+    if args.run_dir:
+        log.info("run dir: %s (render: python -m repro.obs.report %s)",
+                 args.run_dir, args.run_dir)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,58 @@
+"""repro.obs — unified observability: metrics bus, tracing, run logs.
+
+One subsystem owns every telemetry path the training / serving stack
+produces:
+
+* :mod:`repro.obs.streams` + :mod:`repro.obs.bus` — the typed metrics bus
+  (declared stream schemas, one io_callback emission path from inside
+  jitted code, cached stacked reads). ``repro.core.stats`` is a thin
+  compatibility shim over it.
+* :mod:`repro.obs.trace` — host-side step-phase spans (``with
+  span("dispatch")``) mirrored into XLA profiles, plus ``annotate`` for
+  named scopes inside jit.
+* :mod:`repro.obs.runlog` — append-only JSONL export of every stream into
+  a run directory with a provenance manifest; :class:`RunObs` bundles
+  exporter + tracer + monitors for ``Trainer(obs=...)`` / ``--run-dir``.
+* :mod:`repro.obs.monitor` — rolling-window health detectors (loss
+  NaN/inf, sparsity collapse, comm-ratio / residual-compression drift,
+  error-bound blowup) with escalate-to-raise.
+* :mod:`repro.obs.report` — ``python -m repro.obs.report <run-dir>``
+  renders Table-1-style per-layer summaries and a step-time breakdown
+  from the JSONL alone.
+"""
+from repro.obs.bus import MetricsBus, get_bus, register_stream, set_bus
+from repro.obs.monitor import (BoundMonitor, CommRatioMonitor, LossMonitor,
+                               MemoryRatioMonitor, Monitor, MonitorAlert,
+                               MonitorEvent, MonitorSuite, SparsityMonitor,
+                               default_monitors)
+from repro.obs.runlog import RunLog, RunObs, read_run, run_obs
+from repro.obs.streams import BUILTIN_STREAMS, MetricStream
+from repro.obs.trace import Tracer, annotate, get_tracer, set_step, span
+
+__all__ = [
+    "BUILTIN_STREAMS",
+    "BoundMonitor",
+    "CommRatioMonitor",
+    "LossMonitor",
+    "MemoryRatioMonitor",
+    "MetricStream",
+    "MetricsBus",
+    "Monitor",
+    "MonitorAlert",
+    "MonitorEvent",
+    "MonitorSuite",
+    "RunLog",
+    "RunObs",
+    "SparsityMonitor",
+    "Tracer",
+    "annotate",
+    "default_monitors",
+    "get_bus",
+    "get_tracer",
+    "read_run",
+    "register_stream",
+    "run_obs",
+    "set_bus",
+    "set_step",
+    "span",
+]

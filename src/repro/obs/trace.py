@@ -1,0 +1,111 @@
+"""Step-phase tracing: host-side spans that land on the metrics bus.
+
+``with span("dispatch"): ...`` measures the wall-clock of one phase of one
+step and records a row on the ``"phase"`` stream, tagged by the span *path*
+(nested spans join with ``/``: ``"dispatch/compile"``). Each span also
+opens a ``jax.profiler.TraceAnnotation`` so the same phase shows up in XLA
+profiler timelines under the same name — one taxonomy for host timing and
+device profiles.
+
+The span taxonomy used by the built-in drivers:
+
+* ``data``        — batch construction / next(loader)
+* ``dispatch``    — the jitted step call (async dispatch + any host sync
+                    the caller performs inside)
+* ``controller``  — the sparsity-controller host tick (includes the
+                    effects-barrier telemetry drain)
+* ``checkpoint``  — checkpoint save/wait
+* ``monitor``     — health-monitor evaluation (repro.obs.monitor)
+* ``admit`` / ``decode`` — serving-engine tick phases
+* ``lower`` / ``compile`` — dry-run cell phases
+
+Inside *jitted* code host spans cannot run; use :func:`annotate` (a thin
+``jax.named_scope``) there, which names the HLO region so device profiles
+attribute time to the same taxonomy.
+
+The module-level :func:`span` uses the process-default tracer, whose step
+counter the training/serving loops advance with :func:`set_step`.
+Recording is cheap (a perf_counter pair and a list append) and always on;
+whether the rows go anywhere durable is the run-log exporter's decision.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+import time
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.obs.bus import MetricsBus, get_bus
+from repro.obs.streams import PHASE
+
+_TLS = threading.local()
+
+
+def annotate(name: str):
+    """Named scope for *traced* code: spans inside jit land in the HLO /
+    device profile under the same taxonomy as the host spans."""
+    import jax
+
+    return jax.named_scope(name)
+
+
+class Tracer:
+    """Span recorder bound to a bus; one per process is typical."""
+
+    def __init__(self, bus: Optional[MetricsBus] = None):
+        self._bus = bus
+        self._step = 0
+
+    @property
+    def bus(self) -> MetricsBus:
+        return self._bus if self._bus is not None else get_bus()
+
+    def set_step(self, step: int) -> None:
+        """Advance the step index stamped on subsequent span rows."""
+        self._step = int(step)
+
+    @property
+    def step(self) -> int:
+        return self._step
+
+    def _stack(self) -> list:
+        stack = getattr(_TLS, "span_stack", None)
+        if stack is None:
+            stack = _TLS.span_stack = []
+        return stack
+
+    @contextlib.contextmanager
+    def span(self, name: str) -> Iterator[None]:
+        """Measure one phase; nested spans record under a joined path."""
+        import jax
+
+        stack = self._stack()
+        stack.append(name)
+        path = "/".join(stack)
+        t0 = time.perf_counter()
+        try:
+            with jax.profiler.TraceAnnotation(name):
+                yield
+        finally:
+            dt = time.perf_counter() - t0
+            stack.pop()
+            self.bus.record(PHASE.name, path,
+                            np.array([self._step, dt], np.float32))
+
+
+_DEFAULT = Tracer()
+
+
+def get_tracer() -> Tracer:
+    return _DEFAULT
+
+
+def span(name: str):
+    """``with span("data"): ...`` on the process-default tracer."""
+    return _DEFAULT.span(name)
+
+
+def set_step(step: int) -> None:
+    _DEFAULT.set_step(step)

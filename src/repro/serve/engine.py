@@ -19,6 +19,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.api import Model
+from repro.obs.bus import get_bus
+from repro.obs.trace import span
 from repro.utils import get_logger
 
 log = get_logger("serve")
@@ -51,6 +53,7 @@ class Engine:
         self.cache = model.init_cache(cfg.max_batch, cfg.max_len)
         self.t = jnp.zeros((), jnp.int32)
         self.tokens = jnp.zeros((cfg.max_batch, 1), jnp.int32)
+        self._tick = 0  # host-side tick counter for the "serve" stream
         self._decode = jax.jit(
             lambda p, c, tok, t: model.decode_step(p, c, tok, t))
 
@@ -73,9 +76,17 @@ class Engine:
 
     def step(self) -> None:
         """One decode tick for all slots."""
-        self._admit()
-        logits, self.cache = self._decode(
-            self.params, self.cache, self.tokens, self.t)
+        with span("serve/admit"):
+            self._admit()
+        # per-tick occupancy telemetry (host-side record; ticks are bounded
+        # by run()'s max_ticks, so the bus stays bounded too)
+        get_bus().record("serve", "engine", np.array(
+            [self._tick, sum(s is not None for s in self._slots),
+             self._queue.qsize()], np.float32))
+        self._tick += 1
+        with span("serve/decode"):
+            logits, self.cache = self._decode(
+                self.params, self.cache, self.tokens, self.t)
         nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
         nxt_np = np.asarray(nxt)
         for i, req in enumerate(self._slots):

@@ -5,6 +5,7 @@ distribution enters only through the sharding rules installed around jit.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Any, Callable, Dict, Iterator, Optional
@@ -17,6 +18,7 @@ from repro.comm.compression import (CommPolicy, compress_tree,
 from repro.core.policy import DitherCtx, DitherPolicy
 from repro.core.schedule import ControllerDriver, PolicyProgram, as_program
 from repro.models.api import Model
+from repro.obs.trace import annotate
 from repro.optim import OptConfig, apply_updates, init_opt_state
 from repro.train.checkpoint import CheckpointManager
 from repro.train.fault_tolerance import PreemptionGuard
@@ -41,7 +43,7 @@ class Trainer:
                  policy: Optional[DitherPolicy | PolicyProgram] = None,
                  eval_fn: Optional[Callable] = None,
                  comm_policy: Optional[CommPolicy] = None,
-                 topology=None, memory_policy=None):
+                 topology=None, memory_policy=None, obs=None):
         from repro.memory.policy import as_memory_policy
 
         self.model = model
@@ -71,6 +73,11 @@ class Trainer:
         # checkpoint tree next to the EF residuals, the telemetry cursor is
         # host-only (re-measured from scratch on resume)
         self._ctrl = ControllerDriver(self.program)
+        # repro.obs.RunObs: when set, the loop records step-phase spans
+        # (data/dispatch/controller/checkpoint), per-step train metrics,
+        # and monitor ticks, and drains everything into the run directory.
+        # None keeps the loop observability-free (no per-step host sync).
+        self.obs = obs
         self.guard = PreemptionGuard(install=False)
         self.ckpt = (CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep_ckpts)
                      if tcfg.ckpt_every and tcfg.ckpt_dir else None)
@@ -100,7 +107,8 @@ class Trainer:
 
         n = self.tcfg.grad_accum
         if n == 1:
-            loss, grads = jax.value_and_grad(one_loss)(params, batches, 0)
+            with annotate("step/grad"):
+                loss, grads = jax.value_and_grad(one_loss)(params, batches, 0)
         else:
             # accept flat batches: split the leading (batch) dim into
             # (n, batch/n, ...) microbatches
@@ -122,19 +130,22 @@ class Trainer:
             zero = (jnp.zeros(()),
                     jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
                                  params))
-            (loss, grads), _ = jax.lax.scan(
-                acc_fn, zero, (jnp.arange(n), batches))
+            with annotate("step/grad"):
+                (loss, grads), _ = jax.lax.scan(
+                    acc_fn, zero, (jnp.arange(n), batches))
         if self.comm_policy is not None:
             comm_key = jax.random.fold_in(
                 jax.random.fold_in(base_key, 0xC033), step)
-            grads, comm_state, tele = compress_tree(
-                grads, comm_key, self.comm_policy, comm_state)
+            with annotate("step/comm"):
+                grads, comm_state, tele = compress_tree(
+                    grads, comm_key, self.comm_policy, comm_state)
             metrics_comm = {"comm_wire_bytes": tele["wire_bytes"],
                             "comm_dense_bytes": tele["dense_bytes"]}
         else:
             metrics_comm = {}
-        params, opt_state, metrics = apply_updates(
-            params, grads, opt_state, self.opt_cfg)
+        with annotate("step/update"):
+            params, opt_state, metrics = apply_updates(
+                params, grads, opt_state, self.opt_cfg)
         metrics["loss"] = loss
         metrics.update(metrics_comm)
         return params, opt_state, metrics, comm_state
@@ -202,29 +213,49 @@ class Trainer:
         if self._comm_state is None:  # caller passed params directly
             self._comm_state = self._init_comm_state(params)
         comm_state = self._comm_state
+        # span factory: with obs attached every phase is timed into the
+        # "phase" stream; without it the loop stays observability-free
+        if self.obs is not None:
+            sp = self.obs.span
+        else:
+            def sp(name):
+                return contextlib.nullcontext()
         t0 = time.time()
         for step in range(start, self.tcfg.total_steps):
+            if self.obs is not None:
+                self.obs.set_step(step)
             if self.guard.should_stop:
                 log.info("preemption: checkpointing at step %d and exiting",
                          step)
                 if self.ckpt is not None:
-                    self.ckpt.save(step, self._ckpt_tree(params, opt_state))
-                    self.ckpt.wait()
+                    with sp("checkpoint"):
+                        self.ckpt.save(step,
+                                       self._ckpt_tree(params, opt_state))
+                        self.ckpt.wait()
                 break
-            batch = next(batch_iter)
-            if isinstance(batch, tuple):  # (step, batch) loaders
-                batch = batch[1]
+            with sp("data"):
+                batch = next(batch_iter)
+                if isinstance(batch, tuple):  # (step, batch) loaders
+                    batch = batch[1]
             self._init_ctrl_state(params, batch)
             phase_policy = (self.program.phase_policy_at(step)
                             if self.program is not None else None)
-            params, opt_state, metrics, comm_state = self._jit_step(
-                params, opt_state, batch, base_key, comm_state,
-                self._ctrl.state, phase_policy=phase_policy)
+            with sp("dispatch"):
+                params, opt_state, metrics, comm_state = self._jit_step(
+                    params, opt_state, batch, base_key, comm_state,
+                    self._ctrl.state, phase_policy=phase_policy)
             self._comm_state = comm_state
             # controller tick: fold the step's per-layer telemetry into the
             # log-scales (host-side; the updated state is a traced input
             # next step, so no retrace)
-            self._ctrl.tick()
+            with sp("controller"):
+                self._ctrl.tick()
+            if self.obs is not None:
+                # float() blocks on the step's device values — acceptable
+                # only because obs is opt-in; monitors + run log need host
+                # scalars
+                self.obs.on_step(
+                    step + 1, {k: float(v) for k, v in metrics.items()})
             if self.tcfg.log_every and (step + 1) % self.tcfg.log_every == 0:
                 loss = float(metrics["loss"])
                 row = {"step": step + 1, "loss": loss}
@@ -240,8 +271,12 @@ class Trainer:
                          time.time() - t0)
             if (self.ckpt is not None and self.tcfg.ckpt_every
                     and (step + 1) % self.tcfg.ckpt_every == 0):
-                self.ckpt.save(step + 1, self._ckpt_tree(params, opt_state))
+                with sp("checkpoint"):
+                    self.ckpt.save(step + 1,
+                                   self._ckpt_tree(params, opt_state))
         if self.ckpt is not None:
             self.ckpt.wait()
+        if self.obs is not None:
+            self.obs.finish()
         return {"params": params, "opt_state": opt_state,
                 "history": self.history}

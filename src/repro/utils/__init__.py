@@ -4,12 +4,14 @@ from repro.utils.pytree import (
     tree_map_with_path_str,
     flatten_with_names,
 )
-from repro.utils.logging import get_logger
+from repro.utils.logging import get_log_context, get_logger, set_log_context
 
 __all__ = [
     "tree_size",
     "tree_bytes",
     "tree_map_with_path_str",
     "flatten_with_names",
+    "get_log_context",
     "get_logger",
+    "set_log_context",
 ]

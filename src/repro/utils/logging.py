@@ -1,18 +1,73 @@
-"""Minimal structured logging for the framework."""
+"""Minimal structured logging for the framework.
+
+Two output modes, selected by the ``REPRO_LOG_FORMAT`` environment
+variable at logger creation:
+
+* default — the historical human-readable single line
+  (``HH:MM:SS L name :: message``)
+* ``json`` — one strict-JSON object per line (``ts``, ``level``,
+  ``logger``, ``msg`` + the process log context), so host logs can be
+  joined against the obs run log: :func:`set_log_context` stamps
+  ``run_id`` / ``step`` (the run-log exporter and the training loop keep
+  them current), and every subsequent record carries them.
+"""
 from __future__ import annotations
 
+import json
 import logging
 import os
 import sys
+from typing import Any, Dict
 
 _FMT = "%(asctime)s %(levelname).1s %(name)s :: %(message)s"
+
+# process-wide fields merged into every JSON log record (run_id, step, ...)
+_LOG_CONTEXT: Dict[str, Any] = {}
+
+
+def set_log_context(**fields: Any) -> None:
+    """Merge fields into the process log context; ``None`` removes a key."""
+    for k, v in fields.items():
+        if v is None:
+            _LOG_CONTEXT.pop(k, None)
+        else:
+            _LOG_CONTEXT[k] = v
+
+
+def get_log_context() -> Dict[str, Any]:
+    return dict(_LOG_CONTEXT)
+
+
+class JsonFormatter(logging.Formatter):
+    """One strict-JSON object per line, joinable with the obs run log."""
+
+    def format(self, record: logging.LogRecord) -> str:
+        obj: Dict[str, Any] = {
+            "ts": self.formatTime(record, "%Y-%m-%dT%H:%M:%S"),
+            "level": record.levelname,
+            "logger": record.name,
+            "msg": record.getMessage(),
+        }
+        obj.update(_LOG_CONTEXT)
+        if record.exc_info:
+            obj["exc"] = self.formatException(record.exc_info)
+        # default=str: a non-serializable context value must not kill the
+        # log line; allow_nan=False keeps consumers strict (float fields in
+        # context are host scalars, never NaN by construction)
+        return json.dumps(obj, default=str, allow_nan=False)
+
+
+def _make_formatter() -> logging.Formatter:
+    if os.environ.get("REPRO_LOG_FORMAT", "").lower() == "json":
+        return JsonFormatter()
+    return logging.Formatter(_FMT, datefmt="%H:%M:%S")
 
 
 def get_logger(name: str) -> logging.Logger:
     logger = logging.getLogger(name)
     if not logger.handlers:
         handler = logging.StreamHandler(sys.stderr)
-        handler.setFormatter(logging.Formatter(_FMT, datefmt="%H:%M:%S"))
+        handler.setFormatter(_make_formatter())
         logger.addHandler(handler)
         logger.setLevel(os.environ.get("REPRO_LOGLEVEL", "INFO"))
         logger.propagate = False

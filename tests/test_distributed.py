@@ -177,3 +177,61 @@ def test_sharded_dithered_train_step_subprocess():
     out = subprocess.run([sys.executable, "-c", PJIT_SCRIPT], env=env,
                          capture_output=True, text=True, timeout=900)
     assert "PJIT_OK" in out.stdout, out.stdout + out.stderr
+
+
+class TestSSGDMemoryPolicy:
+    """make_ssgd_step(memory=...) threads the residual-memory policy into
+    every node's DitherCtx exactly as the Trainer / make_train_step path
+    does (PR: obs subsystem satellite)."""
+
+    def _setup(self, key):
+        model = _tiny_lm()
+        params, _ = model.init(key)
+        opt = OptConfig(name="sgd", lr=1e-2, grad_clip=None)
+        batch = {
+            "tokens": jax.random.randint(key, (4, 16), 0, model.cfg.vocab),
+            "labels": jax.random.randint(key, (4, 16), 0, model.cfg.vocab),
+        }
+        return model, params, opt, batch
+
+    def test_single_node_parity_with_train_step(self, key):
+        """n_nodes=1 ssgd step == make_train_step, same memory policy."""
+        from repro.launch.steps import make_train_step
+
+        model, params, opt, batch = self._setup(key)
+        pol = DitherPolicy(variant="paper", s=1.5)
+        mem = "default=nsd"
+        dcfg = SSGDConfig(n_nodes=1, s_schedule="fixed", s_base=1.5)
+
+        ssgd_fn, _ = make_ssgd_step(model, opt, dcfg, pol, memory=mem)
+        train_fn = jax.jit(make_train_step(model, opt, pol, memory=mem))
+
+        bk = jax.random.fold_in(key, 7)
+        st = init_opt_state(params, opt)
+        p_a, _, m_a = ssgd_fn(params, st, shard_batch(batch, 1), bk)
+        st = init_opt_state(params, opt)
+        p_b, _, m_b = train_fn(params, st, batch, bk)
+
+        assert float(m_a["loss"]) == pytest.approx(float(m_b["loss"]),
+                                                   rel=1e-6)
+        for a, b in zip(jax.tree.leaves(p_a), jax.tree.leaves(p_b)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-7)
+
+    def test_memory_policy_changes_backward(self, key):
+        """An int8 residual codec must actually reach the backward pass:
+        the step's gradients differ from the fp32-residual run."""
+        model, params, opt, batch = self._setup(key)
+        pol = DitherPolicy(variant="paper", s=1.5)
+        dcfg = SSGDConfig(n_nodes=2, s_schedule="fixed", s_base=1.5)
+        bk = jax.random.fold_in(key, 9)
+        sb = shard_batch(batch, 2)
+
+        fn_fp32, _ = make_ssgd_step(model, opt, dcfg, pol)
+        fn_int8, _ = make_ssgd_step(model, opt, dcfg, pol,
+                                    memory="default=int8")
+        p_a, _, _ = fn_fp32(params, init_opt_state(params, opt), sb, bk)
+        p_b, _, _ = fn_int8(params, init_opt_state(params, opt), sb, bk)
+        diffs = [float(np.abs(np.asarray(a) - np.asarray(b)).max())
+                 for a, b in zip(jax.tree.leaves(p_a), jax.tree.leaves(p_b))]
+        assert max(diffs) > 0.0

@@ -1,0 +1,415 @@
+"""repro.obs: metrics bus, tracing, run logs, monitors, report.
+
+Pins the tentpole contracts: one io_callback emission path with
+drain-before-read semantics, the per-generation stacked-view cache (the
+O(n^2) summary fix), strict-JSON run directories that round-trip, monitor
+trip/rate-limit/escalation behavior, and the offline report rendering from
+a run dir alone.
+"""
+import json
+import logging
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.obs.bus import MetricsBus, get_bus, set_bus
+from repro.obs.monitor import (LossMonitor, MonitorAlert, MonitorSuite,
+                               SparsityMonitor, default_monitors)
+from repro.obs.runlog import RunLog, read_run, run_obs
+from repro.obs.streams import MetricStream
+from repro.obs.trace import Tracer
+
+
+@pytest.fixture
+def bus():
+    """Fresh default bus per test; the process default is restored after."""
+    old = get_bus()
+    b = set_bus(MetricsBus())
+    yield b
+    set_bus(old)
+
+
+# ---------------------------------------------------------------------------
+# streams + registry
+# ---------------------------------------------------------------------------
+
+class TestStreams:
+    def test_builtin_schema(self, bus):
+        schema = bus.registry.schema()
+        assert schema["dither"] == ("sparsity", "bits", "delta")
+        assert schema["phase"] == ("step", "duration_s")
+        assert "comm" in schema and "memory" in schema
+
+    def test_register_idempotent_by_value(self, bus):
+        s = MetricStream("custom", ("a", "b"), "test stream")
+        assert bus.registry.register(s) is not None
+        bus.registry.register(MetricStream("custom", ("a", "b"), "test stream"))
+        with pytest.raises(ValueError):
+            bus.registry.register(MetricStream("custom", ("a", "c"), "other"))
+
+    def test_invalid_stream_names(self):
+        with pytest.raises(ValueError):
+            MetricStream("", ("a",), "")
+        with pytest.raises(ValueError):
+            MetricStream("has/slash", ("a",), "")
+        with pytest.raises(ValueError):
+            MetricStream("nocols", (), "")
+
+    def test_record_arity_validated(self, bus):
+        with pytest.raises(ValueError):
+            bus.record("dither", "t", [1.0, 2.0])  # needs 3 columns
+        with pytest.raises(KeyError):
+            bus.record("no_such_stream", "t", [1.0])
+
+
+# ---------------------------------------------------------------------------
+# bus: emission, ordering, caching
+# ---------------------------------------------------------------------------
+
+class TestBus:
+    def test_emit_from_jit_lands_after_drain(self, bus):
+        @jax.jit
+        def f(x):
+            get_bus().emit("dither", "L0", jnp.stack(
+                [jnp.mean(x), jnp.float32(4.0), jnp.float32(0.5)]))
+            return x * 2
+
+        for i in range(3):
+            f(jnp.float32(i))
+        rows = bus.rows("dither", "L0")  # rows() drains first
+        assert rows.shape == (3, 3)
+        np.testing.assert_allclose(rows[:, 0], [0.0, 1.0, 2.0])
+
+    def test_per_tag_ordering_preserved(self, bus):
+        @jax.jit
+        def f(v):
+            get_bus().emit("train", "seq", jnp.stack([v, v * 10]))
+            return v
+
+        for i in range(20):
+            f(jnp.float32(i))
+        rows = bus.rows("train", "seq")
+        np.testing.assert_allclose(rows[:, 0], np.arange(20, dtype=np.float32))
+
+    def test_stacked_view_cached_per_generation(self, bus):
+        """The O(n^2) re-stack fix: repeated reads of an unchanged tag hit
+        the cache; only a new row invalidates it."""
+        for i in range(50):
+            bus.record("train", "t", [float(i), 0.0])
+        assert bus.stack_calls == 0
+        for _ in range(10):
+            r = bus.rows("train", "t")
+        assert r.shape == (50, 2)
+        assert bus.stack_calls == 1  # one stack for ten reads
+        bus.record("train", "t", [50.0, 0.0])
+        assert bus.rows("train", "t").shape == (51, 2)
+        assert bus.stack_calls == 2
+
+    def test_rows_since_stacks_only_suffix(self, bus):
+        for i in range(10):
+            bus.record("train", "t", [float(i), 0.0])
+        new = bus.rows_since("train", "t", 7)
+        assert new.shape == (3, 2)
+        np.testing.assert_allclose(new[:, 0], [7.0, 8.0, 9.0])
+        assert bus.rows_since("train", "t", 10).shape == (0, 2)
+
+    def test_concurrent_recorders(self, bus):
+        """Many threads appending to distinct + shared tags: no rows lost,
+        per-thread-tag order preserved."""
+        n_threads, n_rows = 8, 200
+        errs = []
+
+        def worker(t):
+            try:
+                for i in range(n_rows):
+                    bus.record("train", f"w{t}", [float(i), float(t)])
+                    bus.record("train", "shared", [float(t), float(i)])
+            except Exception as e:  # pragma: no cover
+                errs.append(e)
+
+        threads = [threading.Thread(target=worker, args=(t,))
+                   for t in range(n_threads)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        assert not errs
+        assert bus.row_count("train", "shared") == n_threads * n_rows
+        for t in range(n_threads):
+            rows = bus.rows("train", f"w{t}")
+            np.testing.assert_allclose(
+                rows[:, 0], np.arange(n_rows, dtype=np.float32))
+
+    def test_events_and_cursors(self, bus):
+        bus.log_event({"kind": "a"})
+        bus.log_event({"kind": "b"})
+        assert [e["kind"] for e in bus.events()] == ["a", "b"]
+        assert [e["kind"] for e in bus.events(1)] == ["b"]
+        bus.record("train", "t", [0.0, 0.0])
+        assert bus.cursors() == {("train", "t"): 1}
+
+
+# ---------------------------------------------------------------------------
+# core.stats compatibility shim
+# ---------------------------------------------------------------------------
+
+class TestStatsShim:
+    def test_emit_and_summary_round_trip(self, bus):
+        from repro.core import stats as statslib
+        from repro.core.nsd import QuantStats
+
+        @jax.jit
+        def f(s):
+            statslib.emit("fc0", QuantStats(
+                sparsity=s, max_bitwidth=jnp.float32(4.0),
+                delta=jnp.float32(0.25)))
+            return s
+
+        f(jnp.float32(0.75))
+        summ = statslib.summary()
+        assert summ["fc0"]["mean_sparsity"] == pytest.approx(0.75)
+        assert summ["fc0"]["max_bits"] == pytest.approx(4.0)
+        assert statslib.overall_sparsity() == pytest.approx(0.75)
+
+    def test_reset_clears_bus(self, bus):
+        from repro.core import stats as statslib
+
+        bus.record(statslib.STREAM_DITHER, "x", [0.5, 4.0, 0.1])
+        statslib.reset()
+        assert statslib.summary() == {}
+
+    def test_rows_since_window(self, bus):
+        from repro.core import stats as statslib
+
+        for i in range(5):
+            bus.record(statslib.STREAM_DITHER, "x", [i / 10, 4.0, 0.1])
+        win = statslib.rows_since("x", 3)
+        assert win.shape == (2, 3)
+
+
+# ---------------------------------------------------------------------------
+# tracing
+# ---------------------------------------------------------------------------
+
+class TestTrace:
+    def test_span_paths_and_step_stamp(self, bus):
+        tr = Tracer(bus)
+        tr.set_step(7)
+        with tr.span("outer"):
+            with tr.span("inner"):
+                pass
+        outer = bus.rows("phase", "outer")
+        inner = bus.rows("phase", "outer/inner")
+        assert outer.shape == (1, 2) and inner.shape == (1, 2)
+        assert outer[0, 0] == 7 and inner[0, 0] == 7
+        assert outer[0, 1] >= inner[0, 1] >= 0
+
+    def test_span_records_on_exception(self, bus):
+        tr = Tracer(bus)
+        with pytest.raises(RuntimeError):
+            with tr.span("boom"):
+                raise RuntimeError("x")
+        assert bus.row_count("phase", "boom") == 1
+        # the stack unwound: a following span is top-level again
+        with tr.span("after"):
+            pass
+        assert bus.row_count("phase", "after") == 1
+
+    def test_annotate_inside_jit(self, bus):
+        from repro.obs.trace import annotate
+
+        @jax.jit
+        def f(x):
+            with annotate("step/grad"):
+                return x * 2
+
+        assert float(f(jnp.float32(3.0))) == 6.0
+
+
+# ---------------------------------------------------------------------------
+# run log: JSONL round-trip
+# ---------------------------------------------------------------------------
+
+class TestRunLog:
+    def test_round_trip_strict_json(self, bus, tmp_path):
+        rd = str(tmp_path / "run")
+        rl = RunLog(rd, bus=bus, context={"tool": "test"})
+        bus.record("dither", "fc0", [0.9, 4.0, 0.25])
+        bus.record("train", "train", [1.0, float("nan")])  # -> null
+        bus.log_event({"kind": "trip", "severity": "warning"})
+        assert rl.flush() == 3
+        assert rl.flush() == 0  # cursor-based: nothing new
+
+        manifest, streams = read_run(rd)
+        assert manifest["run_id"] == rl.run_id
+        assert manifest["context"] == {"tool": "test"}
+        assert manifest["streams"]["dither"] == ["sparsity", "bits", "delta"]
+        assert streams["dither"] == [
+            {"tag": "fc0", "sparsity": pytest.approx(0.9),
+             "bits": 4.0, "delta": 0.25}]
+        assert streams["train"][0]["loss"] is None  # NaN -> null
+        assert streams["monitor"][0]["kind"] == "trip"
+        # strict: no bare NaN/Infinity anywhere in the files
+        for fname in os.listdir(rd):
+            with open(os.path.join(rd, fname)) as f:
+                text = f.read()
+            assert "NaN" not in text and "Infinity" not in text
+
+    def test_incremental_flush(self, bus, tmp_path):
+        rl = RunLog(str(tmp_path / "run"), bus=bus)
+        bus.record("train", "t", [0.0, 1.0])
+        assert rl.flush() == 1
+        bus.record("train", "t", [1.0, 2.0])
+        bus.record("comm", "t", [10.0, 100.0])
+        assert rl.flush() == 2
+        _, streams = read_run(str(tmp_path / "run"))
+        assert len(streams["train"]) == 2 and len(streams["comm"]) == 1
+
+    def test_read_rejects_nonstrict_json(self, bus, tmp_path):
+        rd = str(tmp_path / "run")
+        RunLog(rd, bus=bus)
+        with open(os.path.join(rd, "train.jsonl"), "w") as f:
+            f.write('{"tag": "t", "step": 1, "loss": NaN}\n')
+        with pytest.raises(ValueError):
+            read_run(rd)
+
+
+# ---------------------------------------------------------------------------
+# monitors
+# ---------------------------------------------------------------------------
+
+class TestMonitors:
+    def test_loss_monitor_critical_on_nonfinite(self, bus):
+        mon = LossMonitor(bus=bus)
+        bus.record("train", "train", [1.0, 2.5])
+        assert mon.tick(1) == []
+        bus.record("train", "train", [2.0, float("nan")])
+        events = mon.tick(2)
+        assert len(events) == 1
+        assert events[0].severity == "critical"
+        assert events[0].to_dict()["value"] is None  # strict-JSON safe
+
+    def test_sparsity_monitor_trips_below_band(self, bus):
+        mon = SparsityMonitor(setpoint=0.9, band=0.1, min_rows=3, bus=bus)
+        for _ in range(3):
+            bus.record("dither", "fc0", [0.95, 4.0, 0.1])
+        assert mon.tick(1) == []  # healthy
+        for _ in range(10):
+            bus.record("dither", "fc0", [0.2, 4.0, 0.1])
+        events = mon.tick(2)
+        assert len(events) == 1 and events[0].kind == "sparsity_collapse"
+
+    def test_suite_rate_limits_persistent_trips(self, bus):
+        mon = SparsityMonitor(setpoint=0.9, band=0.1, min_rows=1, bus=bus)
+        suite = MonitorSuite([mon], reemit_every=10, bus=bus)
+        bus.record("dither", "fc0", [0.1, 4.0, 0.1])
+        assert len(suite.tick(1)) == 1
+        for s in range(2, 10):
+            bus.record("dither", "fc0", [0.1, 4.0, 0.1])
+            assert suite.tick(s) == []  # same condition, inside the window
+        bus.record("dither", "fc0", [0.1, 4.0, 0.1])
+        assert len(suite.tick(11)) == 1  # window elapsed: re-emit
+        assert bus.event_count() == 2
+
+    def test_suite_escalates_critical(self, bus):
+        suite = MonitorSuite([LossMonitor(bus=bus)], escalate=True, bus=bus)
+        bus.record("train", "train", [3.0, float("inf")])
+        with pytest.raises(MonitorAlert):
+            suite.tick(3)
+
+    def test_default_monitors_setpoint_arms_sparsity(self, bus):
+        kinds = {m.kind for m in default_monitors(bus=bus)}
+        assert "sparsity_collapse" not in kinds
+        kinds = {m.kind for m in default_monitors(sparsity_setpoint=0.9,
+                                                  bus=bus)}
+        assert "sparsity_collapse" in kinds
+
+
+# ---------------------------------------------------------------------------
+# report + RunObs
+# ---------------------------------------------------------------------------
+
+class TestReport:
+    def test_render_from_run_dir_alone(self, bus, tmp_path):
+        from repro.obs.report import render
+
+        rd = str(tmp_path / "run")
+        rl = RunLog(rd, bus=bus, context={"arch": "toy"})
+        for i in range(4):
+            bus.record("dither", "fc0", [0.9, 4.0, 0.25])
+            bus.record("dither", "lm_head", [0.99, 5.0, 0.5])
+            bus.record("comm", "step", [250.0, 1000.0])
+            bus.record("memory", "fc0", [100.0, 120.0, 400.0])
+            bus.record("train", "train", [float(i), 3.0 - 0.1 * i])
+        tr = Tracer(bus)
+        with tr.span("dispatch"):
+            pass
+        rl.close()
+        set_bus(MetricsBus())  # prove the report needs no live bus
+        text = render(rd)
+        assert "fc0" in text and "lm_head" in text
+        assert "ratio 0.2500" in text
+        assert "dispatch" in text
+        assert "arch: toy" in text
+
+    def test_report_cli(self, bus, tmp_path):
+        from repro.obs import report
+
+        rd = str(tmp_path / "run")
+        rl = RunLog(rd, bus=bus)
+        bus.record("train", "train", [1.0, 2.0])
+        rl.close()
+        assert report.main([rd]) == 0
+
+    def test_run_obs_lifecycle(self, bus, tmp_path):
+        rd = str(tmp_path / "run")
+        obs = run_obs(rd, context={"t": 1}, flush_every=2, bus=bus)
+        obs.set_step(0)
+        with obs.span("dispatch"):
+            pass
+        obs.on_step(1, {"loss": 1.5, "comm_wire_bytes": 10.0,
+                        "comm_dense_bytes": 40.0})
+        obs.on_step(2, {"loss": float("nan")})
+        obs.finish()
+        _, streams = read_run(rd)
+        assert len(streams["train"]) == 2
+        assert streams["train"][1]["loss"] is None
+        assert len(streams["comm"]) == 1
+        # the NaN loss tripped the default LossMonitor
+        assert any(e["kind"] == "loss_nonfinite" for e in streams["monitor"])
+        assert any(r["tag"] == "monitor" for r in streams["phase"])
+
+
+# ---------------------------------------------------------------------------
+# structured JSON logging
+# ---------------------------------------------------------------------------
+
+class TestJsonLogging:
+    def test_json_mode_carries_context(self, monkeypatch):
+        from repro.utils.logging import (JsonFormatter, get_logger,
+                                         set_log_context)
+
+        monkeypatch.setenv("REPRO_LOG_FORMAT", "json")
+        log = get_logger("obs.test_json_mode")  # fresh name -> new handler
+        assert isinstance(log.handlers[0].formatter, JsonFormatter)
+        set_log_context(run_id="r123", step=7)
+        try:
+            rec = log.makeRecord("obs.test_json_mode", logging.INFO, "f", 1,
+                                 "hello %s", ("world",), None)
+            obj = json.loads(log.handlers[0].formatter.format(rec))
+        finally:
+            set_log_context(run_id=None, step=None)
+        assert obj["msg"] == "hello world"
+        assert obj["level"] == "INFO"
+        assert obj["run_id"] == "r123" and obj["step"] == 7
+
+    def test_default_mode_unchanged(self, monkeypatch):
+        from repro.utils.logging import JsonFormatter, get_logger
+
+        monkeypatch.delenv("REPRO_LOG_FORMAT", raising=False)
+        log = get_logger("obs.test_default_mode")
+        assert not isinstance(log.handlers[0].formatter, JsonFormatter)
