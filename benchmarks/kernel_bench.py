@@ -21,7 +21,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.bench import BenchResult, Gate
+from repro.comm.wireformat import tile_mask_from_bitmap
 from repro.core.rowdither import row_dither_compact
+from repro.kernels.bsp_matmul.bsp_matmul import bsp_matmul, bsp_matmul_int8
+from repro.kernels.bsp_matmul.ref import (bsp_matmul_blocked_ref,
+                                          bsp_matmul_int8_ref)
 from repro.kernels.ops import dithered_backward_matmuls, nsd_quantize_kernel
 from repro.kernels.pack.pack import bitmap_pack_blocked, bitmap_unpack_blocked
 
@@ -68,6 +72,93 @@ def _bench_pack(k8: jax.Array) -> List[BenchResult]:
     return out
 
 
+def _density_operands(key, M, K, N, density, block=128):
+    """Deterministic operands with EXACTLY round(density * n_tiles) occupied
+    tiles, evenly spread over the tile grid; the consumed mask is derived
+    from the packed wire bitmap (never a dense recompute), and the bench
+    asserts it matches the intended tile layout."""
+    import numpy as np
+
+    mt, kt = M // block, K // block
+    n_tiles = mt * kt
+    n_occ = int(round(density * n_tiles))
+    intended = np.zeros((mt, kt), np.int32)
+    if n_occ:
+        idx = np.round(np.linspace(0, n_tiles - 1, n_occ)).astype(np.int64)
+        intended.reshape(-1)[np.unique(idx)] = 1
+    r = jax.random.randint(key, (M, K), -127, 128, jnp.int32)
+    # guarantee every occupied tile is non-zero everywhere (no accidental
+    # zeros flipping bitmap bits): map to [1, 127] with the sign of r
+    nz = jnp.where(r >= 0, r % 127 + 1, -((-r) % 127 + 1)).astype(jnp.int8)
+    elem = jnp.repeat(jnp.repeat(jnp.asarray(intended) != 0, block, 0),
+                      block, 1)
+    k_q = jnp.where(elem, nz, jnp.int8(0))
+    bitmap, _ = bitmap_pack_blocked(k_q, bm=block, bn=block, interpret=True)
+    mask = tile_mask_from_bitmap(bitmap, block, block)
+    assert (jnp.asarray(intended) == mask).all(), "bitmap mask != intended"
+    b = (jax.random.normal(jax.random.fold_in(key, 9), (K, N), jnp.float32)
+         * 0.1)
+    b_q = jax.random.randint(jax.random.fold_in(key, 10), (K, N), -127, 128,
+                             jnp.int32).astype(jnp.int8)
+    return k_q, mask, b, b_q
+
+
+def _bench_density_curve(quick: bool) -> List[BenchResult]:
+    """Speedup-vs-density curve for the tile-skipping matmul kernels.
+
+    Per density: interpret-mode bit-exactness invariants (zero-banded
+    gates — int8 kernel vs the int8 oracle, f32 kernel vs the
+    accumulation-order-exact blocked oracle) + the tile-skip ratio the
+    mask actually delivers. Timing (interpret-mode, CPU) is recorded for
+    the trajectory, never gated; the crossover row derives the largest
+    density at which the masked kernel still beats the dense dequantized
+    matmul in wall-clock.
+    """
+    M = K = N = 512 if quick else 1024
+    key = jax.random.PRNGKey(42)
+    delta = jnp.float32(0.01)
+    scale = jnp.float32(0.01 * 0.02)
+    out = []
+    dense_us = None
+    curve = []
+    for density in (0.0, 0.125, 0.25, 0.5, 0.75, 1.0):
+        k_q, mask, b, b_q = _density_operands(key, M, K, N, density)
+        o_i8 = bsp_matmul_int8(k_q, b_q, scale, mask, interpret=True)
+        r_i8 = bsp_matmul_int8_ref(k_q, b_q, scale, mask)
+        o_f32 = bsp_matmul(k_q, delta, b, mask, interpret=True)
+        r_f32 = bsp_matmul_blocked_ref(k_q, delta, b, mask)
+        err_i8 = float(jnp.max(jnp.abs(o_i8 - r_i8)))
+        err_f32 = float(jnp.max(jnp.abs(o_f32 - r_f32)))
+        tile_skip = 1.0 - float(jnp.mean(mask != 0))
+        us = _time(lambda kq=k_q, bq=b_q, m=mask: bsp_matmul_int8(
+            kq, bq, scale, m, interpret=True))
+        if dense_us is None:
+            dense_fn = jax.jit(lambda kq, bb: (kq.astype(jnp.float32)
+                                               * delta) @ bb)
+            dense_us = _time(lambda kq=k_q, bb=b: dense_fn(kq, bb))
+        curve.append((density, us))
+        out.append(BenchResult(
+            name=f"kern/bsp_density_{density:g}", value=us,
+            unit="us(interpret)",
+            derived={"tile_skip": tile_skip,
+                     "int8_max_abs_err": err_i8,
+                     "f32_max_abs_err": err_f32,
+                     "speedup_vs_dense": dense_us / max(us, 1e-9)},
+            gates={"tile_skip": Gate(abs=0.0, direction="both"),
+                   "int8_max_abs_err": Gate(abs=0.0, direction="both"),
+                   "f32_max_abs_err": Gate(abs=0.0, direction="both")},
+            context={"shape": f"({M},{K},{N})"}))
+    under = [d for d, us in curve if us <= dense_us]
+    crossover = max(under) if under else 0.0
+    out.append(BenchResult(
+        name="kern/bsp_crossover", value=dense_us, unit="us(dense-ref)",
+        derived={"crossover_density": crossover},
+        context={"note": "largest density where masked kernel beats the "
+                         "dense dequantized matmul (interpret mode; "
+                         "timing-derived, not gated)"}))
+    return out
+
+
 def bench(quick: bool = True) -> List[BenchResult]:
     key = jax.random.PRNGKey(0)
     out = []
@@ -106,4 +197,7 @@ def bench(quick: bool = True) -> List[BenchResult]:
     # wire-format bitmap pack/unpack on the s=8 operating point
     k8 = nsd_quantize_kernel(g, key, 8.0, bm=128, bn=128)[0]
     out.extend(_bench_pack(k8))
+
+    # speedup-vs-density curve with bit-exact zero-band invariants
+    out.extend(_bench_density_curve(quick))
     return out

@@ -18,6 +18,7 @@ Three claims gated on every PR:
 """
 from __future__ import annotations
 
+import gc
 import os
 import shutil
 import time
@@ -46,11 +47,29 @@ RUN_DIR = os.path.join(RESULTS_DIR, "obs_run")
 def _bus_overhead(quick: bool) -> BenchResult:
     steps = 30 if quick else 100
     model = pm.lenet300100()
-    off = train_classifier(
-        model, DitherPolicy(variant="paper", s=2.0), steps=steps)
-    on = train_classifier(
-        model, DitherPolicy(variant="paper", s=2.0, collect_stats=True,
-                            stats_tag="obsB/"), steps=steps)
+    pol_off = DitherPolicy(variant="paper", s=2.0)
+    pol_on = DitherPolicy(variant="paper", s=2.0, collect_stats=True,
+                          stats_tag="obsB/")
+
+    # The telemetry-off step has no host-side per-step work, so its
+    # wall-clock drops ~35% once the process (thread pools, allocator,
+    # jit cache) is warm, while the on-step's io_callback landings are
+    # sensitive to heap/GC state left by whatever ran before in the same
+    # process. A single off/on sample therefore measures process history
+    # as much as the emission path. Warm both conditions first, then take
+    # the min over interleaved repeats — both conditions see the same
+    # process state and one-off host spikes are filtered out.
+    gc.collect()
+    train_classifier(model, pol_off, steps=steps)
+    train_classifier(model, pol_on, steps=steps)
+    off_us, on_us = [], []
+    for _ in range(3):
+        off_us.append(train_classifier(model, pol_off,
+                                       steps=steps)["us_per_step"])
+        on = train_classifier(model, pol_on, steps=steps)
+        on_us.append(on["us_per_step"])
+    off = {"us_per_step": min(off_us)}
+    on["us_per_step"] = min(on_us)
     rows = sum(statslib.row_count(t) for t in statslib.tags()
                if t.startswith("obsB/"))
     ratio = on["us_per_step"] / max(off["us_per_step"], 1e-9)

@@ -53,6 +53,10 @@ from repro.comm.wireformat import (
     pack_bitmap,
     pack_indices,
     pack_nsd,
+    popcount_u8,
+    tile_mask_from_bitmap,
+    tile_mask_from_packed,
+    tile_nnz_from_bitmap,
     unpack_bitmap,
     unpack_nsd,
     wire_bytes_dense,
@@ -69,6 +73,8 @@ __all__ = [
     "RingConfig", "RingTelemetry", "allreduce_compressed",
     "make_ring_allreduce", "ring_allreduce_nsd",
     "DEFAULT_CHUNK", "PackedNSD", "pack_bitmap", "pack_indices", "pack_nsd",
-    "unpack_bitmap", "unpack_nsd", "wire_bytes_dense",
+    "popcount_u8", "tile_mask_from_bitmap", "tile_mask_from_packed",
+    "tile_nnz_from_bitmap", "unpack_bitmap", "unpack_nsd",
+    "wire_bytes_dense",
     "telemetry",
 ]

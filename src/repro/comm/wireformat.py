@@ -101,6 +101,80 @@ def unpack_bitmap(bitmap: jax.Array) -> jax.Array:
     return bits.reshape(bitmap.shape[:-1] + (bitmap.shape[-1] * 8,)) != 0
 
 
+def popcount_u8(x: jax.Array) -> jax.Array:
+    """Per-byte population count (SWAR, int32 math) of a uint8 array."""
+    v = x.astype(jnp.int32)
+    v = v - ((v >> 1) & 0x55)
+    v = (v & 0x33) + ((v >> 2) & 0x33)
+    return (v + (v >> 4)) & 0x0F
+
+
+def _pad2d(x: jax.Array, m: int, n: int) -> jax.Array:
+    M, N = x.shape
+    pm, pn = (-M) % m, (-N) % n
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+def tile_nnz_from_bitmap(bitmap: jax.Array, bm: int = 128, bk: int = 128
+                         ) -> jax.Array:
+    """Per-tile non-zero counts straight from a packed 2-D occupancy bitmap.
+
+    ``bitmap``: (M, K//8) uint8 as produced by
+    ``repro.kernels.pack.bitmap_pack_blocked`` (byte b of row i covers
+    elements 8b..8b+7). Returns int32 (ceil(M/bm), ceil(K/8/(bk/8))) tile
+    counts via a popcount reduction — the bitmap is never expanded to
+    element bits, so this is the 1/8th-bandwidth path the backward matmul
+    uses to derive its tile mask from the *wire* representation.
+    """
+    assert bk % 8 == 0, bk
+    bkb = bk // 8
+    pc = _pad2d(popcount_u8(bitmap), bm, bkb)
+    M, KB = pc.shape
+    return pc.reshape(M // bm, bm, KB // bkb, bkb).sum((1, 3))
+
+
+def tile_mask_from_bitmap(bitmap: jax.Array, bm: int = 128, bk: int = 128
+                          ) -> jax.Array:
+    """(M//bm, K//bk) int32 tile-occupancy mask from a packed 2-D bitmap.
+
+    Any-bit-set reduction (a byte is occupied iff non-zero); shapes that
+    are not tile multiples are zero-padded, so padded tiles read 0 =
+    skip. Equals ``dense tile mask of the int8 k tensor`` bit-exactly
+    (pinned by tests/test_kernels.py).
+    """
+    assert bk % 8 == 0, bk
+    bkb = bk // 8
+    nz = _pad2d((bitmap != 0).astype(jnp.int32), bm, bkb)
+    M, KB = nz.shape
+    tiles = nz.reshape(M // bm, bm, KB // bkb, bkb).sum((1, 3))
+    return (tiles > 0).astype(jnp.int32)
+
+
+def tile_mask_from_packed(p: PackedNSD, bm: int = 128, bk: int = 128
+                          ) -> jax.Array:
+    """Tile mask for a 2-D tensor directly from its wire-format bitmap.
+
+    Routes through a (M, K//8) byte view when rows are byte-aligned
+    (K % 8 == 0) — no bit expansion; otherwise falls back to unpacking
+    the bitmap to element bits (bytes straddle rows). Either way the
+    result equals the dense-computed tile mask for any shape, including
+    all-zero, non-chunk-multiple and single-tile cases (property-tested).
+    """
+    assert len(p.shape) == 2, p.shape
+    M, K = (int(d) for d in p.shape)
+    flat = p.bitmap.reshape(-1)
+    if K % 8 == 0:
+        b2d = flat[: M * K // 8].reshape(M, K // 8)
+        return tile_mask_from_bitmap(b2d, bm, bk)
+    bits = unpack_bitmap(flat)[: M * K].reshape(M, K)
+    occ = _pad2d(bits.astype(jnp.int32), bm, bk)
+    Mp, Kp = occ.shape
+    tiles = occ.reshape(Mp // bm, bm, Kp // bk, bk).sum((1, 3))
+    return (tiles > 0).astype(jnp.int32)
+
+
 def _compact(k_flat: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Move the non-zeros of an int8 vector to the front, in order."""
     n = k_flat.shape[0]

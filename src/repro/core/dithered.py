@@ -209,14 +209,161 @@ def quantize_cotangent(
 
 
 # --------------------------------------------------------------------------
+# VARIANT_KERNEL backward implementations (fused NSD + tile-skip matmuls)
+# --------------------------------------------------------------------------
+
+def _kernelops():
+    # lazy: repro.kernels.ops imports repro.comm (wireformat) which imports
+    # repro.core — a module-level import here would cycle
+    from repro.kernels import ops
+
+    return ops
+
+
+def _emit_kernel_stats(q, g2d: jax.Array, spec: StaticSpec, name: str):
+    """Telemetry from the SAME quantized tensor the kernels consume.
+
+    ``q.k`` is the fused kernel's output (zero-padded); slicing back to the
+    live region makes the stats bit-identical to the paper path's
+    ``nsd.quant_stats(nsd_indices(g2d, key, delta))`` for the same key —
+    pinned in tests/test_kernels.py so the applied gradient and the
+    telemetry can never diverge again.
+    """
+    if spec.collect_stats:
+        k_live = q.k[: g2d.shape[0], : g2d.shape[1]].astype(jnp.int32)
+        statslib.emit(spec.stats_tag + name, nsd.quant_stats(k_live, q.delta))
+
+
+def _dense_kernel_bwd(x, w, key, knobs, spec, name, g):
+    """Tile-skipping backward for y = x @ w (any shape; padded to tiles)."""
+    ops = _kernelops()
+    kdim = x.shape[-1]
+    g2d = g.reshape(-1, g.shape[-1])
+    q = ops.quantize_and_mask(g2d, key, knobs[KNOB_S])
+    _emit_kernel_stats(q, g2d, spec, name)
+    dx2d, dw = ops.bsp_backward_from_quantized(
+        q, x.reshape(-1, kdim), w, int8_operands=True)
+    return dx2d.reshape(x.shape).astype(x.dtype), dw.astype(w.dtype)
+
+
+@functools.lru_cache(maxsize=None)
+def _conv_kernel_bwd(strides, padding, lhs_dilation, rhs_dilation,
+                     feature_group_count):
+    """Kernel-variant backward for conv2d via im2col.
+
+    conv(x, w) == patches(x) @ w_mat with the patch feature axis ordered
+    (Ci, kh, kw) — so both backward products are exactly the dense layer's
+    tile-skipping matmuls on the im2col matrix, and dx folds back through
+    the exact vjp of the (linear) patch extraction. Grouped or
+    lhs-dilated convs fall back to the generic quantized path (counted in
+    ``repro.kernels.ops.KERNEL_FALLBACKS``, never silent).
+    """
+
+    def kernel_bwd(x, w, key, knobs, spec, name, g):
+        if feature_group_count != 1 or tuple(lhs_dilation) != (1, 1):
+            _kernelops().note_fallback("conv:groups-or-lhs-dilation", name)
+            return None
+        ops = _kernelops()
+        kh, kw, ci, co = w.shape
+        kk = kh * kw * ci
+
+        def patches_fn(xx):
+            return jax.lax.conv_general_dilated_patches(
+                xx, (kh, kw), strides, padding,
+                rhs_dilation=rhs_dilation,
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+        cols, unpatch = jax.vjp(patches_fn, x)
+        g2d = g.reshape(-1, co)
+        q = ops.quantize_and_mask(g2d, key, knobs[KNOB_S])
+        _emit_kernel_stats(q, g2d, spec, name)
+        w_mat = w.transpose(2, 0, 1, 3).reshape(kk, co)
+        dcols2d, dw_mat = ops.bsp_backward_from_quantized(
+            q, cols.reshape(-1, kk), w_mat, int8_operands=True)
+        dx = unpatch(dcols2d.reshape(cols.shape))[0]
+        dw = dw_mat.reshape(ci, kh, kw, co).transpose(1, 2, 0, 3)
+        return dx.astype(x.dtype), dw.astype(w.dtype)
+
+    return kernel_bwd
+
+
+def _einsum_form(spec: str):
+    """Classify a two-operand einsum for the kernel backward.
+
+    Returns "dense2d" for ``...k,kn->...n`` (shared 2-D weight: flatten and
+    run the dense pipeline), "batched" for ``B...k,Bkn->B...n`` (leading
+    shared batch axis, per-slice 2-D matmul — the MoE expert-FFN shape), or
+    None (unsupported: counted fallback to the generic quantized path).
+    """
+    if "->" not in spec or "." in spec:
+        return None
+    ins, out = spec.split("->")
+    if "," not in ins:
+        return None
+    a, b = ins.split(",")
+    if len(set(a)) != len(a) or len(set(b)) != len(b):
+        return None
+    if len(b) == 2 and len(a) >= 2 and a[-1] == b[0] \
+            and out == a[:-1] + b[1] and b[1] not in a:
+        return "dense2d"
+    if len(b) == 3 and len(a) >= 3 and a[0] == b[0] \
+            and a[-1] == b[1] and out == a[0] + a[1:-1] + b[2] \
+            and b[2] not in a:
+        return "batched"
+    return None
+
+
+@functools.lru_cache(maxsize=None)
+def _einsum_kernel_bwd(spec_str: str):
+    form = _einsum_form(spec_str)
+
+    def kernel_bwd(x, w, key, knobs, spec, name, g):
+        ops = _kernelops()
+        if form is None:
+            ops.note_fallback("einsum:unsupported-form:" + spec_str, name)
+            return None
+        if form == "dense2d":
+            return _dense_kernel_bwd(x, w, key, knobs, spec, name, g)
+        # batched: per-slice matmuls share ONE per-tensor quantization
+        # (delta over the whole cotangent, noise over its full shape) so
+        # the quantized values are bit-identical to the paper path; each
+        # slice derives its own tile mask from its packed bitmap.
+        n_b = x.shape[0]
+        fdim = g.shape[-1]
+        g2d = g.reshape(-1, fdim)
+        q_full = ops.quantize_and_mask(g2d, key, knobs[KNOB_S])
+        _emit_kernel_stats(q_full, g2d, spec, name)
+        k3 = q_full.k[: g2d.shape[0], :fdim].reshape(n_b, -1, fdim)
+        x3 = x.reshape(n_b, -1, x.shape[-1])
+        dxs, dws = [], []
+        for e in range(n_b):
+            q_e = ops.quantized_from_indices(k3[e], q_full.delta)
+            dx_e, dw_e = ops.bsp_backward_from_quantized(
+                q_e, x3[e], w[e], int8_operands=True)
+            dxs.append(dx_e)
+            dws.append(dw_e)
+        dx = jnp.stack(dxs).reshape(x.shape).astype(x.dtype)
+        dw = jnp.stack(dws).astype(w.dtype)
+        return dx, dw
+
+    return kernel_bwd
+
+
+# --------------------------------------------------------------------------
 # generic dithered op: works for any two-operand primal (conv, einsum, ...)
 # --------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
-def _make_dithered_op(primal_fn: Callable) -> Callable:
+def _make_dithered_op(primal_fn: Callable,
+                      kernel_bwd: Optional[Callable] = None) -> Callable:
     """Wrap ``primal_fn(x, w) -> y`` so its bwd quantizes the cotangent once
     and pushes it through the *exact* vjp of the primal — this is precisely
-    the paper's recipe and is correct for any linear primal."""
+    the paper's recipe and is correct for any linear primal.
+
+    ``kernel_bwd(x, w, key, knobs, spec, name, g) -> (dx, dw) | None``
+    supplies the VARIANT_KERNEL tile-skipping backward; returning None
+    (a counted structural fallback) drops to the generic quantized path.
+    """
 
     @functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
     def op(x, w, key, knobs, spec, name):
@@ -229,6 +376,11 @@ def _make_dithered_op(primal_fn: Callable) -> Callable:
     def bwd(spec, name, res, g):
         enc, w, key, knobs = res
         x = decode_residual(enc, spec)
+        if spec.variant == VARIANT_KERNEL and kernel_bwd is not None:
+            out = kernel_bwd(x, w, key, knobs, spec, name, g)
+            if out is not None:
+                dx, dw = out
+                return dx, dw, None, None
         gq = quantize_cotangent(g, key, knobs, spec, name)
         _, vjp = jax.vjp(primal_fn, x, w)
         dx, dw = vjp(gq)
@@ -259,11 +411,6 @@ def _dd_fwd(x, w, key, knobs, spec, name):
     return _plain_matmul(x, w), (enc, w, key, knobs)
 
 
-def _kernel_shapes_ok(g2d, x2d, w, block=128):
-    return (g2d.shape[0] % block == 0 and g2d.shape[1] % block == 0
-            and x2d.shape[1] % block == 0)
-
-
 def _dd_bwd(spec, name, res, g):
     enc, w, key, knobs = res
     x = decode_residual(enc, spec)
@@ -272,19 +419,13 @@ def _dd_bwd(spec, name, res, g):
     x2d = x.reshape(-1, kdim)
     g2d = g.reshape(-1, g.shape[-1])
 
-    if spec.variant == VARIANT_KERNEL and _kernel_shapes_ok(g2d, x2d, w):
+    if spec.variant == VARIANT_KERNEL:
         # Pallas path: fused NSD quantize + tile-skipping int8 matmuls
-        # (interpret mode on CPU; compiled VMEM kernels on TPU). Falls back
-        # to the jnp paper path for non-128-aligned layers.
-        from repro.kernels.ops import dithered_backward_matmuls
-
-        if spec.collect_stats:
-            delta = nsd.compute_delta(g2d, s)
-            k = nsd.nsd_indices(g2d, key, delta)
-            statslib.emit(spec.stats_tag + name, nsd.quant_stats(k, delta))
-        dx2d, dw = dithered_backward_matmuls(
-            g2d, x2d, w, key, s, int8_operands=True)
-        return dx2d.reshape(x.shape), dw, None, None
+        # (interpret mode on CPU; compiled VMEM kernels on TPU). Any layer
+        # shape: operands are zero-padded to tile multiples, the padding
+        # tiles quantize to all-zero and are masked off.
+        dx, dw = _dense_kernel_bwd(x, w, key, knobs, spec, name, g)
+        return dx, dw, None, None
 
     if spec.variant == VARIANT_INT8:
         # NSD indices ARE an int8 tensor; x and w get absmax int8. Both
@@ -390,10 +531,14 @@ def conv2d(
         tuple(strides), padding if isinstance(padding, str) else tuple(padding),
         tuple(lhs_dilation), tuple(rhs_dilation), feature_group_count,
     )
+    kernel_bwd = _conv_kernel_bwd(
+        tuple(strides), padding if isinstance(padding, str) else tuple(padding),
+        tuple(lhs_dilation), tuple(rhs_dilation), feature_group_count,
+    )
     r = ctx.resolve(name) if ctx is not None else None
     if r is not None:
         _record_footprint(ctx, r, name, x)
-        y = _apply_op(_make_dithered_op(primal), x, w, r, name)
+        y = _apply_op(_make_dithered_op(primal, kernel_bwd), x, w, r, name)
     else:
         y = primal(x, w)
     if b is not None:
@@ -425,5 +570,6 @@ def dithered_einsum(
     r = ctx.resolve(name) if ctx is not None else None
     if r is not None:
         _record_footprint(ctx, r, name, x)
-        return _apply_op(_make_dithered_op(primal), x, w, r, name)
+        return _apply_op(_make_dithered_op(primal, _einsum_kernel_bwd(spec)),
+                         x, w, r, name)
     return primal(x, w)

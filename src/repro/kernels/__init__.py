@@ -1,14 +1,21 @@
 """Pallas TPU kernels for the paper's hot spots (+ pure-jnp oracles).
 
+backend.py   backend-aware interpret default (interpret off-TPU, compiled on)
 nsd_quant/   fused NSD quantize -> (int8 k, tile-occupancy map)
-bsp_matmul/  tile-skipping quantized matmuls (dequant + full-int8 variants)
+bsp_matmul/  tile-skipping quantized matmuls (dequant + full-int8 variants;
+             masked tiles skip MXU issue AND operand DMA via fetch maps)
 pack/        occupancy-bitmap pack/unpack for the comm wire format
-ops.py       jit'd high-level wrappers (full dithered backward of a dense layer)
+ops.py       jit'd high-level wrappers: the full dithered backward pipeline
+             (fused NSD -> wire bitmap -> bitmap-derived tile mask ->
+             tile-skipping backward products) for any layer shape
 """
+from repro.kernels.backend import default_interpret, on_tpu
 from repro.kernels.nsd_quant.nsd_quant import nsd_quantize_blocked
-from repro.kernels.bsp_matmul.bsp_matmul import bsp_matmul, bsp_matmul_int8
+from repro.kernels.bsp_matmul.bsp_matmul import (bsp_matmul, bsp_matmul_int8,
+                                                 fetch_map)
 from repro.kernels.pack.pack import bitmap_pack_blocked, bitmap_unpack_blocked
 from repro.kernels import ops
 
-__all__ = ["nsd_quantize_blocked", "bsp_matmul", "bsp_matmul_int8",
+__all__ = ["default_interpret", "on_tpu", "nsd_quantize_blocked",
+           "bsp_matmul", "bsp_matmul_int8", "fetch_map",
            "bitmap_pack_blocked", "bitmap_unpack_blocked", "ops"]

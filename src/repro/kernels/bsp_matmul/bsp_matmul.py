@@ -4,9 +4,17 @@ TPU adaptation of the paper's sparse backward products (DESIGN.md §4):
 element-granular sparsity cannot skip MACs on a 128x128 systolic MXU, so we
 skip at *tile* granularity. The NSD kernel emits a (M/bm, K/bk) tile-
 occupancy map; here, the k-loop body is wrapped in ``pl.when(mask != 0)`` so
-fully-zero tiles of the quantized gradient contribute neither MXU issue
-cycles nor (with the index-map trick below) HBM->VMEM traffic for the B
-operand — the win that unstructured sparsity alone cannot deliver on TPU.
+fully-zero tiles of the quantized gradient contribute no MXU issue cycles.
+
+HBM->VMEM traffic is skipped through the *fetch map*: alongside the mask,
+the wrappers prefetch ``fetch[i, k] = index of the last occupied K-tile at
+or before k in row i`` (clamped to 0 when none). The A/B block index maps
+return ``fetch[i, k]`` instead of ``k``, so every masked grid step re-names
+the block it already holds — Pallas only issues a copy when the block index
+*changes*, which means a masked tile costs neither MXU cycles nor operand
+DMA for A or B. This is the win that unstructured sparsity alone cannot
+deliver on TPU; the worst case is one redundant fetch per row when a row's
+leading tiles are all masked (fetch clamps to 0).
 
 Two variants:
   * ``bsp_matmul``      — A is (int8 k, Delta) NSD output, B stays bf16/f32;
@@ -15,20 +23,26 @@ Two variants:
                           rescale on exit: the paper's "8bit + dithered"
                           column mapped onto the 2x-throughput int8 MXU path.
 
-The mask rides in scalar-prefetch SMEM (PrefetchScalarGridSpec) so it is
-available to the grid index maps *before* tiles are fetched.
+The mask and fetch map ride in scalar-prefetch SMEM
+(PrefetchScalarGridSpec) so they are available to the grid index maps
+*before* tiles are fetched. ``interpret=None`` resolves backend-aware
+(interpret off-TPU, compiled on TPU — ``repro.kernels.backend``).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import default_interpret
 
-def _bsp_kernel_dequant(mask_ref, a_ref, b_ref, delta_ref, o_ref, acc_ref):
+
+def _bsp_kernel_dequant(mask_ref, fetch_ref, a_ref, b_ref, delta_ref, o_ref,
+                        acc_ref):
     i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
 
     @pl.when(k == 0)
@@ -46,7 +60,8 @@ def _bsp_kernel_dequant(mask_ref, a_ref, b_ref, delta_ref, o_ref, acc_ref):
         o_ref[...] = (acc_ref[...] * delta_ref[0, 0]).astype(o_ref.dtype)
 
 
-def _bsp_kernel_int8(mask_ref, a_ref, b_ref, scale_ref, o_ref, acc_ref):
+def _bsp_kernel_int8(mask_ref, fetch_ref, a_ref, b_ref, scale_ref, o_ref,
+                     acc_ref):
     i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
 
     @pl.when(k == 0)
@@ -67,16 +82,30 @@ def _bsp_kernel_int8(mask_ref, a_ref, b_ref, scale_ref, o_ref, acc_ref):
                       * scale_ref[0, 0]).astype(o_ref.dtype)
 
 
+def fetch_map(mask: jax.Array) -> jax.Array:
+    """``fetch[i, k]`` = last occupied K-tile index <= k in row i (else 0).
+
+    When ``mask[i, k] == 0`` the fetch index equals the previous step's, so
+    the block index maps below re-name the resident block and Pallas skips
+    the HBM->VMEM copy entirely.
+    """
+    kt = mask.shape[1]
+    idx = jnp.where(mask != 0, jnp.arange(kt, dtype=jnp.int32)[None, :], -1)
+    return jnp.maximum(jax.lax.cummax(idx, axis=1), 0).astype(jnp.int32)
+
+
 def _grid_spec(M, K, N, bm, bk, bn, acc_dtype):
     return pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(M // bm, N // bn, K // bk),
         in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k, mask: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k, mask: (k, j)),
-            pl.BlockSpec((1, 1), lambda i, j, k, mask: (0, 0)),
+            # masked steps return fetch[i, k] == the previous occupied
+            # index: same block index -> no new operand DMA
+            pl.BlockSpec((bm, bk), lambda i, j, k, mask, fetch: (i, fetch[i, k])),
+            pl.BlockSpec((bk, bn), lambda i, j, k, mask, fetch: (fetch[i, k], j)),
+            pl.BlockSpec((1, 1), lambda i, j, k, mask, fetch: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, mask: (i, j)),
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, mask, fetch: (i, j)),
         scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
     )
 
@@ -87,22 +116,24 @@ def _grid_spec(M, K, N, bm, bk, bn, acc_dtype):
 def bsp_matmul(k_q: jax.Array, delta: jax.Array, b: jax.Array,
                mask: jax.Array, *, bm: int = 128, bk: int = 128,
                bn: int = 128, out_dtype=jnp.float32,
-               interpret: bool = True) -> jax.Array:
-    """(dequant(k_q) @ b) with tile skipping.
+               interpret: Optional[bool] = None) -> jax.Array:
+    """(dequant(k_q) @ b) with tile skipping (compute AND operand fetch).
 
     k_q: (M, K) int8 NSD indices; delta: scalar; b: (K, N) f32/bf16;
     mask: (M//bm, K//bk) int32 tile-occupancy (0 = all-zero tile).
     """
+    interpret = default_interpret(interpret)
     M, K = k_q.shape
     K2, N = b.shape
     assert K == K2 and M % bm == 0 and K % bk == 0 and N % bn == 0
     delta2d = jnp.reshape(delta.astype(jnp.float32), (1, 1))
+    mask = mask.astype(jnp.int32)
     return pl.pallas_call(
         _bsp_kernel_dequant,
         grid_spec=_grid_spec(M, K, N, bm, bk, bn, jnp.float32),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         interpret=interpret,
-    )(mask.astype(jnp.int32), k_q, b, delta2d)
+    )(mask, fetch_map(mask), k_q, b, delta2d)
 
 
 @functools.partial(jax.jit,
@@ -111,18 +142,20 @@ def bsp_matmul(k_q: jax.Array, delta: jax.Array, b: jax.Array,
 def bsp_matmul_int8(k_q: jax.Array, b_q: jax.Array, scale: jax.Array,
                     mask: jax.Array, *, bm: int = 128, bk: int = 128,
                     bn: int = 128, out_dtype=jnp.float32,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: Optional[bool] = None) -> jax.Array:
     """Full int8 MXU path: (k_q @ b_q) * scale with tile skipping.
 
     scale = delta_A * scale_B (per-tensor product of the two quant scales).
     """
+    interpret = default_interpret(interpret)
     M, K = k_q.shape
     K2, N = b_q.shape
     assert K == K2 and M % bm == 0 and K % bk == 0 and N % bn == 0
     scale2d = jnp.reshape(scale.astype(jnp.float32), (1, 1))
+    mask = mask.astype(jnp.int32)
     return pl.pallas_call(
         _bsp_kernel_int8,
         grid_spec=_grid_spec(M, K, N, bm, bk, bn, jnp.int32),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         interpret=interpret,
-    )(mask.astype(jnp.int32), k_q, b_q, scale2d)
+    )(mask, fetch_map(mask), k_q, b_q, scale2d)

@@ -31,3 +31,38 @@ def bsp_matmul_int8_ref(k_q: jax.Array, b_q: jax.Array, scale: jax.Array,
         preferred_element_type=jnp.int32)
     return (acc.astype(jnp.float32) * scale.astype(jnp.float32)).astype(
         out_dtype)
+
+
+def bsp_matmul_blocked_ref(k_q: jax.Array, delta: jax.Array, b: jax.Array,
+                           mask: jax.Array, *, bm: int = 128, bk: int = 128,
+                           bn: int = 128, out_dtype=jnp.float32) -> jax.Array:
+    """f32 oracle that mirrors the kernel's *accumulation order* exactly.
+
+    ``bsp_matmul_ref`` is the semantics oracle (one big masked matmul);
+    floating-point addition is not associative, so it can differ from the
+    kernel in the last ulp. This ref sums per-K-tile partial dots in the
+    same order as the kernel's k-loop and multiplies delta once on exit,
+    so interpret-mode ``bsp_matmul`` output is BIT-EXACT against it — the
+    zero-band invariant the density-curve bench gates on. (The int8 kernel
+    needs no blocked ref: int32 accumulation is exact in any order.)
+    """
+    M, K = k_q.shape
+    _, N = b.shape
+    af = k_q.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    d = delta.astype(jnp.float32)
+    rows = []
+    for it in range(M // bm):
+        row = []
+        for jt in range(N // bn):
+            acc = jnp.zeros((bm, bn), jnp.float32)
+            for kt in range(K // bk):
+                part = jnp.dot(af[it * bm:(it + 1) * bm,
+                                  kt * bk:(kt + 1) * bk],
+                               bf[kt * bk:(kt + 1) * bk,
+                                  jt * bn:(jt + 1) * bn],
+                               preferred_element_type=jnp.float32)
+                acc = acc + jnp.where(mask[it, kt] != 0, part, 0.0)
+            row.append((acc * d).astype(out_dtype))
+        rows.append(jnp.concatenate(row, axis=1))
+    return jnp.concatenate(rows, axis=0)

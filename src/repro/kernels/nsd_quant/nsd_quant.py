@@ -15,10 +15,13 @@ bm in {8,16,32,...}, bn multiple of 128.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.backend import default_interpret
 
 
 def _nsd_kernel(x_ref, noise_ref, delta_ref, k_ref, nnz_ref):
@@ -36,11 +39,12 @@ def _nsd_kernel(x_ref, noise_ref, delta_ref, k_ref, nnz_ref):
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
 def nsd_quantize_blocked(x: jax.Array, noise: jax.Array, delta: jax.Array,
                          *, bm: int = 128, bn: int = 512,
-                         interpret: bool = True):
+                         interpret: Optional[bool] = None):
     """x, noise: (M, N) with M % bm == 0, N % bn == 0; delta: scalar f32.
 
     Returns (k int8 (M, N), nnz int32 (M//bm, N//bn)).
     """
+    interpret = default_interpret(interpret)
     M, N = x.shape
     assert M % bm == 0 and N % bn == 0, (x.shape, bm, bn)
     grid = (M // bm, N // bn)

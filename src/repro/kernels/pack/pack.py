@@ -39,11 +39,14 @@ multiple of 8 (always true for 128-lane tiles).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.backend import default_interpret
 
 
 def _pack_kernel(kt_ref, bitmap_ref, nnz_ref):
@@ -73,11 +76,12 @@ def _unpack_kernel(bitmap_ref, mask_ref):
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
 def bitmap_pack_blocked(k: jax.Array, *, bm: int = 128, bn: int = 128,
-                        interpret: bool = True):
+                        interpret: Optional[bool] = None):
     """k: (M, N) int8 with M % bm == 0, N % bn == 0, bn % 8 == 0.
 
     Returns (bitmap uint8 (M, N//8), nnz int32 (M//bm, N//bn)).
     """
+    interpret = default_interpret(interpret)
     M, N = k.shape
     assert M % bm == 0 and N % bn == 0 and bn % 8 == 0, (k.shape, bm, bn)
     grid = (N // bn, M // bm)
@@ -100,8 +104,9 @@ def bitmap_pack_blocked(k: jax.Array, *, bm: int = 128, bn: int = 128,
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
 def bitmap_unpack_blocked(bitmap: jax.Array, *, bm: int = 128, bn: int = 128,
-                          interpret: bool = True) -> jax.Array:
+                          interpret: Optional[bool] = None) -> jax.Array:
     """bitmap: (M, N//8) uint8 -> int8 0/1 occupancy mask (M, N)."""
+    interpret = default_interpret(interpret)
     M, NB = bitmap.shape
     N = NB * 8
     assert M % bm == 0 and N % bn == 0 and bn % 8 == 0, (bitmap.shape, bm, bn)
