@@ -24,15 +24,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.bench import BenchResult, Gate
-from repro.comm import (CommPolicy, HierConfig, RingConfig,
-                        hier_allreduce_nsd, ring_allreduce_nsd, tree_rounds)
+from repro.comm import (ButterflyConfig, CommPolicy, HierConfig, RingConfig,
+                        butterfly_allreduce_nsd, hier_allreduce_nsd,
+                        reducer as make_reducer, ring_allreduce_nsd,
+                        tree_rounds)
 from repro.configs import paper_models as pm
 from repro.core import DitherPolicy
-from repro.core import stats as statslib
+from repro.obs import metrics as statslib
 from repro.data import ClassifConfig, classification_batch
 from repro.distributed import SSGDConfig, make_ssgd_step, shard_batch
-from repro.launch.costmodel import (compression_speedup, price_reduce,
-                                    price_wire_bytes)
+from repro.launch.costmodel import (compression_speedup, price_overlap,
+                                    price_reduce, price_wire_bytes)
+from repro.utils.pytree import flatten_with_names
 from repro.models.cnn import accuracy
 from repro.optim import OptConfig, init_opt_state
 
@@ -74,7 +77,7 @@ def run(node_counts=(1, 2, 4, 8), steps: int = 40, batch: int = 32,
         t0 = time.perf_counter()
         for i in range(steps):
             b = classification_batch(data_cfg, i, batch=batch)
-            params, state, _ = step_fn(params, state, shard_batch(b, n), key)
+            params, state, _, _ = step_fn(params, state, shard_batch(b, n), key)
         us = (time.perf_counter() - t0) / steps * 1e6
         test = classification_batch(data_cfg, 10**6, batch=512)
         row = {
@@ -127,6 +130,8 @@ def compare_topologies(n_nodes: int = 8, pods: int = 2,
     mean_r, tele_r = ring_allreduce_nsd(grads, key, RingConfig(s=s))
     mean_h, tele_h = hier_allreduce_nsd(grads, key,
                                         HierConfig(pods=pods, s=s))
+    mean_b, tele_b = butterfly_allreduce_nsd(grads, key,
+                                             ButterflyConfig(pods=pods, s=s))
     rows = [
         row("ring", mean_r, tele_r,
             price_reduce(tele_r, nodes=n_nodes, pods=pods),
@@ -136,10 +141,136 @@ def compare_topologies(n_nodes: int = 8, pods: int = 2,
             {"pods": pods, "per_pod": n_nodes // pods,
              "wire_ici_bytes": float(tele_h.wire_ici_bytes),
              "wire_dcn_bytes": float(tele_h.wire_dcn_bytes),
+             "peak_dcn_bytes": float(tele_h.peak_dcn_bytes),
              "tree_rounds": tree_rounds(pods)}),
+        row("butterfly", mean_b, tele_b,
+            price_reduce(tele_b, nodes=n_nodes, pods=pods),
+            {"pods": pods, "per_pod": n_nodes // pods,
+             "wire_ici_bytes": float(tele_b.wire_ici_bytes),
+             "wire_dcn_bytes": float(tele_b.wire_dcn_bytes),
+             "peak_dcn_bytes": float(tele_b.peak_dcn_bytes)}),
     ]
     return {"n_nodes": n_nodes, "pods": pods, "shape": list(shape),
             "s": s, "seed": seed, "rows": rows}
+
+
+def compare_butterfly(n_nodes: int = 8, pods: int = 4, shape=(128, 128),
+                      s: float = 2.0, seed: int = 0) -> Dict:
+    """Butterfly-vs-tree differential invariants, JSON-ready.
+
+    Three exact claims ride zero-band gates downstream:
+
+    * ``maxdiff_g1`` — with pods == 1 the butterfly collapses to the
+      hierarchy's degenerate path bit-exactly (same packs, same keys).
+    * ``packs_diff`` — at the requested pod count the sequential pack
+      depth per segment matches the binomial tree exactly.
+    * ``peak_excess`` — the recursive-halving exchange's busiest DCN
+      line carries no more than the tree root's (the occupancy claim;
+      holds from pods >= 4 where the log-G funnel dominates headers).
+    """
+    key = jax.random.PRNGKey(seed)
+    grads = jnp.stack([
+        jax.random.normal(jax.random.fold_in(key, i), shape) * 0.01
+        for i in range(n_nodes)])
+
+    m_h1, _ = hier_allreduce_nsd(grads, key, HierConfig(pods=1, s=s))
+    m_b1, _ = butterfly_allreduce_nsd(grads, key, ButterflyConfig(pods=1, s=s))
+    _, t_h = hier_allreduce_nsd(grads, key, HierConfig(pods=pods, s=s))
+    m_b, t_b = butterfly_allreduce_nsd(grads, key,
+                                       ButterflyConfig(pods=pods, s=s))
+    dense_mean = jnp.mean(grads, axis=0)
+    return {
+        "n_nodes": n_nodes, "pods": pods, "shape": list(shape), "s": s,
+        "maxdiff_g1": float(jnp.max(jnp.abs(m_b1 - m_h1))),
+        "packs_diff": float(int(t_b.packs_per_segment)
+                            - int(t_h.packs_per_segment)),
+        "peak_excess": max(0.0, float(t_b.peak_dcn_bytes)
+                           - float(t_h.peak_dcn_bytes)),
+        "peak_ratio": (float(t_b.peak_dcn_bytes)
+                       / max(float(t_h.peak_dcn_bytes), 1.0)),
+        "error_bound": float(t_b.error_bound),
+        "max_err": float(jnp.max(jnp.abs(m_b - dense_mean))),
+    }
+
+
+def compare_overlap(n_nodes: int = 4, pods: int = 2, hidden=(256, 256),
+                    bucket_bytes: int = 256 * 1024, s: float = 2.0,
+                    seed: int = 0, batch: int = 32) -> Dict:
+    """Overlapped (bucketed) vs blocking reduce on real model gradients.
+
+    Numerical claim: the bucketed reduce is BIT-EXACT equal to the
+    blocking one (per-leaf keys depend on the leaf path, not the bucket),
+    so ``maxdiff`` and ``wire_diff`` ride zero-band gates.
+
+    Efficiency claim: overlap efficiency computed from the cost model
+    (priced per-bucket comm seconds on a link calibrated to the measured
+    aggregate bandwidth) must track the efficiency computed from measured
+    per-bucket wall-clock — same :func:`price_overlap` recurrence over
+    both, gated on the gap.
+    """
+    model = pm.mlp_mnist(hidden=hidden)
+    key = jax.random.PRNGKey(seed)
+    params, _ = model.init(key)
+    data_cfg = ClassifConfig(n_classes=10, img_size=28, channels=1,
+                             noise=0.5, seed=seed)
+    sb = shard_batch(classification_batch(data_cfg, 0, batch=batch), n_nodes)
+
+    @jax.jit
+    def node_grads(p, b):
+        return jax.vmap(lambda nb: jax.grad(
+            lambda q: model.loss(q, nb))(p))(b)
+
+    grads = jax.block_until_ready(node_grads(params, sb))  # compile
+    t0 = time.perf_counter()
+    grads = jax.block_until_ready(node_grads(params, sb))
+    bwd_s = time.perf_counter() - t0
+
+    pol = CommPolicy(default="nsd", s=s, topology="hier", pods=pods)
+    red_blk = make_reducer(pol, n_nodes=n_nodes, stacked=True)
+    red_ovl = make_reducer(pol.replace(bucket_bytes=bucket_bytes),
+                           n_nodes=n_nodes, stacked=True)
+    k = jax.random.fold_in(key, 1)
+
+    mean_blk, tele_blk, _ = red_blk.reduce(grads, k, 0)
+    mean_ovl, tele_ovl, _ = red_ovl.reduce(grads, k, 0)
+    diffs = [float(jnp.max(jnp.abs(a - b))) for a, b in
+             zip(jax.tree.leaves(mean_blk), jax.tree.leaves(mean_ovl))]
+
+    # per-bucket measured wall-clock + modeled wire seconds, same schedule
+    plan = red_ovl.plan_for(grads)
+    by_name = dict(flatten_with_names(grads))
+    bucket_s, bucket_wire = [], []
+    for names in plan.buckets:
+        sub = {n: by_name[n] for n in names}
+        step_fn = jax.jit(lambda g, kk: red_blk.reduce(g, kk, 0)[:2])
+        jax.block_until_ready(step_fn(sub, k))  # compile
+        t0 = time.perf_counter()
+        _, tele = step_fn(sub, k)
+        jax.block_until_ready(tele.wire_bytes)
+        bucket_s.append(time.perf_counter() - t0)
+        bucket_wire.append(float(tele.wire_bytes))
+    # calibrate the modeled link to the measured aggregate bandwidth so
+    # the gate compares SCHEDULES, not CPU-sim throughput vs v5e specs
+    bw = sum(bucket_wire) / max(sum(bucket_s), 1e-12)
+    modeled_s = [w / bw for w in bucket_wire]
+    measured = price_overlap(plan.bucket_bytes, bucket_s, bwd_s=bwd_s)
+    modeled = price_overlap(plan.bucket_bytes, modeled_s, bwd_s=bwd_s)
+    eff_meas = measured["overlap_efficiency"]
+    eff_model = modeled["overlap_efficiency"]
+    statslib.emit_overlap("bench/overlap", 0, plan.n_buckets,
+                          measured["hidden_s"], measured["exposed_s"],
+                          eff_meas)
+    return {
+        "n_nodes": n_nodes, "pods": pods, "bucket_bytes": bucket_bytes,
+        "n_buckets": plan.n_buckets,
+        "maxdiff": max(diffs),
+        "wire_diff": abs(float(tele_blk.wire_bytes)
+                         - float(tele_ovl.wire_bytes)),
+        "bwd_s": bwd_s,
+        "eff_measured": eff_meas,
+        "eff_modeled": eff_model,
+        "eff_gap": abs(eff_model - eff_meas),
+    }
 
 
 def write_topology_json(result: Dict, path: str = RESULTS_JSON) -> str:
@@ -198,6 +329,45 @@ def bench(quick: bool = True) -> List[BenchResult]:
                    "wire_kb": Gate(rel=0.05, direction="high")},
             context={"pods": cmp["pods"], "shape": "x".join(
                 str(d) for d in cmp["shape"])}))
+    # butterfly DCN invariants: G=1 bit-exact vs tree, equal pack depth,
+    # peak-line occupancy no worse than the tree root at pods=4
+    t0 = time.perf_counter()
+    bf = compare_butterfly(n_nodes=8, pods=4,
+                           shape=(64, 64) if quick else (128, 128))
+    us = (time.perf_counter() - t0) * 1e6
+    out.append(BenchResult(
+        name="butterfly/vs-tree/N=8", value=us, unit="us",
+        derived={"maxdiff_g1": bf["maxdiff_g1"],
+                 "packs_diff": bf["packs_diff"],
+                 "peak_excess": bf["peak_excess"],
+                 "peak_ratio": bf["peak_ratio"],
+                 "error_bound": bf["error_bound"]},
+        gates={"maxdiff_g1": Gate(abs=0.0, direction="both"),
+               "packs_diff": Gate(abs=0.0, direction="both"),
+               "peak_excess": Gate(abs=0.0, direction="high"),
+               "error_bound": Gate(rel=0.05, direction="high")},
+        context={"pods": bf["pods"], "shape": "x".join(
+            str(d) for d in bf["shape"])}))
+    # overlap scheduling: bucketed reduce bit-exact vs blocking, and the
+    # cost model's overlap efficiency tracks the measured schedule
+    t0 = time.perf_counter()
+    ov = compare_overlap(hidden=(128, 128) if quick else (256, 256))
+    us = (time.perf_counter() - t0) * 1e6
+    out.append(BenchResult(
+        name="overlap/hier-bucketed/N=4", value=us, unit="us",
+        derived={"maxdiff": ov["maxdiff"],
+                 "wire_diff": ov["wire_diff"],
+                 "n_buckets": float(ov["n_buckets"]),
+                 "eff_measured": ov["eff_measured"],
+                 "eff_modeled": ov["eff_modeled"],
+                 "eff_gap": ov["eff_gap"]},
+        gates={"maxdiff": Gate(abs=0.0, direction="both"),
+               "wire_diff": Gate(abs=0.0, direction="both"),
+               "n_buckets": Gate(abs=0.0, direction="both"),
+               # wall-clock noise moves the measured efficiency; the gate
+               # bounds the model-vs-measurement gap, not the raw number
+               "eff_gap": Gate(abs=0.35, direction="high")},
+        context={"bucket_bytes": ov["bucket_bytes"]}))
     return out
 
 

@@ -8,7 +8,7 @@ import jax
 import numpy as np
 
 from repro.core import DitherCtx, DitherPolicy, PolicyProgram
-from repro.core import stats as statslib
+from repro.obs import metrics as statslib
 from repro.core.schedule import ControllerDriver, as_program
 from repro.data import ClassifConfig, classification_batch
 from repro.models.api import Model

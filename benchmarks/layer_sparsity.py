@@ -28,7 +28,7 @@ from repro.bench import BenchResult, Gate
 from repro.configs import paper_models as pm
 from repro.core import (DitherPolicy, LayerRule, Linear, PolicyProgram,
                         SparsityController)
-from repro.core import stats as statslib
+from repro.obs import metrics as statslib
 
 from benchmarks.harness import train_classifier
 

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from repro.bench import BenchResult, Gate
 from repro.configs import paper_models as pm
 from repro.core import DitherPolicy, nsd
-from repro.core import stats as statslib
+from repro.obs import metrics as statslib
 from repro.memory import DEFAULT_NSD_S, decode, encode, resid_key
 
 from benchmarks.harness import train_classifier

@@ -29,7 +29,7 @@ import numpy as np
 from repro.bench import BenchResult, Gate
 from repro.configs import paper_models as pm
 from repro.core import DitherPolicy
-from repro.core import stats as statslib
+from repro.obs import metrics as statslib
 from repro.obs.bus import MetricsBus, get_bus, set_bus
 from repro.obs.monitor import (LossMonitor, MonitorAlert, MonitorSuite,
                                SparsityMonitor)

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.core import (DitherCtx, DitherPolicy, LayerRule, Linear,
                         PhaseSpec, PolicyProgram, dense)
-from repro.core import stats as statslib
+from repro.obs import metrics as statslib
 from repro.memory import parse_memory_program
 
 key = jax.random.PRNGKey(0)

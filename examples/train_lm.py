@@ -14,7 +14,7 @@ import argparse
 import jax.numpy as jnp
 
 from repro.core import DitherPolicy
-from repro.core import stats as statslib
+from repro.obs import metrics as statslib
 from repro.data import ShardedLoader, TokenStreamConfig, token_batch
 from repro.models.api import lm_model
 from repro.models.transformer import LMConfig

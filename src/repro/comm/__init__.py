@@ -3,16 +3,28 @@
 wireformat.py   packed (deltas + bitmap + non-zero int8 levels) layout,
                 jnp pack/unpack references, measured wire bytes
 reduce_base.py  segmenting / hop-key / wire+bound accounting shared by
-                both reduce topologies (sim and shard_map paths)
+                the reduce topologies (sim and shard_map paths)
 ring.py         flat compressed ring all-reduce (re-dithered partial
                 sums); shard_map real path + single-device simulation
 hierarchy.py    two-level reduce: intra-pod ring over ICI + inter-pod
                 binomial tree over DCN; fewer sequential packs per
                 segment and a tighter error bound than the flat ring
+butterfly.py    recursive-halving/-doubling DCN variant of the inter-pod
+                stage: same pack depth as the tree at roughly half the
+                peak inter-pod link occupancy (G >= 4)
 compression.py  per-leaf CommPolicy (dense/int8/nsd/topk_ef) + error
                 feedback residuals + reduce-topology selection
-telemetry.py    bytes-on-wire counters (via repro.core.stats) + roofline
-                pricing of measured wire bytes
+reducer.py      THE front door: ``reducer(policy, mesh) -> Reducer`` with
+                ``reduce(grads, key, step)`` + typed telemetry; owns
+                topology dispatch and per-leaf key derivation. The older
+                per-topology entry points (``allreduce_compressed``,
+                ``allreduce_hier``/``make_hier_allreduce``,
+                ``CommPolicy.reduce_cfg``) are deprecation shims over it.
+overlap.py      reverse-layer-order bucket scheduling: launch each
+                bucket's reduce while backward still runs; bit-exact vs
+                the blocking reduce by key construction
+telemetry.py    bytes-on-wire counters (via the obs metrics bus) +
+                roofline pricing of measured wire bytes
 """
 from repro.comm.compression import (
     DENSE,
@@ -20,6 +32,7 @@ from repro.comm.compression import (
     MODE_INT8,
     MODE_NSD,
     MODE_TOPK_EF,
+    TOPO_BUTTERFLY,
     TOPO_HIER,
     TOPO_PS,
     TOPO_RING,
@@ -31,6 +44,14 @@ from repro.comm.compression import (
     init_comm_state,
     topk_error_feedback,
 )
+from repro.comm.butterfly import (
+    ButterflyConfig,
+    ButterflyTelemetry,
+    allreduce_butterfly,
+    butterfly_allreduce_nsd,
+    butterfly_rounds,
+    make_butterfly_allreduce,
+)
 from repro.comm.hierarchy import (
     HierConfig,
     HierTelemetry,
@@ -39,7 +60,15 @@ from repro.comm.hierarchy import (
     make_hier_allreduce,
     tree_rounds,
 )
+from repro.comm.overlap import BucketPlan, OverlapReducer, plan_buckets
 from repro.comm.reduce_base import ReduceTelemetry
+from repro.comm.reducer import (
+    Reducer,
+    ReducerTelemetry,
+    format_comm_program,
+    parse_comm_program,
+    reducer,
+)
 from repro.comm.ring import (
     RingConfig,
     RingTelemetry,
@@ -65,11 +94,16 @@ from repro.comm import telemetry
 
 __all__ = [
     "DENSE", "MODE_DENSE", "MODE_INT8", "MODE_NSD", "MODE_TOPK_EF",
-    "TOPO_HIER", "TOPO_PS", "TOPO_RING", "TOPOLOGIES",
+    "TOPO_BUTTERFLY", "TOPO_HIER", "TOPO_PS", "TOPO_RING", "TOPOLOGIES",
     "CommPolicy", "ErrorFeedbackState", "compress_leaf", "compress_tree",
     "init_comm_state", "topk_error_feedback",
+    "ButterflyConfig", "ButterflyTelemetry", "allreduce_butterfly",
+    "butterfly_allreduce_nsd", "butterfly_rounds", "make_butterfly_allreduce",
     "HierConfig", "HierTelemetry", "allreduce_hier", "hier_allreduce_nsd",
     "make_hier_allreduce", "tree_rounds", "ReduceTelemetry",
+    "BucketPlan", "OverlapReducer", "plan_buckets",
+    "Reducer", "ReducerTelemetry", "format_comm_program",
+    "parse_comm_program", "reducer",
     "RingConfig", "RingTelemetry", "allreduce_compressed",
     "make_ring_allreduce", "ring_allreduce_nsd",
     "DEFAULT_CHUNK", "PackedNSD", "pack_bitmap", "pack_indices", "pack_nsd",

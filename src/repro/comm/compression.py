@@ -40,16 +40,19 @@ MODE_TOPK_EF = "topk_ef"
 MODES = (MODE_DENSE, MODE_INT8, MODE_NSD, MODE_TOPK_EF)
 
 # How the data-parallel reduce itself is organized (repro.comm.ring /
-# repro.comm.hierarchy). "ps" is the parameter-server shape: every node
-# compresses independently and a central average follows (the original
-# make_ssgd_step behavior). "ring" and "hier" route the stacked node
-# gradients through the corresponding compressed all-reduce instead, so
-# the wire carries re-dithered partial sums and telemetry gains the
-# topology's error bound and sequential pack depth.
+# repro.comm.hierarchy / repro.comm.butterfly). "ps" is the parameter-
+# server shape: every node compresses independently and a central average
+# follows (the original make_ssgd_step behavior). "ring", "hier" and
+# "butterfly" route the stacked node gradients through the corresponding
+# compressed all-reduce instead, so the wire carries re-dithered partial
+# sums and telemetry gains the topology's error bound and sequential pack
+# depth. All four are consumed through the single ``repro.comm.reducer``
+# front door.
 TOPO_PS = "ps"
 TOPO_RING = "ring"
 TOPO_HIER = "hier"
-TOPOLOGIES = (TOPO_PS, TOPO_RING, TOPO_HIER)
+TOPO_BUTTERFLY = "butterfly"
+TOPOLOGIES = (TOPO_PS, TOPO_RING, TOPO_HIER, TOPO_BUTTERFLY)
 
 
 @jax.tree_util.register_dataclass
@@ -91,7 +94,13 @@ class CommPolicy:
     collect_stats: bool = False  # route per-leaf bytes into comm telemetry
     stats_tag: str = "comm/"
     topology: str = TOPO_PS  # how the data-parallel reduce is organized
-    pods: int = 1  # node grouping for TOPO_HIER (N = pods * per_pod)
+    pods: int = 1  # node grouping for TOPO_HIER/BUTTERFLY (N = pods*per_pod)
+    # overlap scheduling: > 0 buckets the gradient tree in reverse layer
+    # order into ~bucket_bytes chunks and launches each bucket's reduce as
+    # its layers finish backward (repro.comm.overlap); 0 keeps the single
+    # blocking reduce. Bit-exact either way (per-leaf keys are bucket-
+    # independent).
+    bucket_bytes: int = 0
 
     def __post_init__(self):
         for m in (self.default,) + tuple(m for _, m in self.overrides):
@@ -102,15 +111,27 @@ class CommPolicy:
                              f"one of {TOPOLOGIES}")
         if self.pods < 1:
             raise ValueError(f"pods must be >= 1, got {self.pods}")
+        if self.bucket_bytes < 0:
+            raise ValueError(
+                f"bucket_bytes must be >= 0, got {self.bucket_bytes}")
 
     def reduce_cfg(self):
-        """The ring/hierarchy config this policy selects (None for ps)."""
+        """Deprecated: the per-topology config dataclasses are an internal
+        detail of ``repro.comm.reducer`` now; build a Reducer instead."""
+        import warnings
+        warnings.warn(
+            "CommPolicy.reduce_cfg() is deprecated; use "
+            "repro.comm.reducer(policy, ...) which owns topology dispatch",
+            DeprecationWarning, stacklevel=2)
+        from repro.comm.butterfly import ButterflyConfig
         from repro.comm.hierarchy import HierConfig
         from repro.comm.ring import RingConfig
         if self.topology == TOPO_RING:
             return RingConfig(s=self.s, chunk=self.chunk)
         if self.topology == TOPO_HIER:
             return HierConfig(pods=self.pods, s=self.s, chunk=self.chunk)
+        if self.topology == TOPO_BUTTERFLY:
+            return ButterflyConfig(pods=self.pods, s=self.s, chunk=self.chunk)
         return None
 
     def mode_for(self, name: str, size: int) -> str:

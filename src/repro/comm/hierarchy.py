@@ -95,6 +95,11 @@ class HierTelemetry(NamedTuple):
     wire_dcn_bytes: jax.Array  # f32 scalar: inter-pod (slow axis) bytes
     pods: int = 1  # static: G
     per_pod: int = 1  # static: P
+    # f32 scalar: max over pods of DCN bytes through that pod's slow-axis
+    # link (sent + received) — the busiest-line occupancy the butterfly
+    # variant (repro.comm.butterfly) is designed to cut. 0.0 where the
+    # path doesn't track it (shard_map dispatch, zero telemetry).
+    peak_dcn_bytes: Union[jax.Array, float] = 0.0
 
     @property
     def ratio(self) -> jax.Array:
@@ -182,6 +187,10 @@ def hier_allreduce_nsd(grads: Union[jax.Array, Sequence[jax.Array]],
     # partial[g][c]: pod g's sum of segment c, held by owner (c-1) % Pn
     part = [[acc[g][(c - 1) % Pn][c] for c in range(Pn)] for g in range(G)]
 
+    # per-pod DCN line traffic (sent + received) for the peak-occupancy
+    # telemetry the butterfly variant gates against
+    traffic = [jnp.float32(0.0) for _ in range(G)]
+
     # --- phase 2: inter-pod binomial tree reduce (re-pack per combine) ---
     rounds = tree_rounds(G)
     for r in range(rounds):
@@ -195,6 +204,9 @@ def hier_allreduce_nsd(grads: Union[jax.Array, Sequence[jax.Array]],
                                  hop_key(key, _TREE_UP_SALT, r, g, c),
                                  cfg.s, cfg.chunk)
                 ctr.count(pk, seg=c, link="dcn")
+                b = pk.wire_bytes().astype(jnp.float32)
+                traffic[g] = traffic[g] + b
+                traffic[dst] = traffic[dst] + b
                 part[dst][c] = part[dst][c] + wf.unpack_nsd(pk)
 
     # --- phase 3+4: root packs once; forwarded verbatim down the tree
@@ -205,6 +217,13 @@ def hier_allreduce_nsd(grads: Union[jax.Array, Sequence[jax.Array]],
                          cfg.s, cfg.chunk)
         ctr.count(pk, seg=c, link="dcn", hops=G - 1)
         ctr.count(pk, link="ici", hops=G * (Pn - 1))
+        b = pk.wire_bytes().astype(jnp.float32)
+        for r in range(rounds - 1, -1, -1):
+            stride = 1 << r
+            for src in range(0, G, 2 * stride):
+                if src + stride < G:
+                    traffic[src] = traffic[src] + b
+                    traffic[src + stride] = traffic[src + stride] + b
         finals.append(wf.unpack_nsd(pk))
 
     total = jnp.concatenate(finals)
@@ -220,11 +239,27 @@ def hier_allreduce_nsd(grads: Union[jax.Array, Sequence[jax.Array]],
         error_bound=jnp.max(ctr.bound) / n, n_hops=ici_hops + dcn_hops,
         packs_per_segment=(Pn - 1) + rounds + 1,
         wire_ici_bytes=ctr.wire["ici"], wire_dcn_bytes=ctr.wire["dcn"],
-        pods=G, per_pod=Pn)
+        pods=G, per_pod=Pn,
+        peak_dcn_bytes=(jnp.max(jnp.stack(traffic)) if G > 1
+                        else jnp.float32(0.0)))
 
 
 def make_hier_allreduce(mesh: Mesh, cfg: HierConfig = HierConfig(),
                         pod_axis: str = "pods", node_axis: str = "nodes"):
+    """Deprecated: build reduces through ``repro.comm.reducer`` instead.
+
+    Thin shim over the internal builder the reducer consumes; results are
+    bit-identical (pinned by tests/test_reducer.py)."""
+    import warnings
+    warnings.warn(
+        "make_hier_allreduce is deprecated; use repro.comm.reducer("
+        "policy, mesh) which owns topology dispatch and telemetry",
+        DeprecationWarning, stacklevel=2)
+    return _make_hier_allreduce(mesh, cfg, pod_axis, node_axis)
+
+
+def _make_hier_allreduce(mesh: Mesh, cfg: HierConfig = HierConfig(),
+                         pod_axis: str = "pods", node_axis: str = "nodes"):
     """Build the shard_map two-level reduce over a 2-D (pods, nodes) mesh.
 
     Returns ``fn(stacked, key) -> (means, wire_ici, wire_dcn, bounds)``
@@ -328,8 +363,17 @@ def allreduce_hier(grads, key, cfg: HierConfig = HierConfig(),
                    mesh: Mesh = None, pod_axis: str = "pods",
                    node_axis: str = "nodes"
                    ) -> Tuple[jax.Array, HierTelemetry]:
-    """Dispatch: shard_map two-level reduce when a 2-D multi-device mesh is
-    given, else the single-process simulation (identical per-hop math)."""
+    """Deprecated: dispatch reduces through ``repro.comm.reducer`` instead.
+
+    Shard_map two-level reduce when a 2-D multi-device mesh is given, else
+    the single-process simulation (identical per-hop math). Kept as a thin
+    shim over the same internals the reducer uses — bit-identical results,
+    pinned by tests/test_reducer.py."""
+    import warnings
+    warnings.warn(
+        "allreduce_hier is deprecated; use repro.comm.reducer(policy, "
+        "mesh) which owns topology dispatch and telemetry",
+        DeprecationWarning, stacklevel=2)
     if not isinstance(grads, jax.Array):
         grads = jnp.stack(list(grads))
     n = grads.shape[0]
@@ -340,7 +384,7 @@ def allreduce_hier(grads, key, cfg: HierConfig = HierConfig(),
                 f"stacked node axis ({grads.shape[0]}) must equal the mesh "
                 f"({pod_axis!r} x {node_axis!r}) size ({G}*{Pn}); a "
                 "mismatched stack would silently drop gradients")
-        fn = make_hier_allreduce(mesh, cfg, pod_axis, node_axis)
+        fn = _make_hier_allreduce(mesh, cfg, pod_axis, node_axis)
         means, w_ici, w_dcn, bounds = fn(grads, key)
         flat_size = 1
         for d in grads.shape[1:]:

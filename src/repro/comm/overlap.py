@@ -1,0 +1,143 @@
+"""Overlap scheduling: bucket the gradient tree, reduce while backward runs.
+
+Backward produces gradients in reverse layer order, so the LAST layers'
+gradients are ready while the FIRST layers are still differentiating.
+A blocking reduce wastes that window; the overlap scheduler instead
+
+  1. buckets the flattened gradient tree in reverse layer order into
+     ~``bucket_bytes`` chunks (:func:`plan_buckets` — an oversize leaf
+     becomes its own bucket rather than being split, because per-leaf
+     compression keys are derived from the leaf NAME and splitting a leaf
+     would change its dither);
+  2. launches each bucket's compressed reduce as soon as its layers'
+     gradients exist, while earlier layers still compute backward.
+
+Bit-exactness is by construction, not by luck: every reducer in
+``repro.comm.reducer`` derives per-leaf keys as
+``fold_in(fold_in(key, step), name_salt(name))`` — a function of the leaf
+name only, never of which bucket (or whether any bucket) the leaf rides
+in. tests/test_overlap.py pins bucketed == blocking to zero ULP.
+
+Inside a jitted step the "launch" is dataflow, not wall-clock — XLA is
+free to interleave the bucket reduces with the remaining backward ops
+because each bucket depends only on its own leaves. The honest wall-clock
+story lives in ``repro.launch.costmodel.price_overlap`` (modeled) and the
+per-bucket host timings of ``benchmarks/distributed_nodes.py`` (measured);
+their agreement is a gated metric.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.comm.reducer import Reducer, ReducerTelemetry
+from repro.utils.pytree import flatten_with_names
+
+__all__ = ["BucketPlan", "OverlapReducer", "plan_buckets"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """Static bucketing of a gradient tree: names + per-bucket byte totals.
+
+    ``buckets[0]`` holds the leaves whose gradients backward finishes
+    FIRST (the reverse of flatten order), so index order is launch order.
+    """
+
+    buckets: Tuple[Tuple[str, ...], ...]
+    bucket_bytes: Tuple[int, ...]
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.buckets)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bucket_bytes)
+
+
+def plan_buckets(named_bytes: Sequence[Tuple[str, int]],
+                 bucket_bytes: int, reverse: bool = True) -> BucketPlan:
+    """Greedy fill in (reverse) flatten order into ~bucket_bytes buckets.
+
+    A leaf larger than ``bucket_bytes`` gets a bucket of its own (leaves
+    are never split — the compression key is per leaf name). A bucket
+    closes when adding the next leaf would push it past the target, so
+    every bucket except possibly the last is <= bucket_bytes unless a
+    single leaf exceeds it.
+    """
+    if bucket_bytes <= 0:
+        raise ValueError(f"bucket_bytes must be > 0, got {bucket_bytes}")
+    order = list(reversed(named_bytes)) if reverse else list(named_bytes)
+    buckets: List[Tuple[str, ...]] = []
+    totals: List[int] = []
+    cur: List[str] = []
+    cur_bytes = 0
+    for name, nbytes in order:
+        if cur and cur_bytes + nbytes > bucket_bytes:
+            buckets.append(tuple(cur))
+            totals.append(cur_bytes)
+            cur, cur_bytes = [], 0
+        cur.append(name)
+        cur_bytes += int(nbytes)
+    if cur:
+        buckets.append(tuple(cur))
+        totals.append(cur_bytes)
+    return BucketPlan(buckets=tuple(buckets), bucket_bytes=tuple(totals))
+
+
+class OverlapReducer(Reducer):
+    """Wrap any Reducer with reverse-layer-order bucket scheduling.
+
+    ``reduce`` returns the same tree, bit-exact, as the wrapped reducer's
+    single blocking call; telemetry totals sum over buckets with
+    ``n_buckets`` recording the schedule. With ``collect_stats`` the
+    wrapped reducer emits one comm-telemetry row PER BUCKET (launch/drain
+    granularity on the metrics bus) instead of one per step.
+    """
+
+    def __init__(self, base: Reducer, bucket_bytes: int):
+        self.base = base
+        self.bucket_target = int(bucket_bytes)
+        self.policy = base.policy
+        self.n_nodes = base.n_nodes
+        self.mesh = base.mesh
+        self.pod_axis = base.pod_axis
+        self.node_axis = base.node_axis
+        self.topology = base.topology
+
+    @property
+    def stacked(self) -> bool:
+        return self.base.stacked
+
+    def init_state(self, params_or_grads: Any) -> Dict[str, Any]:
+        return self.base.init_state(params_or_grads)
+
+    def plan_for(self, grads: Any) -> BucketPlan:
+        """The static schedule this tree reduces under (per-NODE bytes)."""
+        div = self.n_nodes if self.stacked else 1
+        named = [(name, leaf.size * np.dtype(leaf.dtype).itemsize
+                  // max(div, 1))
+                 for name, leaf in flatten_with_names(grads)]
+        return plan_buckets(named, self.bucket_target)
+
+    def reduce(self, grads: Any, key: jax.Array, step,
+               state: Optional[Dict[str, Any]] = None
+               ) -> Tuple[Any, ReducerTelemetry, Dict[str, Any]]:
+        flat = flatten_with_names(grads)
+        by_name = dict(flat)
+        plan = self.plan_for(grads)
+        state = dict(state or {})
+        out: Dict[str, jax.Array] = {}
+        tele: Optional[ReducerTelemetry] = None
+        for names in plan.buckets:
+            sub = {n: by_name[n] for n in names}
+            sub_out, t, state = self.base.reduce(sub, key, step, state)
+            out.update(sub_out)
+            tele = t if tele is None else tele.accumulate(t)
+        leaves = [out[name] for name, _ in flat]
+        grads_mean = jax.tree.unflatten(jax.tree.structure(grads), leaves)
+        return grads_mean, tele, state

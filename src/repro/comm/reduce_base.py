@@ -106,6 +106,12 @@ class PackCounter:
         if seg is not None:
             self.bound = self.bound.at[seg].add(d)
 
+    def count_bytes(self, nbytes, link: str = "ici") -> None:
+        """Record raw bytes crossing a link class (already-packed payloads
+        forwarded verbatim, e.g. a stacked set of piece packs — no Delta
+        charge, the error was charged when each pack was created)."""
+        self.wire[link] = self.wire[link] + jnp.float32(0.0) + nbytes
+
     @property
     def wire_total(self) -> jax.Array:
         return self.wire["ici"] + self.wire["dcn"]

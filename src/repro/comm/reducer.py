@@ -1,0 +1,492 @@
+"""One front door for every compressed gradient reduce.
+
+PRs 1-2 grew three parallel entry points — ``ring.allreduce_compressed``,
+``hierarchy.make_hier_allreduce``/``allreduce_hier`` and the per-policy
+``CommPolicy.reduce_cfg()`` config plumbing — and every consumer (ssgd,
+Trainer, benchmarks) carried its own dispatch + telemetry glue across
+them. This module collapses all of that into one protocol:
+
+    red = comm.reducer(policy, mesh=None, n_nodes=N)
+    grads_mean, telemetry, state = red.reduce(grads, key, step, state)
+
+* ``grads`` is a gradient pytree; stacked reducers expect a leading
+  (n_nodes, ...) axis per leaf, flat reducers (the Trainer's single-
+  participant wire model) take the tree as-is.
+* Key derivation is OWNED HERE and identical for every topology: leaf
+  keys are ``fold_in(fold_in(key, step), name_salt(name))`` — exactly
+  the scheme ssgd and the Trainer used before the redesign, so the
+  migration is bit-exact (pinned by tests/test_reducer.py).
+* ``telemetry`` is one typed :class:`ReducerTelemetry` regardless of
+  topology; ``state`` carries error-feedback residuals (node-count
+  independent, so elastic resizes migrate them losslessly — see
+  ``repro.train.fault_tolerance``).
+* ``policy.bucket_bytes > 0`` transparently wraps the reducer in the
+  overlap scheduler (``repro.comm.overlap``): same keys per leaf, so
+  bucketed and blocking reduces are bit-exact equal.
+
+The old entry points remain as thin deprecation shims.
+
+``parse_comm_program``/``format_comm_program`` give the reducer a launch-
+DSL front door (the ``comm:`` section of the unified ``--program`` flag,
+see ``repro.launch.program``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import butterfly as bfly_mod
+from repro.comm import hierarchy as hier_mod
+from repro.comm import ring as ring_mod
+from repro.comm.butterfly import ButterflyConfig, butterfly_allreduce_nsd
+from repro.comm.compression import (MODE_DENSE, MODE_TOPK_EF, TOPO_BUTTERFLY,
+                                    TOPO_HIER, TOPO_PS, TOPO_RING, TOPOLOGIES,
+                                    CommPolicy, ErrorFeedbackState,
+                                    compress_leaf, compress_tree,
+                                    init_comm_state, topk_error_feedback)
+from repro.comm.hierarchy import HierConfig, hier_allreduce_nsd
+from repro.comm.ring import RingConfig, ring_allreduce_nsd
+from repro.comm import wireformat as wf
+from repro.core.policy import name_salt
+from repro.utils.pytree import tree_map_with_path_str
+
+__all__ = ["Reducer", "ReducerTelemetry", "format_comm_program",
+           "parse_comm_program", "reducer"]
+
+
+class ReducerTelemetry(NamedTuple):
+    """Typed per-reduce accounting, uniform across topologies.
+
+    Traced f32 scalars unless noted. Fields a topology doesn't measure
+    read 0 (``peak_dcn_bytes`` for ps/ring, ``error_bound`` for ps).
+    ``n_buckets`` > 1 marks an overlap-scheduled reduce; totals then sum
+    over buckets and ``error_bound``/``peak_dcn_bytes`` take the max.
+    """
+
+    wire_bytes: jax.Array
+    dense_bytes: jax.Array
+    error_bound: Union[jax.Array, float] = 0.0
+    wire_ici_bytes: Union[jax.Array, float] = 0.0
+    wire_dcn_bytes: Union[jax.Array, float] = 0.0
+    peak_dcn_bytes: Union[jax.Array, float] = 0.0
+    n_hops: int = 0  # static: total link traversals
+    packs_per_segment: int = 0  # static: sequential re-quantizations
+    pods: int = 1  # static
+    per_pod: int = 1  # static
+    n_buckets: int = 1  # static: 1 = blocking reduce
+
+    @property
+    def ratio(self) -> jax.Array:
+        return self.wire_bytes / jnp.maximum(self.dense_bytes, 1.0)
+
+    def accumulate(self, other: "ReducerTelemetry") -> "ReducerTelemetry":
+        """Fold another reduce's telemetry in (bucketed/overlap reduces)."""
+        return ReducerTelemetry(
+            wire_bytes=self.wire_bytes + other.wire_bytes,
+            dense_bytes=self.dense_bytes + other.dense_bytes,
+            error_bound=jnp.maximum(self.error_bound, other.error_bound),
+            wire_ici_bytes=self.wire_ici_bytes + other.wire_ici_bytes,
+            wire_dcn_bytes=self.wire_dcn_bytes + other.wire_dcn_bytes,
+            peak_dcn_bytes=jnp.maximum(self.peak_dcn_bytes,
+                                       other.peak_dcn_bytes),
+            n_hops=self.n_hops + other.n_hops,
+            packs_per_segment=max(self.packs_per_segment,
+                                  other.packs_per_segment),
+            pods=max(self.pods, other.pods),
+            per_pod=max(self.per_pod, other.per_pod),
+            n_buckets=self.n_buckets + other.n_buckets)
+
+
+def _zero_telemetry() -> ReducerTelemetry:
+    zero = jnp.float32(0.0)
+    return ReducerTelemetry(zero, zero, zero, zero, zero, zero,
+                            0, 0, 1, 1, 1)
+
+
+class Reducer:
+    """Protocol: ``reduce(grads, key, step, state)`` for one topology.
+
+    Subclasses implement ``_reduce``; this base owns state init and the
+    collect_stats emission (one comm-telemetry row per reduce, same tag
+    and totals the pre-redesign paths emitted).
+    """
+
+    topology: str = TOPO_PS
+
+    def __init__(self, policy: CommPolicy, n_nodes: int = 1,
+                 mesh=None, pod_axis: str = "pods",
+                 node_axis: str = "nodes"):
+        self.policy = policy
+        self.n_nodes = int(n_nodes)
+        self.mesh = mesh
+        self.pod_axis = pod_axis
+        self.node_axis = node_axis
+
+    def init_state(self, params_or_grads: Any) -> Dict[str, Any]:
+        """Zero EF residuals for leaves the policy routes through topk_ef.
+
+        Residual shapes follow the LEAF (not the node axis), so the state
+        survives elastic node-count changes bit-for-bit.
+        """
+        tree = params_or_grads
+        if self.stacked:
+            tree = jax.tree.map(lambda g: g[0], tree)
+        return init_comm_state(tree, self.policy)
+
+    @property
+    def stacked(self) -> bool:
+        """Whether ``reduce`` expects a leading (n_nodes, ...) leaf axis."""
+        return False
+
+    def reduce(self, grads: Any, key: jax.Array, step,
+               state: Optional[Dict[str, Any]] = None
+               ) -> Tuple[Any, ReducerTelemetry, Dict[str, Any]]:
+        k_step = jax.random.fold_in(key, step)
+        grads, tele, state = self._reduce(grads, k_step, dict(state or {}))
+        if self.policy.collect_stats and not self._emits_stats:
+            from repro.comm import telemetry as comm_tele
+            comm_tele.emit(self.policy.stats_tag, tele.wire_bytes,
+                           tele.dense_bytes)
+        return grads, tele, state
+
+    # subclasses that delegate to compress_tree (which emits its own comm
+    # row) flip this so a reduce never double-counts
+    _emits_stats = False
+
+    def _reduce(self, grads, k_step, state):
+        raise NotImplementedError
+
+
+class _FlatPSReducer(Reducer):
+    """Single-participant wire model: the Trainer path.
+
+    Delegates to ``compress_tree`` with the step-folded key, so results,
+    EF threading and stats emission are bit-identical to the pre-redesign
+    ``Trainer._step``.
+    """
+
+    topology = TOPO_PS
+    _emits_stats = True  # compress_tree emits under collect_stats
+
+    def _reduce(self, grads, k_step, state):
+        grads_hat, state, tele = compress_tree(grads, k_step, self.policy,
+                                               state)
+        return grads_hat, ReducerTelemetry(
+            wire_bytes=tele["wire_bytes"], dense_bytes=tele["dense_bytes"],
+            error_bound=jnp.float32(0.0), n_hops=1, packs_per_segment=1,
+            per_pod=1), state
+
+
+class _StackedPSReducer(Reducer):
+    """Parameter-server shape over stacked (n_nodes, ...) gradients.
+
+    Per-node compression with per-(leaf, worker) keys then the server
+    average — bit-identical to the pre-redesign ``make_ssgd_step``
+    compress path for dense/int8/nsd leaves. ``topk_ef`` leaves now get
+    REAL error feedback (the redesign's upgrade over the old degrade-to-
+    nsd): the residual lives server-side on the averaged gradient, so it
+    is node-count independent and migrates bit-exact across elastic
+    join/leave.
+    """
+
+    topology = TOPO_PS
+
+    @property
+    def stacked(self) -> bool:
+        return True
+
+    def _reduce(self, grads, k_step, state):
+        n = self.n_nodes
+        policy = self.policy
+        totals = {"wire": jnp.float32(0.0), "dense": jnp.float32(0.0)}
+
+        def leaf(name: str, g_nodes: jax.Array) -> jax.Array:
+            size = int(g_nodes.size) // n
+            mode = policy.mode_for(name, size)
+            dense_bytes = jnp.float32(4 * size * n)
+            totals["dense"] = totals["dense"] + dense_bytes
+            if mode == MODE_DENSE:
+                totals["wire"] = totals["wire"] + dense_bytes
+                return jnp.mean(g_nodes, axis=0)
+            k0 = jax.random.fold_in(k_step, name_salt(name))
+            if mode == MODE_TOPK_EF:
+                g_mean = jnp.mean(g_nodes, axis=0)
+                sent, new_state = topk_error_feedback(
+                    g_mean, state.get(name), policy.topk_frac)
+                state[name] = new_state
+                k = max(1, int(policy.topk_frac * size))
+                # every node ships (int32 index, f32 value) per kept elem
+                totals["wire"] = (totals["wire"]
+                                  + jnp.float32(n * (8 * k + wf.HEADER_BYTES)))
+                return sent
+
+            def one(g, worker):
+                kw = jax.random.fold_in(k0, worker)
+                g_hat, wire, _ = compress_leaf(g, kw, mode, policy)
+                return g_hat, wire.astype(jnp.float32)
+
+            g_hat, wires = jax.vmap(one)(g_nodes, jnp.arange(n))
+            totals["wire"] = totals["wire"] + jnp.sum(wires)
+            return jnp.mean(g_hat, axis=0)
+
+        grads_mean = tree_map_with_path_str(leaf, grads)
+        return grads_mean, ReducerTelemetry(
+            wire_bytes=totals["wire"], dense_bytes=totals["dense"],
+            error_bound=jnp.float32(0.0), n_hops=n, packs_per_segment=1,
+            per_pod=n), state
+
+
+_SIM_FNS = {
+    TOPO_RING: ring_allreduce_nsd,
+    TOPO_HIER: hier_allreduce_nsd,
+    TOPO_BUTTERFLY: butterfly_allreduce_nsd,
+}
+_MESH_FNS = {
+    TOPO_RING: None,  # built lazily per reducer (see _built_fn)
+    TOPO_HIER: hier_mod._make_hier_allreduce,
+    TOPO_BUTTERFLY: bfly_mod.make_butterfly_allreduce,
+}
+
+
+class _AllReduceReducer(Reducer):
+    """ring / hier / butterfly over stacked (n_nodes, ...) gradients.
+
+    Per compressible leaf the stacked gradients go through the topology's
+    compressed all-reduce (simulation by default; the shard_map program
+    when a mesh is attached — identical per-hop math and keys, so the
+    choice never changes results). Dense leaves average exactly, with the
+    dense counterfactual of the SAME topology as both wire and dense
+    bytes so ratios compare like for like. int8/topk_ef leaf modes
+    degrade to nsd here: the reduce's wire format IS packed NSD.
+    """
+
+    def __init__(self, policy: CommPolicy, n_nodes: int = 1, mesh=None,
+                 pod_axis: str = "pods", node_axis: str = "nodes"):
+        super().__init__(policy, n_nodes, mesh, pod_axis, node_axis)
+        self.topology = policy.topology
+        if self.topology == TOPO_RING:
+            self.cfg = RingConfig(s=policy.s, chunk=policy.chunk)
+        elif self.topology == TOPO_HIER:
+            self.cfg = HierConfig(pods=policy.pods, s=policy.s,
+                                  chunk=policy.chunk)
+        else:
+            self.cfg = ButterflyConfig(pods=policy.pods, s=policy.s,
+                                       chunk=policy.chunk)
+        if self.topology != TOPO_RING and n_nodes % policy.pods != 0:
+            raise ValueError(
+                f"n_nodes ({n_nodes}) must be divisible by policy.pods "
+                f"({policy.pods}) for the {self.topology!r} topology")
+        self._fn = None  # lazily-built shard_map program (one per reducer;
+        #                  jit retraces per leaf shape under the hood)
+
+    @property
+    def stacked(self) -> bool:
+        return True
+
+    def _topo_dense_bytes(self, size: int) -> float:
+        n, policy = self.n_nodes, self.policy
+        if self.topology == TOPO_HIER:
+            return hier_mod.dense_reduce_bytes(
+                size, policy.pods, n // policy.pods, policy.chunk)
+        if self.topology == TOPO_BUTTERFLY:
+            return bfly_mod.dense_reduce_bytes(
+                size, policy.pods, n // policy.pods, policy.chunk)
+        return ring_mod.dense_reduce_bytes(size, n, policy.chunk)
+
+    def _allreduce(self, g_nodes, k0):
+        if self.mesh is not None and self.n_nodes > 1:
+            if self.topology == TOPO_RING:
+                if self._fn is None:
+                    self._fn = ring_mod.make_ring_allreduce(
+                        self.mesh, self.node_axis, self.cfg)
+                means, wires, bounds = self._fn(g_nodes, k0)
+                n = self.n_nodes
+                return means[0], ReducerTelemetry(
+                    wire_bytes=jnp.sum(wires),
+                    dense_bytes=jnp.float32(self._topo_dense_bytes(
+                        int(g_nodes.size) // n)),
+                    error_bound=bounds[0], n_hops=2 * n * (n - 1),
+                    packs_per_segment=n, per_pod=n)
+            if self._fn is None:
+                self._fn = _MESH_FNS[self.topology](
+                    self.mesh, self.cfg, self.pod_axis, self.node_axis)
+            outs = self._fn(g_nodes, k0)
+            means, w_ici, w_dcn, bounds = outs[:4]
+            peak = outs[4][0] if len(outs) > 4 else jnp.float32(0.0)
+            wire_ici, wire_dcn = jnp.sum(w_ici), jnp.sum(w_dcn)
+            pods, per_pod = self.policy.pods, self.n_nodes // self.policy.pods
+            mod = (hier_mod if self.topology == TOPO_HIER else bfly_mod)
+            ici_hops, dcn_hops = mod._hop_counts(pods, per_pod)
+            return means[0], ReducerTelemetry(
+                wire_bytes=wire_ici + wire_dcn,
+                dense_bytes=jnp.float32(self._topo_dense_bytes(
+                    int(g_nodes.size) // self.n_nodes)),
+                error_bound=bounds[0], wire_ici_bytes=wire_ici,
+                wire_dcn_bytes=wire_dcn, peak_dcn_bytes=peak,
+                n_hops=ici_hops + dcn_hops,
+                packs_per_segment=(per_pod - 1)
+                + hier_mod.tree_rounds(pods) + 1,
+                pods=pods, per_pod=per_pod)
+        mean, tele = _SIM_FNS[self.topology](g_nodes, k0, self.cfg)
+        return mean, ReducerTelemetry(
+            wire_bytes=tele.wire_bytes, dense_bytes=tele.dense_bytes,
+            error_bound=tele.error_bound,
+            wire_ici_bytes=getattr(tele, "wire_ici_bytes", 0.0),
+            wire_dcn_bytes=getattr(tele, "wire_dcn_bytes", 0.0),
+            peak_dcn_bytes=getattr(tele, "peak_dcn_bytes", 0.0),
+            n_hops=tele.n_hops, packs_per_segment=tele.packs_per_segment,
+            pods=getattr(tele, "pods", 1),
+            per_pod=getattr(tele, "per_pod", self.n_nodes))
+
+    def _reduce(self, grads, k_step, state):
+        acc = {"tele": _zero_telemetry()}
+
+        def leaf(name: str, g_nodes: jax.Array) -> jax.Array:
+            size = int(g_nodes.size) // self.n_nodes
+            mode = self.policy.mode_for(name, size)
+            if mode == MODE_DENSE:
+                db = jnp.float32(self._topo_dense_bytes(size))
+                acc["tele"] = acc["tele"]._replace(
+                    wire_bytes=acc["tele"].wire_bytes + db,
+                    dense_bytes=acc["tele"].dense_bytes + db)
+                return jnp.mean(g_nodes, axis=0)
+            k0 = jax.random.fold_in(k_step, name_salt(name))
+            mean, tele = self._allreduce(g_nodes, k0)
+            t = acc["tele"]
+            acc["tele"] = t._replace(
+                wire_bytes=t.wire_bytes + tele.wire_bytes,
+                dense_bytes=t.dense_bytes + tele.dense_bytes,
+                error_bound=jnp.maximum(t.error_bound, tele.error_bound),
+                wire_ici_bytes=t.wire_ici_bytes + tele.wire_ici_bytes,
+                wire_dcn_bytes=t.wire_dcn_bytes + tele.wire_dcn_bytes,
+                peak_dcn_bytes=t.peak_dcn_bytes + tele.peak_dcn_bytes,
+                n_hops=t.n_hops + tele.n_hops,
+                packs_per_segment=max(t.packs_per_segment,
+                                      tele.packs_per_segment),
+                pods=max(t.pods, tele.pods),
+                per_pod=max(t.per_pod, tele.per_pod))
+            return mean
+
+        grads_mean = tree_map_with_path_str(leaf, grads)
+        return grads_mean, acc["tele"], state
+
+
+def reducer(policy: CommPolicy, mesh=None, *, n_nodes: Optional[int] = None,
+            stacked: Optional[bool] = None, pod_axis: str = "pods",
+            node_axis: str = "nodes") -> Reducer:
+    """Build the Reducer a CommPolicy selects.
+
+    ``n_nodes`` defaults to the mesh's data-parallel extent (pod axis x
+    node axis when present, else the node axis), or 1 without a mesh.
+    ``stacked`` (leading (n_nodes, ...) leaf axis) defaults to
+    ``n_nodes > 1``; pass ``stacked=True`` with ``n_nodes=1`` for a
+    degenerate stacked path (ssgd with one node). With
+    ``policy.bucket_bytes > 0`` the reducer is wrapped in the overlap
+    scheduler (``repro.comm.overlap``) — results stay bit-exact equal to
+    the blocking reduce, telemetry gains per-bucket rows.
+    """
+    if n_nodes is None:
+        if mesh is not None:
+            n_nodes = int(mesh.shape[node_axis])
+            if pod_axis in mesh.shape:
+                n_nodes *= int(mesh.shape[pod_axis])
+        else:
+            n_nodes = 1
+    if stacked is None:
+        stacked = n_nodes > 1
+    if policy.topology == TOPO_PS or not stacked:
+        if stacked:
+            red = _StackedPSReducer(policy, n_nodes, mesh,
+                                    pod_axis, node_axis)
+        else:
+            red = _FlatPSReducer(policy, 1, mesh, pod_axis, node_axis)
+    elif policy.topology in (TOPO_RING, TOPO_HIER, TOPO_BUTTERFLY):
+        red = _AllReduceReducer(policy, n_nodes, mesh, pod_axis, node_axis)
+    else:  # pragma: no cover - CommPolicy validates topology
+        raise ValueError(policy.topology)
+    if policy.bucket_bytes > 0:
+        from repro.comm.overlap import OverlapReducer
+        red = OverlapReducer(red, policy.bucket_bytes)
+    return red
+
+
+# ---------------------------------------------------------------------------
+# comm: program DSL — the reducer's launch front door
+# ---------------------------------------------------------------------------
+
+_COMM_KEYS = {
+    "topology": str, "default": str, "s": float, "chunk": int,
+    "min_leaf_size": int, "topk_frac": float, "pods": int,
+    "bucket_bytes": int, "stats": bool, "tag": str,
+}
+_KEY_TO_FIELD = {"stats": "collect_stats", "tag": "stats_tag"}
+
+
+def parse_comm_program(spec: str, base: Optional[CommPolicy] = None
+                       ) -> CommPolicy:
+    """Parse a ``comm:`` program section into a CommPolicy.
+
+    Grammar (``;``-separated clauses, same shape as the dither/memory
+    program DSLs):
+
+        topology=butterfly;pods=4;default=nsd;s=2.0;bucket_bytes=1048576;
+        rule emb:dense;rule head:topk_ef
+
+    ``rule PAT:MODE`` appends to ``overrides`` (first match wins);
+    ``stats=1``/``tag=...`` map onto collect_stats/stats_tag. Unknown
+    keys raise with the known-key list. Round-trips with
+    :func:`format_comm_program` (pinned by tests/test_program.py).
+    """
+    policy = base or CommPolicy()
+    kw: Dict[str, Any] = {}
+    overrides = list(policy.overrides)
+    for clause in spec.split(";"):
+        clause = clause.strip()
+        if not clause:
+            continue
+        if clause.startswith("rule "):
+            body = clause[len("rule "):]
+            if ":" not in body:
+                raise ValueError(
+                    f"comm rule needs PAT:MODE, got {clause!r}")
+            pat, mode = body.split(":", 1)
+            overrides.append((pat.strip(), mode.strip()))
+            continue
+        if "=" not in clause:
+            raise ValueError(f"comm program clause {clause!r} is neither "
+                             "key=value nor 'rule PAT:MODE'")
+        k, v = (x.strip() for x in clause.split("=", 1))
+        if k not in _COMM_KEYS:
+            raise ValueError(f"unknown comm program key {k!r}; one of "
+                             f"{sorted(_COMM_KEYS)}")
+        typ = _COMM_KEYS[k]
+        val = (v not in ("0", "false", "False")) if typ is bool else typ(v)
+        kw[_KEY_TO_FIELD.get(k, k)] = val
+    if kw.get("topology") is not None and kw["topology"] not in TOPOLOGIES:
+        raise ValueError(f"unknown comm topology {kw['topology']!r}; one "
+                         f"of {TOPOLOGIES}")
+    return policy.replace(overrides=tuple(overrides), **kw)
+
+
+def format_comm_program(policy: CommPolicy) -> str:
+    """Render a CommPolicy as a ``comm:`` section (parse round-trips)."""
+    default = CommPolicy()
+    parts = []
+    for key, typ in _COMM_KEYS.items():
+        field = _KEY_TO_FIELD.get(key, key)
+        val = getattr(policy, field)
+        if val == getattr(default, field):
+            continue
+        if typ is bool:
+            val = int(val)
+        parts.append(f"{key}={val}")
+    for pat, mode in policy.overrides:
+        parts.append(f"rule {pat}:{mode}")
+    return ";".join(parts)
+
+
+# re-exported so "from repro.comm.reducer import *" carries the protocol's
+# full vocabulary (state type included)
+ErrorFeedbackState = ErrorFeedbackState

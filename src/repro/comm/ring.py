@@ -192,7 +192,10 @@ def make_ring_allreduce(mesh: Mesh, axis_name: str,
 
 def allreduce_compressed(grads, key, cfg=RingConfig(), mesh: Mesh = None,
                          axis_name: str = "nodes", pod_axis: str = "pods"):
-    """Dispatch a compressed all-reduce by topology and execution mode.
+    """Deprecated: dispatch reduces through ``repro.comm.reducer`` instead.
+
+    Kept as a thin shim over the same internals the reducer uses — bit-
+    identical results, pinned by tests/test_reducer.py.
 
     ``cfg`` selects the topology: a ``RingConfig`` runs the flat ring, a
     ``repro.comm.hierarchy.HierConfig`` the two-level (intra-pod ring +
@@ -201,11 +204,20 @@ def allreduce_compressed(grads, key, cfg=RingConfig(), mesh: Mesh = None,
     mesh); otherwise the single-process simulation with identical per-hop
     math.
     """
+    import warnings
+
     from repro.comm import hierarchy as hier  # local: avoid import cycle
 
+    warnings.warn(
+        "allreduce_compressed is deprecated; use repro.comm.reducer("
+        "policy, mesh) which owns topology dispatch and telemetry",
+        DeprecationWarning, stacklevel=2)
     if isinstance(cfg, hier.HierConfig):
-        return hier.allreduce_hier(grads, key, cfg, mesh=mesh,
-                                   pod_axis=pod_axis, node_axis=axis_name)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            return hier.allreduce_hier(grads, key, cfg, mesh=mesh,
+                                       pod_axis=pod_axis,
+                                       node_axis=axis_name)
     if mesh is not None and mesh.shape[axis_name] > 1:
         if not isinstance(grads, jax.Array):
             grads = jnp.stack(list(grads))

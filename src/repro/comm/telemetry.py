@@ -12,7 +12,7 @@ from typing import Dict, NamedTuple
 
 import jax
 
-from repro.core import stats as statslib
+from repro.obs import metrics as statslib
 
 
 class CommTelemetry(NamedTuple):

@@ -40,7 +40,17 @@ from repro.core.dithered import (
     dithered_einsum,
     quantize_cotangent,
 )
-from repro.core import int8, meprop, probe, rowdither, schedule, stats
+from repro.core import int8, meprop, probe, rowdither, schedule
+
+
+def __getattr__(name):
+    # `stats` is a deprecated shim over repro.obs.metrics that warns on
+    # import; importing it lazily keeps `import repro.core` warning-free
+    # while `from repro.core import stats` still resolves (and warns).
+    if name == "stats":
+        import repro.core.stats as stats
+        return stats
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "QuantStats", "QuantizedGrad", "compute_delta", "dither_noise",

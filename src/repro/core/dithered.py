@@ -55,7 +55,7 @@ from repro.core import int8 as int8lib
 from repro.core import meprop as meproplib
 from repro.core import nsd
 from repro.core import rowdither
-from repro.core import stats as statslib
+from repro.obs import metrics as statslib
 from repro.core.policy import (
     KNOB_MEPROP_K_FRAC,
     KNOB_ROW_ALPHA,

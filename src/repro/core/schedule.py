@@ -526,7 +526,7 @@ class TelemetryWindow:
     previous run's entire history into the controller state."""
 
     def __init__(self, stats_tag: str = ""):
-        from repro.core import stats as statslib
+        from repro.obs import metrics as statslib
 
         self.stats_tag = stats_tag
         self._seen: Dict[str, int] = {
@@ -534,7 +534,7 @@ class TelemetryWindow:
             if tag.startswith(stats_tag)}
 
     def measure(self) -> Dict[str, float]:
-        from repro.core import stats as statslib
+        from repro.obs import metrics as statslib
 
         out: Dict[str, float] = {}
         for tag in statslib.tags():

@@ -1,217 +1,26 @@
-"""Telemetry facade for dither / comm / memory statistics.
+"""DEPRECATED shim: the telemetry facade moved to :mod:`repro.obs.metrics`.
 
-The paper's Table 1 reports the average sparsity of the pre-activation
-gradients over all layers and training iterations, and fig. 6b the
-worst-case bit-width. Those numbers are produced *inside* jitted code, so
-they surface through ``jax.experimental.io_callback`` into a process-local
-store. That store is now the typed metrics bus in :mod:`repro.obs.bus` —
-this module is the thin compatibility shim over it, keeping the historical
-``emit`` / ``rows`` / ``summary`` API (and its exact numerics, pinned
-bit-for-bit by the ``layer_sparsity`` and ``memory_bench`` zero-band gates)
-while new consumers — the run-log exporter, the health monitors, the
-step-phase tracer — read the same rows through the bus directly.
+Historically this module owned three process-local sinks; those became the
+typed metrics bus (``repro.obs.bus``) and the named read/write API now
+lives in ``repro.obs.metrics`` (same functions, same streams, numerics
+pinned bit-for-bit by the ``layer_sparsity`` / ``memory_bench`` zero-band
+gates). Importing this module warns once per process; update imports::
 
-Stream mapping (see ``repro.obs.streams`` for the declared schemas):
-
-* ``emit``/``rows``/``summary``            -> stream ``"dither"``
-* ``emit_comm``/``comm_rows``/...          -> stream ``"comm"``
-* ``emit_memory``/``memory_rows``/...      -> stream ``"memory"``
-
-This remains a single-host debugging/telemetry path — the policy flag
-``collect_stats`` defaults to False and stays off for pjit multi-device
-runs.
+    from repro.core import stats as statslib      # old
+    from repro.obs import metrics as statslib     # new
 """
 from __future__ import annotations
 
-from typing import Dict, List
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.obs.metrics import (  # noqa: F401
+    STREAM_COMM, STREAM_DITHER, STREAM_MEMORY, _drain, comm_rows,
+    comm_summary, comm_tags, emit, emit_comm, emit_memory, memory_rows,
+    memory_summary, memory_tags, overall_max_bits,
+    overall_residual_compression, overall_sparsity, reset, row_count, rows,
+    rows_since, summary, tags)
 
-from repro.core.nsd import QuantStats
-from repro.obs.bus import get_bus
-
-STREAM_DITHER = "dither"
-STREAM_COMM = "comm"
-STREAM_MEMORY = "memory"
-
-
-def reset() -> None:
-    """Clear every stream on the default bus (all legacy sinks at once)."""
-    get_bus().reset()
-
-
-def _drain() -> None:
-    """Block until in-flight io_callbacks have landed (readers call this:
-    emissions from a dispatched-but-undrained step would otherwise race)."""
-    jax.effects_barrier()
-
-
-# ---------------------------------------------------------------------------
-# dither sparsity / bit-width / delta (stream "dither")
-# ---------------------------------------------------------------------------
-
-def emit(tag: str, stats: QuantStats) -> None:
-    """Call from inside a (possibly jitted) backward pass."""
-    row = jnp.stack(
-        [stats.sparsity, stats.max_bitwidth, stats.delta.astype(jnp.float32)]
-    )
-    get_bus().emit(STREAM_DITHER, tag, row)
-
-
-def rows(tag: str) -> np.ndarray:
-    """(n, 3) array of [sparsity, bits, delta] records for a tag."""
-    return get_bus().rows(STREAM_DITHER, tag)
-
-
-def rows_since(tag: str, start: int) -> np.ndarray:
-    """Records from index ``start`` on, without restacking the history —
-    per-step consumers (the sparsity controller's telemetry window) stay
-    O(new records) instead of O(run length) per tick."""
-    return get_bus().rows_since(STREAM_DITHER, tag, start)
-
-
-def row_count(tag: str) -> int:
-    return get_bus().row_count(STREAM_DITHER, tag)
-
-
-def tags() -> List[str]:
-    return get_bus().tags(STREAM_DITHER)
-
-
-def summary() -> Dict[str, Dict[str, float]]:
-    """Per-tag mean sparsity, worst-case bits — the Table-1 aggregation."""
-    out = {}
-    for tag in tags():
-        r = rows(tag)
-        if len(r) == 0:
-            continue
-        out[tag] = {
-            "mean_sparsity": float(r[:, 0].mean()),
-            "max_bits": float(r[:, 1].max()),
-            "mean_bits": float(r[:, 1].mean()),
-            "n_records": int(len(r)),
-        }
-    return out
-
-
-def overall_sparsity() -> float:
-    """Average sparsity over every recorded layer x step, as in Table 1."""
-    all_rows = [rows(t) for t in tags()]
-    all_rows = [r for r in all_rows if len(r)]
-    if not all_rows:
-        return float("nan")
-    cat = np.concatenate(all_rows, axis=0)
-    return float(cat[:, 0].mean())
-
-
-def overall_max_bits() -> float:
-    all_rows = [rows(t) for t in tags()]
-    all_rows = [r for r in all_rows if len(r)]
-    if not all_rows:
-        return float("nan")
-    cat = np.concatenate(all_rows, axis=0)
-    return float(cat[:, 1].max())
-
-
-# ---------------------------------------------------------------------------
-# comm counters: bytes-on-wire of compressed gradient exchange
-# ---------------------------------------------------------------------------
-
-def emit_comm(tag: str, wire_bytes: jax.Array, dense_bytes: jax.Array) -> None:
-    """Record one exchange's (wire, dense) byte counts from inside jit."""
-    row = jnp.stack([jnp.asarray(wire_bytes, jnp.float32),
-                     jnp.asarray(dense_bytes, jnp.float32)])
-    get_bus().emit(STREAM_COMM, tag, row)
-
-
-def comm_rows(tag: str) -> np.ndarray:
-    """(n, 2) array of [wire_bytes, dense_bytes] records for a tag."""
-    return get_bus().rows(STREAM_COMM, tag)
-
-
-def comm_tags() -> List[str]:
-    return get_bus().tags(STREAM_COMM)
-
-
-def comm_summary() -> Dict[str, Dict[str, float]]:
-    """Per-tag total wire/dense bytes and the achieved compression ratio."""
-    out = {}
-    for tag in comm_tags():
-        r = comm_rows(tag)
-        if len(r) == 0:
-            continue
-        wire, dense = float(r[:, 0].sum()), float(r[:, 1].sum())
-        out[tag] = {
-            "wire_bytes": wire,
-            "dense_bytes": dense,
-            "ratio": wire / dense if dense else float("nan"),
-            "n_records": int(len(r)),
-        }
-    return out
-
-
-# ---------------------------------------------------------------------------
-# residual-memory counters: bytes the backward keeps alive per layer
-# ---------------------------------------------------------------------------
-
-def emit_memory(tag: str, measured_bytes: jax.Array, capacity_bytes,
-                dense_bytes) -> None:
-    """Record one layer's (measured, capacity, dense) residual byte counts
-    from inside a (possibly jitted) custom_vjp forward."""
-    row = jnp.stack([jnp.asarray(measured_bytes, jnp.float32),
-                     jnp.asarray(capacity_bytes, jnp.float32),
-                     jnp.asarray(dense_bytes, jnp.float32)])
-    get_bus().emit(STREAM_MEMORY, tag, row)
-
-
-def memory_rows(tag: str) -> np.ndarray:
-    """(n, 3) array of [measured, capacity, dense] byte records for a tag."""
-    return get_bus().rows(STREAM_MEMORY, tag)
-
-
-def memory_tags() -> List[str]:
-    return get_bus().tags(STREAM_MEMORY)
-
-
-def memory_summary() -> Dict[str, Dict[str, float]]:
-    """Per-tag residual byte totals and the two compression factors:
-    ``capacity_compression`` (dense / HBM-resident capacity — size batch
-    headroom from THIS one) and ``occupancy_compression`` (dense /
-    wire-equivalent measured bytes — what a byte-true compacted store
-    would achieve)."""
-    out = {}
-    for tag in memory_tags():
-        r = memory_rows(tag)
-        if len(r) == 0:
-            continue
-        measured, cap, dense = (float(r[:, i].sum()) for i in range(3))
-        out[tag] = {
-            "measured_bytes": measured,
-            "capacity_bytes": cap,
-            "dense_bytes": dense,
-            "occupancy_compression": (dense / measured if measured
-                                      else float("nan")),
-            "capacity_compression": dense / cap if cap else float("nan"),
-            "n_records": int(len(r)),
-        }
-    return out
-
-
-def overall_residual_compression(prefix: str = "", *,
-                                 capacity: bool = False) -> float:
-    """dense/measured (or dense/capacity) over every recorded layer x step
-    under a tag prefix."""
-    col = 1 if capacity else 0
-    stored = dense = 0.0
-    for tag in memory_tags():
-        if not tag.startswith(prefix):
-            continue
-        r = memory_rows(tag)
-        if len(r):
-            stored += float(r[:, col].sum())
-            dense += float(r[:, 2].sum())
-    if stored <= 0:
-        return float("nan")
-    return dense / stored
+warnings.warn(
+    "repro.core.stats is deprecated; import repro.obs.metrics instead "
+    "(same API over the same metrics bus)",
+    DeprecationWarning, stacklevel=2)

@@ -7,12 +7,18 @@ ops) at constant final accuracy. We reproduce the experiment by simulating
 N nodes: per-node sub-batches, per-node dither keys (folded from the worker
 index), gradient averaging, shared parameters.
 
-The communication side lives in ``repro.comm``: ``make_ssgd_step`` takes an
-optional ``CommPolicy`` that routes each node's gradient through the packed
-NSD wire format (or int8 / top-k+EF) before the server-side reduce, with
-measured bytes-on-wire telemetry. ``int8_allreduce_sim`` and the re-exported
-``topk_error_feedback`` / ``ErrorFeedbackState`` (now implemented in
-``repro.comm.compression``) remain for the single-tensor analogues.
+The communication side is one call: ``make_ssgd_step`` builds a
+``repro.comm.reducer`` from the optional ``CommPolicy`` and the step
+routes the stacked node gradients through ``Reducer.reduce`` — topology
+dispatch (ps / ring / hier / butterfly), per-leaf keys, wire telemetry
+and overlap bucketing all live behind that protocol now. Error-feedback
+residual state is threaded through the step (``comm_state`` in, new state
+out) so elastic restarts can checkpoint and migrate it; see
+``repro.train.fault_tolerance``.
+
+``int8_allreduce_sim`` and the re-exported ``topk_error_feedback`` /
+``ErrorFeedbackState`` (implemented in ``repro.comm.compression``) remain
+for the single-tensor analogues.
 """
 from __future__ import annotations
 
@@ -23,21 +29,15 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.comm.compression import (TOPO_HIER, TOPO_PS, CommPolicy,
-                                    ErrorFeedbackState, compress_leaf,
+from repro.comm.compression import (TOPO_PS, CommPolicy, ErrorFeedbackState,
                                     topk_error_feedback)
-from repro.comm import hierarchy as hier_mod
-from repro.comm import ring as ring_mod
-from repro.comm.hierarchy import hier_allreduce_nsd
-from repro.comm.ring import ring_allreduce_nsd
+from repro.comm.reducer import reducer as comm_reducer
 from repro.core import nsd
-from repro.core import stats as statslib
-from repro.core.policy import DitherCtx, DitherPolicy, name_salt
+from repro.core.policy import DitherCtx, DitherPolicy
 from repro.core.schedule import PolicyProgram, as_program
 from repro.obs.trace import annotate
 from repro.models.api import Model
 from repro.optim import OptConfig, apply_updates
-from repro.utils.pytree import tree_map_with_path_str
 
 __all__ = ["SSGDConfig", "ErrorFeedbackState", "int8_allreduce_sim",
            "make_ssgd_step", "shard_batch", "topk_error_feedback"]
@@ -61,8 +61,9 @@ class SSGDConfig:
 def make_ssgd_step(model: Model, opt_cfg: OptConfig, dcfg: SSGDConfig,
                    base_policy: DitherPolicy | PolicyProgram,
                    comm_policy: Optional[CommPolicy] = None, *,
-                   phase_step: int = 0, memory=None):
-    """One SSGD step: N per-node dithered grads -> server average -> update.
+                   phase_step: int = 0, memory=None, grad_accum: int = 1,
+                   mesh=None):
+    """One SSGD step: N per-node dithered grads -> reduce -> update.
 
     The batch leaves must have a leading (n_nodes, per_node_batch, ...) axis.
     Per-node dither keys are folded from (step, worker) so noise is i.i.d.
@@ -78,19 +79,34 @@ def make_ssgd_step(model: Model, opt_cfg: OptConfig, dcfg: SSGDConfig,
     used verbatim (its author owns the s/N trade). The static variant
     phase is the one active at ``phase_step``.
 
-    With ``comm_policy`` the node->server hop goes through the wire: each
-    node's gradient leaves are compressed per the policy (per-node keys, so
-    the comm-side NSD noise also cancels in the average) and the step's
-    metrics gain ``comm_wire_bytes`` / ``comm_dense_bytes``.
+    With ``comm_policy`` the node gradients cross the wire through a
+    ``repro.comm.reducer`` built once here: topology ("ps" keeps the
+    parameter-server shape, "ring"/"hier"/"butterfly" run the compressed
+    all-reduces; ``bucket_bytes`` > 0 overlap-buckets any of them), keys,
+    telemetry and error feedback all live behind that protocol. Step
+    metrics gain ``comm_wire_bytes`` / ``comm_dense_bytes`` (plus
+    ``comm_error_bound`` and the ICI/DCN byte split on the all-reduce
+    topologies).
 
-    ``comm_policy.topology`` selects how that reduce is organized: the
-    default "ps" keeps the parameter-server shape above; "ring" and "hier"
-    replace the compress-then-average with the corresponding compressed
-    all-reduce from ``repro.comm`` (flat ring / intra-pod ring + inter-pod
-    tree with ``comm_policy.pods`` pods), whose re-dithered partial sums
-    are what a real deployment would put on the wire. Those topologies add
-    ``comm_error_bound`` (the reduce's pointwise bound vs the dense mean)
-    to the step metrics.
+    ``grad_accum`` > 1 accumulates that many micro-batches per node (each
+    with its own micro dither key, matching the Trainer's scan) BEFORE
+    the reduce, so gradients are dithered and packed once per accumulated
+    step, not once per micro-batch — wire bytes and EF residual updates
+    are identical to a single-micro step of the same effective batch.
+
+    The returned step is
+
+        step_fn(params, opt_state, batch, key, ctrl=None, comm_state=None)
+            -> (params, opt_state, metrics, comm_state)
+
+    ``comm_state`` carries error-feedback residuals for leaves the policy
+    routes through ``topk_ef`` (node-count independent, applied to the
+    reduced mean) — seed it with ``repro.comm.init_comm_state(params,
+    comm_policy)`` or the reducer's ``init_state`` and thread it through
+    steps; checkpoint it to survive restarts and elastic resizes.
+    Migration note: before the reducer redesign this function returned a
+    3-tuple and took no ``comm_state`` — see README "Distributed
+    training" for the table.
 
     ``memory`` is a ``repro.memory`` MemoryPolicy (or spec string)
     selecting each dithered layer's residual codec / remat on every node —
@@ -104,6 +120,18 @@ def make_ssgd_step(model: Model, opt_cfg: OptConfig, dcfg: SSGDConfig,
         program = program.replace(base=base_policy.replace(s=dcfg.s_for_n()))
     policy = program.phase_policy_at(phase_step)
     memory = as_memory_policy(memory)
+    if grad_accum < 1:
+        raise ValueError(f"grad_accum must be >= 1, got {grad_accum}")
+
+    red = None
+    if comm_policy is not None:
+        eff_policy = comm_policy
+        if comm_policy.topology != TOPO_PS and dcfg.n_nodes == 1:
+            # a 1-node all-reduce has no wire; keep the historical behavior
+            # of still measuring the ps-shaped compression
+            eff_policy = comm_policy.replace(topology=TOPO_PS)
+        red = comm_reducer(eff_policy, mesh, n_nodes=dcfg.n_nodes,
+                           stacked=True)
 
     def node_grad(params, node_batch, base_key, step, worker, ctrl):
         ctx = DitherCtx.for_step(base_key, step, policy, worker=worker,
@@ -113,126 +141,70 @@ def make_ssgd_step(model: Model, opt_cfg: OptConfig, dcfg: SSGDConfig,
             lambda p: model.loss(p, node_batch, ctx=ctx))(params)
         return loss, grads
 
-    def compress_node_grads(grads, base_key, step):
-        """Per-node, per-leaf wire compression before the server reduce.
-
-        Reuses ``repro.comm.compression.compress_leaf`` (vmapped over the
-        node axis) so wire-byte accounting has a single source of truth.
-        EF is not available here (per-node residual state lives with the
-        node, not the step), so topk_ef leaves fall back to NSD packing.
-        """
-        totals = {"wire": jnp.float32(0.0), "dense": jnp.float32(0.0)}
-
-        def leaf(name: str, g_nodes: jax.Array) -> jax.Array:
-            size = int(g_nodes.size) // dcfg.n_nodes
-            mode = comm_policy.mode_for(name, size)
-            if mode == "topk_ef":
-                mode = "nsd"
-            dense_bytes = jnp.float32(4 * size * dcfg.n_nodes)
-            totals["dense"] = totals["dense"] + dense_bytes
-            if mode == "dense":
-                totals["wire"] = totals["wire"] + dense_bytes
-                return g_nodes
-            k0 = jax.random.fold_in(
-                jax.random.fold_in(base_key, step), name_salt(name))
-
-            def one(g, worker):
-                kw = jax.random.fold_in(k0, worker)
-                g_hat, wire, _ = compress_leaf(g, kw, mode, comm_policy)
-                return g_hat, wire.astype(jnp.float32)
-
-            g_hat, wires = jax.vmap(one)(g_nodes,
-                                         jnp.arange(dcfg.n_nodes))
-            totals["wire"] = totals["wire"] + jnp.sum(wires)
-            return g_hat
-
-        grads = tree_map_with_path_str(leaf, grads)
-        return grads, totals
-
-    def allreduce_node_grads(grads, base_key, step):
-        """Topology-selected compressed all-reduce of the stacked grads.
-
-        Per-leaf: compressible leaves go through the ring/hierarchy sim
-        (``repro.comm.ring`` / ``repro.comm.hierarchy`` — identical math
-        to the shard_map programs), returning the already-averaged tree;
-        dense leaves average exactly. The compressed reduce's wire format
-        IS packed NSD, so int8/topk_ef leaf modes degrade to ``nsd`` on
-        this path (as ``compress_node_grads`` already does for topk_ef:
-        per-node EF residual state lives with the node, not the step).
-        Every leaf's ``dense`` counterfactual is the byte count the SAME
-        topology would move at f32 (``dense_reduce_bytes``), so the
-        wire/dense ratio compares like for like.
-        """
-        cfg = comm_policy.reduce_cfg()
-        n = dcfg.n_nodes
-        totals = {"wire": jnp.float32(0.0), "dense": jnp.float32(0.0),
-                  "bound": jnp.float32(0.0)}
-
-        def topo_dense_bytes(size: int) -> float:
-            if comm_policy.topology == TOPO_HIER:
-                return hier_mod.dense_reduce_bytes(
-                    size, comm_policy.pods, n // comm_policy.pods,
-                    comm_policy.chunk)
-            return ring_mod.dense_reduce_bytes(size, n, comm_policy.chunk)
-
-        def leaf(name: str, g_nodes: jax.Array) -> jax.Array:
-            size = int(g_nodes.size) // n
-            mode = comm_policy.mode_for(name, size)
-            if mode == "dense":
-                db = jnp.float32(topo_dense_bytes(size))
-                totals["dense"] = totals["dense"] + db
-                totals["wire"] = totals["wire"] + db
-                return jnp.mean(g_nodes, axis=0)
-            k0 = jax.random.fold_in(
-                jax.random.fold_in(base_key, step), name_salt(name))
-            if comm_policy.topology == TOPO_HIER:
-                mean, tele = hier_allreduce_nsd(g_nodes, k0, cfg)
-            else:
-                mean, tele = ring_allreduce_nsd(g_nodes, k0, cfg)
-            totals["wire"] = totals["wire"] + tele.wire_bytes
-            totals["dense"] = totals["dense"] + tele.dense_bytes
-            totals["bound"] = jnp.maximum(totals["bound"], tele.error_bound)
-            return mean
-
-        grads = tree_map_with_path_str(leaf, grads)
-        return grads, totals
-
-    def ssgd_step(params, opt_state, sharded_batch, base_key, ctrl=None):
-        step = opt_state["step"]
+    def all_node_grads(params, sharded_batch, base_key, step, ctrl):
         workers = jnp.arange(dcfg.n_nodes)
-        with annotate("ssgd/grad"):
-            losses, grads = jax.vmap(
+        if grad_accum == 1:
+            return jax.vmap(
                 lambda b, w: node_grad(params, b, base_key, step, w, ctrl),
                 in_axes=(0, 0))(sharded_batch, workers)
+
+        # (n, ga*b, ...) -> (ga, n, b, ...): scan over micro-batches, each
+        # with its own micro key (Trainer idiom), accumulate before reduce
+        def micros(x):
+            n, total = x.shape[0], x.shape[1]
+            assert total % grad_accum == 0, (total, grad_accum)
+            return x.reshape((n, grad_accum, total // grad_accum)
+                             + x.shape[2:]).swapaxes(0, 1)
+
+        mbs = jax.tree.map(micros, sharded_batch)
+
+        def one_micro(carry, xs):
+            i, mb = xs
+            k_i = jax.random.fold_in(base_key, i)
+            losses_i, grads_i = jax.vmap(
+                lambda b, w: node_grad(params, b, k_i, step, w, ctrl),
+                in_axes=(0, 0))(mb, workers)
+            acc_l, acc_g = carry
+            return (acc_l + losses_i,
+                    jax.tree.map(jnp.add, acc_g, grads_i)), None
+
+        init = (jnp.zeros((dcfg.n_nodes,), jnp.float32),
+                jax.tree.map(
+                    lambda p: jnp.zeros((dcfg.n_nodes,) + p.shape, p.dtype),
+                    params))
+        (losses, grads), _ = jax.lax.scan(
+            one_micro, init, (jnp.arange(grad_accum), mbs))
+        inv = 1.0 / grad_accum
+        return losses * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def ssgd_step(params, opt_state, sharded_batch, base_key, ctrl=None,
+                  comm_state=None):
+        step = opt_state["step"]
+        with annotate("ssgd/grad"):
+            losses, grads = all_node_grads(params, sharded_batch, base_key,
+                                           step, ctrl)
         comm_metrics = {}
-        reduced = False
-        if comm_policy is not None:
-            if comm_policy.topology != TOPO_PS and dcfg.n_nodes > 1:
-                with annotate("ssgd/reduce"):
-                    grads, totals = allreduce_node_grads(
-                        grads, base_key, step)
-                comm_metrics = {"comm_wire_bytes": totals["wire"],
-                                "comm_dense_bytes": totals["dense"],
-                                "comm_error_bound": totals["bound"]}
-                reduced = True
-            else:
-                with annotate("ssgd/reduce"):
-                    grads, totals = compress_node_grads(
-                        grads, base_key, step)
-                comm_metrics = {"comm_wire_bytes": totals["wire"],
-                                "comm_dense_bytes": totals["dense"]}
-            if comm_policy.collect_stats:
-                statslib.emit_comm(comm_policy.stats_tag, totals["wire"],
-                                   totals["dense"])
-        if not reduced:
-            # parameter server: average the (already noisy) node gradients
+        if red is not None:
+            with annotate("ssgd/reduce"):
+                grads, tele, comm_state = red.reduce(
+                    grads, base_key, step, comm_state)
+            comm_metrics = {"comm_wire_bytes": tele.wire_bytes,
+                            "comm_dense_bytes": tele.dense_bytes}
+            if red.topology != TOPO_PS:
+                comm_metrics.update(
+                    comm_error_bound=tele.error_bound,
+                    comm_wire_ici_bytes=tele.wire_ici_bytes,
+                    comm_wire_dcn_bytes=tele.wire_dcn_bytes,
+                    comm_peak_dcn_bytes=tele.peak_dcn_bytes)
+        else:
+            # no wire: plain server-side average of the noisy node grads
             grads = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
         with annotate("ssgd/update"):
             params, opt_state, metrics = apply_updates(
                 params, grads, opt_state, opt_cfg)
         metrics["loss"] = jnp.mean(losses)
         metrics.update(comm_metrics)
-        return params, opt_state, metrics
+        return params, opt_state, metrics, comm_state
 
     return jax.jit(ssgd_step), policy
 

@@ -109,6 +109,71 @@ def price_step_comm(wire_bytes: float, *, pods: int = 1,
     }
 
 
+def price_overlap(bucket_bytes, bucket_comm_s, *, bwd_s: float,
+                  ready_s=None) -> Dict[str, object]:
+    """Price an overlap schedule: how much comm time backward hides.
+
+    ``bucket_bytes`` are the per-bucket gradient bytes in LAUNCH order
+    (bucket 0 = last layers, ready first — see
+    ``repro.comm.overlap.BucketPlan``) and ``bucket_comm_s`` the seconds
+    each bucket's reduce occupies the link (modeled via
+    :func:`price_reduce` / :func:`price_wire_bytes`, or measured host
+    timings — same recurrence either way, which is what makes
+    modeled-vs-measured overlap efficiency a meaningful gate).
+
+    Ready times default to the backward-progress proxy: bucket i's
+    gradients exist once its share of backward compute is done, taken
+    proportional to cumulative gradient bytes —
+    ``ready_i = bwd_s * cum_bytes_i / total_bytes``. Pass ``ready_s`` to
+    override (e.g. measured grad-availability stamps).
+
+    The link is serial, so launches queue::
+
+        start_i = max(ready_i, end_{i-1});   end_i = start_i + comm_i
+
+    ``exposed_s`` is the comm tail sticking out past backward
+    (``max(0, end_last - bwd_s)``), ``hidden_s`` the rest, and
+    ``overlap_efficiency = hidden_s / total_comm_s`` (1.0 = fully
+    hidden; a blocking reduce scores 0.0). ``step_s`` vs ``serial_s``
+    is the wall-clock the schedule buys.
+    """
+    bb = [float(b) for b in bucket_bytes]
+    cc = [float(c) for c in bucket_comm_s]
+    if len(bb) != len(cc):
+        raise ValueError(f"bucket_bytes ({len(bb)}) and bucket_comm_s "
+                         f"({len(cc)}) must align")
+    total_bytes = sum(bb)
+    if ready_s is None:
+        cum = 0.0
+        ready = []
+        for b in bb:
+            cum += b
+            ready.append(bwd_s * (cum / total_bytes if total_bytes else 1.0))
+    else:
+        ready = [float(r) for r in ready_s]
+    launch, drain = [], []
+    end = 0.0
+    for r, c in zip(ready, cc):
+        start = max(r, end)
+        end = start + c
+        launch.append(start)
+        drain.append(end)
+    total_comm = sum(cc)
+    exposed = max(0.0, (drain[-1] if drain else 0.0) - float(bwd_s))
+    hidden = total_comm - exposed
+    return {
+        "launch_s": launch,
+        "drain_s": drain,
+        "total_comm_s": total_comm,
+        "exposed_s": exposed,
+        "hidden_s": hidden,
+        "overlap_efficiency": (hidden / total_comm) if total_comm > 0
+        else 1.0,
+        "step_s": max(float(bwd_s), drain[-1] if drain else 0.0),
+        "serial_s": float(bwd_s) + total_comm,
+    }
+
+
 def compression_speedup(wire_bytes: float, dense_bytes: float) -> float:
     """How much interconnect time the packed exchange saves vs dense f32."""
     if wire_bytes <= 0:

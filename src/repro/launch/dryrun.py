@@ -331,15 +331,18 @@ def main() -> None:
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--dither", choices=["off", "paper", "int8", "row"],
                     default="paper")
+    ap.add_argument("--program", default="",
+                    help="unified run program with 'dither:'/'memory:'/"
+                    "'comm:' sections (see repro.launch.program); the "
+                    "dither section drives the lowered step, the memory "
+                    "section the residual accounting, and the comm "
+                    "section is validated + recorded in the run context")
     ap.add_argument("--policy-program", default="",
-                    help="per-layer/step policy program spec (see "
-                    "repro.core.schedule.parse_program); the lowered step "
-                    "bakes phase 0 and resolves rules per layer name")
+                    help="DEPRECATED: use --program \"dither: ...\" (see "
+                    "repro.core.schedule.parse_program)")
     ap.add_argument("--memory-program", default="",
-                    help="per-layer residual-memory spec (see repro.memory"
-                    "): residual codec (fp32|bf16|int8|nsd[@S]) or remat "
-                    "per dithered layer; the grid reports the resulting "
-                    "residual footprint and max-batch estimate per cell")
+                    help="DEPRECATED: use --program \"memory: ...\" (see "
+                    "repro.memory)")
     ap.add_argument("--out", default="")
     ap.add_argument("--run-dir", default="",
                     help="observability run directory: each cell's "
@@ -348,18 +351,17 @@ def main() -> None:
                     "'python -m repro.obs.report <run-dir>'")
     args = ap.parse_args()
 
+    from repro.launch.program import format_program, merge_legacy_flags
+
+    spec = merge_legacy_flags(args.program, args.policy_program,
+                              args.memory_program)
     policy = None if args.dither == "off" else DitherPolicy(variant=args.dither)
-    if args.policy_program:
-        from repro.core.schedule import parse_program
-
-        policy = parse_program(
-            args.policy_program,
-            base=policy if policy is not None else DitherPolicy(variant="off"))
-    memory = None
-    if args.memory_program:
-        from repro.memory.policy import parse_memory_program
-
-        memory = parse_memory_program(args.memory_program)
+    if spec.dither:
+        policy = spec.dither_program(
+            policy if policy is not None else DitherPolicy(variant="off"))
+    memory = spec.memory_policy()
+    spec.comm_policy()  # validate the comm section even though the grid
+    # itself prices wire bytes from the lowered HLO, not the CommPolicy
     cells = []
     if args.all:
         targets = [(a, s) for a in ARCH_IDS for s in SHAPES]
@@ -372,8 +374,7 @@ def main() -> None:
 
         runlog = RunLog(args.run_dir, context={
             "tool": "dryrun", "dither": args.dither,
-            "policy_program": args.policy_program,
-            "memory_program": args.memory_program})
+            "program": format_program(spec)})
     meshes = [False, True] if args.both_meshes else [args.multi_pod]
     from repro.obs.trace import get_tracer, span
 

@@ -1,0 +1,130 @@
+"""One ``--program`` front door for the launcher DSLs.
+
+The launchers historically grew one flag per subsystem DSL
+(``--policy-program`` for the dither schedule, ``--memory-program`` for
+residual codecs) and were about to grow a third for the comm policy. This
+module unifies them behind a single spec with section prefixes::
+
+    --program "dither: phase@0=off;phase@30=paper;rule lm_head:off \
+               memory: default=nsd;rule fc0:int8 \
+               comm: topology=butterfly;pods=4;bucket_bytes=1048576"
+
+A section starts at a whitespace-separated token beginning with one of
+``dither:`` / ``memory:`` / ``comm:``; everything until the next section
+marker belongs to it and is handed VERBATIM to that subsystem's existing
+parser (``repro.core.schedule.parse_program``,
+``repro.memory.policy.parse_memory_program``,
+``repro.comm.reducer.parse_comm_program``) — this module owns only the
+splitting, so each DSL's grammar stays where it lives. Colons inside
+clauses (``rule lm_head:off``) never start a section because only the
+three known prefixes do.
+
+``--policy-program`` / ``--memory-program`` remain as deprecated aliases
+(merged into the corresponding section; collisions are errors), see
+``merge_legacy_flags``. Round-trip pinned by tests/test_program.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional
+
+SECTIONS = ("dither", "memory", "comm")
+
+__all__ = ["SECTIONS", "LaunchSpec", "format_program", "merge_legacy_flags",
+           "parse_program"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchSpec:
+    """The three raw DSL sections of one ``--program`` spec."""
+
+    dither: str = ""
+    memory: str = ""
+    comm: str = ""
+
+    def dither_program(self, base):
+        """Resolve the dither section to a PolicyProgram over ``base``."""
+        from repro.core.schedule import parse_program as parse_dither
+        return parse_dither(self.dither, base=base) if self.dither else None
+
+    def memory_policy(self):
+        """Resolve the memory section to a MemoryPolicy (None if empty)."""
+        if not self.memory:
+            return None
+        from repro.memory.policy import parse_memory_program
+        return parse_memory_program(self.memory)
+
+    def comm_policy(self, base=None):
+        """Resolve the comm section to a CommPolicy (None if empty)."""
+        if not self.comm:
+            return None
+        from repro.comm.reducer import parse_comm_program
+        return parse_comm_program(self.comm, base)
+
+
+def parse_program(spec: str) -> LaunchSpec:
+    """Split a ``--program`` spec into its sections.
+
+    The spec must START with a section marker — a bare DSL string is
+    ambiguous (which subsystem?), so it is an error that names the legacy
+    single-purpose flags as the migration hint.
+    """
+    sections = {name: [] for name in SECTIONS}
+    current: Optional[str] = None
+    for tok in spec.split():
+        for name in SECTIONS:
+            prefix = name + ":"
+            if tok.startswith(prefix):
+                if sections[name]:
+                    raise ValueError(
+                        f"duplicate {prefix!r} section in --program spec")
+                current = name
+                tok = tok[len(prefix):]
+                break
+        if current is None:
+            raise ValueError(
+                f"--program spec must start with a section prefix "
+                f"({', '.join(s + ':' for s in SECTIONS)}); got {tok!r}. "
+                "Migrating from --policy-program? That string goes under "
+                "'dither:'; --memory-program under 'memory:'.")
+        if tok:
+            sections[current].append(tok)
+    return LaunchSpec(**{name: " ".join(parts)
+                         for name, parts in sections.items()})
+
+
+def format_program(spec: LaunchSpec) -> str:
+    """Render a LaunchSpec back to ``--program`` text (parse round-trips)."""
+    parts = []
+    for name in SECTIONS:
+        body = getattr(spec, name)
+        if body:
+            parts.append(f"{name}: {body}")
+    return " ".join(parts)
+
+
+def merge_legacy_flags(program: str, policy_program: str = "",
+                       memory_program: str = "") -> LaunchSpec:
+    """Combine ``--program`` with the deprecated per-DSL flags.
+
+    Each legacy flag maps onto its section; supplying both the flag AND
+    that section in ``--program`` is a hard error (silently preferring
+    one would mask a config mistake). Legacy flags warn.
+    """
+    spec = parse_program(program) if program else LaunchSpec()
+    for flag, field, value in (("--policy-program", "dither",
+                                policy_program),
+                               ("--memory-program", "memory",
+                                memory_program)):
+        if not value:
+            continue
+        warnings.warn(
+            f"{flag} is deprecated; use --program \"{field}: {value}\"",
+            DeprecationWarning, stacklevel=2)
+        if getattr(spec, field):
+            raise ValueError(
+                f"{flag} conflicts with the '{field}:' section of "
+                "--program; specify one")
+        spec = dataclasses.replace(spec, **{field: value})
+    return spec

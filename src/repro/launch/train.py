@@ -19,8 +19,8 @@ import jax
 
 from repro.configs import ARCH_IDS, get_model, get_smoke_model
 from repro.core.policy import DitherPolicy
-from repro.core.schedule import parse_program
 from repro.data import TokenStreamConfig, token_batch
+from repro.launch.program import format_program, merge_legacy_flags
 from repro.optim import OptConfig
 from repro.train import Trainer, TrainerConfig
 from repro.utils import get_logger
@@ -62,17 +62,22 @@ def main() -> None:
     ap.add_argument("--dither", choices=["off", "paper", "int8", "row",
                                          "meprop"], default="paper")
     ap.add_argument("--s", type=float, default=2.0)
+    ap.add_argument("--program", default="",
+                    help="unified run program with 'dither:'/'memory:'/"
+                    "'comm:' sections, e.g. \"dither: phase@0=off;"
+                    "phase@30=paper;rule lm_head:off memory: default=nsd;"
+                    "rule fc0:int8 comm: topology=butterfly;pods=4;"
+                    "bucket_bytes=1048576\" (see repro.launch.program). "
+                    "The dither section builds on --dither/--s as the "
+                    "base policy; the comm section attaches a gradient "
+                    "CommPolicy to the trainer.")
     ap.add_argument("--policy-program", default="",
-                    help="per-layer/step policy program spec, e.g. "
-                    "'phase@0=off;phase@30=paper;s=lin(30,200,4.0,2.0);"
-                    "rule lm_head:off' (see repro.core.schedule). Built on "
-                    "top of --dither/--s as the base policy.")
+                    help="DEPRECATED: use --program \"dither: ...\". "
+                    "Per-layer/step policy program spec "
+                    "(see repro.core.schedule).")
     ap.add_argument("--memory-program", default="",
-                    help="per-layer residual-memory spec, e.g. "
-                    "'default=nsd;rule fc0:int8;rule c*:remat' (see "
-                    "repro.memory): which codec (fp32|bf16|int8|nsd[@S]) "
-                    "or remat each dithered layer's saved forward "
-                    "residual gets.")
+                    help="DEPRECATED: use --program \"memory: ...\". "
+                    "Per-layer residual-memory spec (see repro.memory).")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="")
@@ -93,14 +98,17 @@ def main() -> None:
 
     model = (get_smoke_model if args.preset == "smoke" else get_model)(
         args.arch)
+    spec = merge_legacy_flags(args.program, args.policy_program,
+                              args.memory_program)
     policy = (None if args.dither == "off"
               else DitherPolicy(variant=args.dither, s=args.s))
-    if args.policy_program:
+    if spec.dither:
         # --dither off stays off as the base: only explicit program clauses
         # (phases / rule variants) re-enable dithering
         base = (policy if policy is not None
                 else DitherPolicy(variant="off", s=args.s))
-        policy = parse_program(args.policy_program, base=base)
+        policy = spec.dither_program(base)
+    comm_policy = spec.comm_policy()
     obs = None
     if args.run_dir:
         from repro.obs import run_obs
@@ -110,8 +118,7 @@ def main() -> None:
             context={"tool": "train", "arch": args.arch,
                      "preset": args.preset, "steps": args.steps,
                      "dither": args.dither, "s": args.s,
-                     "policy_program": args.policy_program,
-                     "memory_program": args.memory_program},
+                     "program": format_program(spec)},
             escalate=args.escalate_monitors)
     trainer = Trainer(
         model,
@@ -123,7 +130,8 @@ def main() -> None:
                       ckpt_dir=args.ckpt_dir,
                       ckpt_every=args.ckpt_every),
         policy=policy,
-        memory_policy=args.memory_program or None,
+        comm_policy=comm_policy,
+        memory_policy=spec.memory or None,
         obs=obs,
     )
     fn = batch_fn_for(model, args.batch, args.seq)

@@ -214,6 +214,13 @@ class RunObs:
         if "comm_error_bound" in metrics:
             bus.record("bound", "reduce",
                        [float(step), float(metrics["comm_error_bound"])])
+        if "overlap_efficiency" in metrics:
+            bus.record("overlap", "reduce",
+                       [float(step),
+                        float(metrics.get("overlap_n_buckets", 0.0)),
+                        float(metrics.get("overlap_hidden_s", 0.0)),
+                        float(metrics.get("overlap_exposed_s", 0.0)),
+                        float(metrics["overlap_efficiency"])])
         with self.tracer.span("monitor"):
             self.monitors.tick(step)
         if self.flush_every and step % self.flush_every == 0:
@@ -221,6 +228,12 @@ class RunObs:
 
     def finish(self) -> None:
         self.monitors.tick(self.tracer.step)
+        # snapshot cumulative kernel-path fallback counters into the run
+        # artifact: a structural form silently falling off the kernel path
+        # should show up in the run dir, not just in-process
+        from repro.obs import metrics as obs_metrics
+
+        obs_metrics.emit_kernel_fallbacks(bus=self.runlog.bus)
         self.runlog.close()
         set_log_context(run_id=None, step=None)
         log.info("run log closed: %s (run_id %s)", self.runlog.run_dir,

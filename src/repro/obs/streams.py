@@ -92,7 +92,21 @@ SERVE = MetricStream(
     "serve", ("tick", "active_slots", "queue_depth"),
     "serving engine occupancy per decode tick (repro.serve.engine)")
 
-BUILTIN_STREAMS = (DITHER, COMM, MEMORY, PHASE, TRAIN, BOUND, SERVE)
+# one row per priced step of an overlap-scheduled reduce; tag = stats tag
+OVERLAP = MetricStream(
+    "overlap", ("step", "n_buckets", "hidden_s", "exposed_s", "efficiency"),
+    "modeled overlap accounting of a bucketed gradient reduce "
+    "(repro.launch.costmodel.price_overlap): comm seconds hidden under "
+    "backward vs exposed past it, and their ratio")
+
+# tag = "kernels/" + fallback reason; one row per snapshot
+FALLBACK = MetricStream(
+    "fallback", ("count",),
+    "cumulative trace-time kernel-path fallback counts "
+    "(repro.kernels.ops.KERNEL_FALLBACKS), snapshotted at run end")
+
+BUILTIN_STREAMS = (DITHER, COMM, MEMORY, PHASE, TRAIN, BOUND, SERVE,
+                   OVERLAP, FALLBACK)
 
 
 class StreamRegistry:

@@ -1,11 +1,13 @@
 from repro.train.checkpoint import CheckpointManager, list_steps
 from repro.train.fault_tolerance import (
-    PreemptionGuard, RestartPlan, StragglerConfig, StragglerDetector,
-    StaticHealthSource, make_restart_plan, plan_elastic_mesh,
+    ElasticSSGD, PreemptionGuard, RestartPlan, StragglerConfig,
+    StragglerDetector, StaticHealthSource, make_restart_plan,
+    plan_elastic_mesh, snap_pods,
 )
 from repro.train.trainer import Trainer, TrainerConfig
 
-__all__ = ["CheckpointManager", "list_steps", "PreemptionGuard",
+__all__ = ["CheckpointManager", "list_steps", "ElasticSSGD",
+           "snap_pods", "PreemptionGuard",
            "RestartPlan", "StragglerConfig", "StragglerDetector",
            "StaticHealthSource", "make_restart_plan", "plan_elastic_mesh",
            "Trainer", "TrainerConfig"]

@@ -138,6 +138,148 @@ def make_restart_plan(n_alive_chips: int, model_parallel: int,
 
 
 # --------------------------------------------------------------------------
+# elastic synchronous SGD: node join/leave with state migration
+# --------------------------------------------------------------------------
+
+def snap_pods(pods: int, n_nodes: int) -> int:
+    """Largest pod count <= ``pods`` that divides ``n_nodes``.
+
+    An elastic resize changes the node count under a hier/butterfly comm
+    policy whose ``pods`` may no longer divide it; the reduce needs
+    N = pods * per_pod exactly, so the pod axis snaps down (gcd keeps as
+    much inter-pod parallelism as the new world size allows).
+    """
+    import math
+    if n_nodes < 1:
+        raise ValueError(f"n_nodes must be >= 1, got {n_nodes}")
+    return max(1, math.gcd(max(pods, 1), n_nodes))
+
+
+class ElasticSSGD:
+    """Elastic driver over ``repro.distributed.make_ssgd_step``.
+
+    Runs synchronous SGD at ``n_nodes`` data-parallel workers and
+    supports node JOIN and LEAVE between steps: ``resize(n)`` migrates
+    the full training state — params, optimizer, comm error-feedback
+    residuals and sparsity-controller state — through the existing
+    checkpoint tree (save at the old world size, rebuild the step
+    function for the new one, restore). The EF residuals live
+    server-side (per LEAF, not per node — see
+    ``repro.comm.reducer._StackedPSReducer``), so the restored residuals
+    are bit-exact regardless of the node delta; tests/test_checkpoint_ft
+    pins this for both directions.
+
+    The dither scale follows ``SSGDConfig.s_for_n`` at the CURRENT world
+    size (the paper's s(N) trade rides through resizes), and a
+    hier/butterfly comm policy's pod count snaps to the new node count
+    via :func:`snap_pods`.
+    """
+
+    def __init__(self, model, opt_cfg, base_policy, comm_policy=None, *,
+                 ckpt_dir: str, n_nodes: int, s_schedule: str = "sqrt",
+                 s_base: float = 1.0, grad_accum: int = 1, keep: int = 3,
+                 phase_step: int = 0, memory=None):
+        from repro.train.checkpoint import CheckpointManager
+
+        self.model = model
+        self.opt_cfg = opt_cfg
+        self.base_policy = base_policy
+        self.comm_policy = comm_policy
+        self.s_schedule = s_schedule
+        self.s_base = s_base
+        self.grad_accum = grad_accum
+        self.phase_step = phase_step
+        self.memory = memory
+        self.ckpt = CheckpointManager(ckpt_dir, keep=keep)
+        self.params = None
+        self.opt_state = None
+        self.comm_state: Dict = {}
+        self.ctrl_state: Dict = {}
+        self.n_nodes = 0
+        self._rebuild(n_nodes)
+
+    def _rebuild(self, n_nodes: int) -> None:
+        from repro.distributed.ssgd import SSGDConfig, make_ssgd_step
+
+        comm = self.comm_policy
+        if comm is not None and comm.pods > 1:
+            comm = comm.replace(pods=snap_pods(comm.pods, n_nodes))
+        dcfg = SSGDConfig(n_nodes=n_nodes, s_schedule=self.s_schedule,
+                          s_base=self.s_base)
+        self.step_fn, self.policy = make_ssgd_step(
+            self.model, self.opt_cfg, dcfg, self.base_policy, comm,
+            phase_step=self.phase_step, memory=self.memory,
+            grad_accum=self.grad_accum)
+        self.n_nodes = n_nodes
+        self.active_comm_policy = comm
+
+    # ------------------------------------------------------------- lifecycle
+    def init(self, key) -> None:
+        """Fresh state, or restore the latest checkpoint if one exists."""
+        from repro.comm.compression import init_comm_state
+        from repro.optim import init_opt_state
+
+        self.params, _ = self.model.init(key)
+        self.opt_state = init_opt_state(self.params, self.opt_cfg)
+        self.comm_state = (init_comm_state(self.params, self.comm_policy)
+                           if self.comm_policy is not None else {})
+        if self.ckpt.latest_step() is not None:
+            self._restore()
+
+    def _ckpt_tree(self) -> Dict:
+        tree = {"params": self.params, "opt": self.opt_state}
+        if self.comm_state:
+            tree["comm"] = self.comm_state
+        if self.ctrl_state:
+            tree["ctrl"] = self.ctrl_state
+        return tree
+
+    def save(self) -> int:
+        step = int(self.opt_state["step"])
+        self.ckpt.save(step, self._ckpt_tree())
+        self.ckpt.wait()
+        return step
+
+    def _restore(self) -> None:
+        try:
+            state = self.ckpt.restore(self._ckpt_tree())
+        except KeyError:
+            # checkpoint predates a subtree (e.g. comm state grew since):
+            # restore what exists, keep the rest at init
+            state = self.ckpt.restore(
+                {"params": self.params, "opt": self.opt_state})
+        self.params = state["params"]
+        self.opt_state = state["opt"]
+        self.comm_state = state.get("comm", self.comm_state)
+        self.ctrl_state = state.get("ctrl", self.ctrl_state)
+
+    def resize(self, n_nodes: int) -> None:
+        """Node join (grow) or leave (shrink): migrate state via checkpoint.
+
+        The round trip through the checkpoint tree is deliberate — it is
+        the same path a real elastic restart takes (survivors restore
+        from disk onto the new world size), so tests exercising this
+        method certify that path, not an in-memory shortcut.
+        """
+        if n_nodes == self.n_nodes:
+            return
+        self.save()
+        self._rebuild(n_nodes)
+        self._restore()
+
+    def step(self, batch: Dict, key) -> Dict:
+        """One synchronous step; ``batch`` leaves lead with a flat batch
+        axis divisible by the current ``n_nodes``."""
+        from repro.distributed.ssgd import shard_batch
+
+        sb = shard_batch(batch, self.n_nodes)
+        self.params, self.opt_state, metrics, self.comm_state = self.step_fn(
+            self.params, self.opt_state, sb, key,
+            self.ctrl_state or None, self.comm_state or None)
+        return metrics
+
+
+# --------------------------------------------------------------------------
 # health source interface (cluster wiring boundary)
 # --------------------------------------------------------------------------
 

@@ -1,0 +1,188 @@
+"""Butterfly (recursive-halving) inter-pod reduce: consensus, tree
+differentials, DCN occupancy, and sim-vs-shard_map bit-exactness."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import stat_utils
+
+from repro.comm import (ButterflyConfig, HierConfig, butterfly_allreduce_nsd,
+                        butterfly_rounds, hier_allreduce_nsd)
+
+
+def _stack(key, n, shape):
+    return jnp.stack([jax.random.normal(jax.random.fold_in(key, i), shape)
+                      for i in range(n)])
+
+
+class TestButterflySim:
+    def test_rounds(self):
+        assert [butterfly_rounds(g) for g in (1, 2, 3, 4, 6, 8)] == \
+            [0, 1, 1, 2, 2, 3]
+
+    @pytest.mark.parametrize("n,pods", [(4, 2), (8, 4), (6, 3), (12, 3)])
+    def test_error_bounded(self, key, n, pods):
+        gs = _stack(key, n, (67,))
+        mean, tele = butterfly_allreduce_nsd(
+            gs, key, ButterflyConfig(pods=pods, s=1.0))
+        err = float(jnp.max(jnp.abs(mean - jnp.mean(gs, 0))))
+        stat_utils.assert_within_bound(err, float(tele.error_bound))
+
+    def test_g1_bit_exact_vs_tree(self, key):
+        """pods == 1: the butterfly collapses to the hierarchy's degenerate
+        path — same phase-1 packs, same final-pack key, zero tolerance."""
+        gs = _stack(key, 4, (51, 3))
+        m_b, t_b = butterfly_allreduce_nsd(gs, key, ButterflyConfig(pods=1))
+        m_h, t_h = hier_allreduce_nsd(gs, key, HierConfig(pods=1))
+        assert float(jnp.max(jnp.abs(m_b - m_h))) == 0.0
+        assert float(t_b.wire_bytes) == float(t_h.wire_bytes)
+        assert t_b.packs_per_segment == t_h.packs_per_segment
+
+    @pytest.mark.parametrize("n,pods", [(4, 2), (6, 3), (8, 4), (12, 6)])
+    def test_pack_depth_matches_tree(self, key, n, pods):
+        """Sequential pack depth per segment equals the binomial tree's at
+        every pod count, power of two or not — the same-pack-depth leg of
+        the occupancy claim."""
+        gs = _stack(key, n, (40,))
+        _, t_b = butterfly_allreduce_nsd(gs, key, ButterflyConfig(pods=pods))
+        _, t_h = hier_allreduce_nsd(gs, key, HierConfig(pods=pods))
+        assert t_b.packs_per_segment == t_h.packs_per_segment, pods
+
+    def test_peak_dcn_below_tree_at_4_pods(self, key):
+        """From pods >= 4 the tree root's log-G funnel dominates header
+        overhead and the butterfly's busiest DCN line wins."""
+        gs = _stack(key, 8, (64, 16))
+        _, t_b = butterfly_allreduce_nsd(gs, key, ButterflyConfig(pods=4))
+        _, t_h = hier_allreduce_nsd(gs, key, HierConfig(pods=4))
+        assert float(t_b.peak_dcn_bytes) <= float(t_h.peak_dcn_bytes), (
+            float(t_b.peak_dcn_bytes), float(t_h.peak_dcn_bytes))
+
+    def test_single_node_short_circuits(self, key):
+        g = jax.random.normal(key, (1, 33))
+        mean, tele = butterfly_allreduce_nsd(g, key, ButterflyConfig(pods=1))
+        assert float(jnp.max(jnp.abs(mean - g[0]))) == 0.0
+        assert float(tele.wire_bytes) == 0.0
+
+    def test_deterministic(self, key):
+        gs = _stack(key, 6, (29,))
+        cfg = ButterflyConfig(pods=3, s=2.0)
+        m1, _ = butterfly_allreduce_nsd(gs, key, cfg)
+        m2, _ = butterfly_allreduce_nsd(gs, key, cfg)
+        assert float(jnp.max(jnp.abs(m1 - m2))) == 0.0
+
+
+# --- sim vs shard_map differential (virtual multi-device) -----------------
+
+def _run_script(script: str) -> str:
+    env = dict(os.environ, PYTHONPATH=os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    return out.stdout + out.stderr
+
+
+BFLY_SHARDMAP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import functools
+    import jax, jax.numpy as jnp
+    from repro.comm import (ButterflyConfig, allreduce_butterfly,
+                            butterfly_allreduce_nsd,
+                            make_butterfly_allreduce)
+    from repro.launch.mesh import NodeTopology, make_node_mesh
+    key = jax.random.PRNGKey(0)
+    gs = jnp.stack([jax.random.normal(jax.random.fold_in(key, i), (37, 13))
+                    for i in range(8)])
+    for pods, per_pod in ((2, 4), (4, 2)):
+        mesh = make_node_mesh(NodeTopology(pods=pods, nodes_per_pod=per_pod))
+        cfg = ButterflyConfig(pods=pods, s=1.0)
+        means, w_ici, w_dcn, bounds, peak = \\
+            make_butterfly_allreduce(mesh, cfg)(gs, key)
+        sim = jax.jit(functools.partial(butterfly_allreduce_nsd, cfg=cfg))
+        sim_mean, tele = sim(gs, key)
+        # consensus: every node holds the identical result...
+        for i in range(1, 8):
+            assert float(jnp.max(jnp.abs(means[i] - means[0]))) == 0.0
+        # ...bit-exactly equal to the simulation
+        assert float(jnp.max(jnp.abs(means[0] - sim_mean))) == 0.0, pods
+        assert float(jnp.sum(w_ici)) == float(tele.wire_ici_bytes)
+        assert float(jnp.sum(w_dcn)) == float(tele.wire_dcn_bytes)
+        assert float(jnp.max(peak)) == float(tele.peak_dcn_bytes)
+        assert abs(float(bounds[0]) - float(tele.error_bound)) < 1e-6
+        # dispatcher path agrees too
+        mean_d, tele_d = allreduce_butterfly(gs, key, cfg, mesh=mesh)
+        assert float(jnp.max(jnp.abs(mean_d - sim_mean))) == 0.0
+        assert tele_d.packs_per_segment == tele.packs_per_segment
+    print("BFLY_SHARDMAP_OK")
+""")
+
+
+BFLY_NONPOW2_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=6"
+    import functools
+    import jax, jax.numpy as jnp
+    from repro.comm import (ButterflyConfig, butterfly_allreduce_nsd,
+                            make_butterfly_allreduce)
+    from repro.launch.mesh import NodeTopology, make_node_mesh
+    key = jax.random.PRNGKey(1)
+    gs = jnp.stack([jax.random.normal(jax.random.fold_in(key, i), (40,))
+                    for i in range(6)])
+    # G=3: pod 2 pre-folds into pod 0 before the single halving round
+    mesh = make_node_mesh(NodeTopology(pods=3, nodes_per_pod=2))
+    cfg = ButterflyConfig(pods=3, s=1.0)
+    means, w_ici, w_dcn, bounds, peak = \\
+        make_butterfly_allreduce(mesh, cfg)(gs, key)
+    sim_mean, tele = jax.jit(
+        functools.partial(butterfly_allreduce_nsd, cfg=cfg))(gs, key)
+    for i in range(6):
+        assert float(jnp.max(jnp.abs(means[i] - sim_mean))) == 0.0, i
+    assert float(jnp.sum(w_ici)) == float(tele.wire_ici_bytes)
+    assert float(jnp.sum(w_dcn)) == float(tele.wire_dcn_bytes)
+    err = float(jnp.max(jnp.abs(sim_mean - jnp.mean(gs, 0))))
+    assert err <= float(tele.error_bound) * 1.001
+    print("BFLY_NONPOW2_OK")
+""")
+
+
+def test_shardmap_butterfly_subprocess():
+    """Recursive halving/doubling as pairwise ppermutes over the pod axis,
+    bit-exact with the simulation (2x4 and 4x2 meshes)."""
+    out = _run_script(BFLY_SHARDMAP_SCRIPT)
+    assert "BFLY_SHARDMAP_OK" in out, out
+
+
+def test_shardmap_butterfly_nonpow2_pods_subprocess():
+    """Same differential with a non-power-of-two pod count (G=3)."""
+    out = _run_script(BFLY_NONPOW2_SCRIPT)
+    assert "BFLY_NONPOW2_OK" in out, out
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 (virtual) devices — run under "
+                           "XLA_FLAGS=--xla_force_host_platform_device_"
+                           "count=8 (the CI comm job does)")
+def test_butterfly_shardmap_inprocess(key):
+    """In-process variant for the multi-device CI job: no subprocess, so
+    failures produce a real traceback."""
+    import functools
+
+    from repro.comm import make_butterfly_allreduce
+    from repro.launch.mesh import NodeTopology, make_node_mesh
+
+    mesh = make_node_mesh(NodeTopology(pods=4, nodes_per_pod=2))
+    cfg = ButterflyConfig(pods=4, s=1.0)
+    gs = _stack(key, 8, (129,))
+    means, w_ici, w_dcn, bounds, peak = \
+        make_butterfly_allreduce(mesh, cfg)(gs, key)
+    sim_mean, tele = jax.jit(
+        functools.partial(butterfly_allreduce_nsd, cfg=cfg))(gs, key)
+    assert float(jnp.max(jnp.abs(means[0] - sim_mean))) == 0.0
+    assert float(jnp.sum(w_ici)) == float(tele.wire_ici_bytes)
+    assert float(jnp.sum(w_dcn)) == float(tele.wire_dcn_bytes)
+    assert float(jnp.max(peak)) == float(tele.peak_dcn_bytes)

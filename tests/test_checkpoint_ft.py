@@ -10,9 +10,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.train import (CheckpointManager, StragglerConfig,
+from repro.train import (CheckpointManager, ElasticSSGD, StragglerConfig,
                          StragglerDetector, list_steps, make_restart_plan,
-                         plan_elastic_mesh)
+                         plan_elastic_mesh, snap_pods)
 
 
 def _tree(key):
@@ -142,6 +142,110 @@ class TestElastic:
         assert plan.mesh_shape == (8, 16)
         assert plan.grad_accum_scale == 2  # half the data parallelism
         assert plan.restore_step == 42
+
+
+class TestSnapPods:
+    @pytest.mark.parametrize("pods,n,want", [
+        (4, 8, 4),   # divides: unchanged
+        (4, 6, 2),   # gcd(4, 6)
+        (4, 3, 1),   # coprime: collapse to flat
+        (6, 4, 2),
+        (1, 5, 1),
+        (0, 7, 1),   # degenerate pod counts clamp up
+    ])
+    def test_snaps_to_divisor(self, pods, n, want):
+        got = snap_pods(pods, n)
+        assert got == want
+        assert n % got == 0 and got <= max(pods, 1)
+
+    def test_invalid_world_size(self):
+        with pytest.raises(ValueError):
+            snap_pods(4, 0)
+
+
+class TestElasticSSGD:
+    def _driver(self, tmp_path, n_nodes, comm):
+        from repro.configs import get_smoke_model
+        from repro.core import DitherPolicy
+        from repro.optim import OptConfig
+
+        model = get_smoke_model("mamba2-370m")
+        return model, ElasticSSGD(
+            model, OptConfig(name="sgd", lr=1e-2),
+            DitherPolicy(variant="paper"), comm,
+            ckpt_dir=str(tmp_path), n_nodes=n_nodes)
+
+    def _batch(self, model, key, batch=12):
+        # 12 is divisible by every world size the tests visit (2, 4, 6)
+        return {
+            "tokens": jax.random.randint(key, (batch, 16), 0,
+                                         model.cfg.vocab),
+            "labels": jax.random.randint(key, (batch, 16), 0,
+                                         model.cfg.vocab),
+        }
+
+    def test_join_leave_migrates_ef_and_ctrl_bit_exact(self, tmp_path, key):
+        """Shrink then grow (4 -> 2 -> 6): the EF residuals and controller
+        state ride the checkpoint tree through both resizes unchanged.
+        Residuals are per LEAF on the node mean, so a world-size change
+        must not perturb them at all."""
+        from repro.comm import CommPolicy
+
+        comm = CommPolicy(default="topk_ef", topk_frac=0.25,
+                          min_leaf_size=1)
+        model, el = self._driver(tmp_path, 4, comm)
+        el.init(key)
+        for i in range(2):
+            el.step(self._batch(model, jax.random.fold_in(key, i)),
+                    jax.random.fold_in(key, 100 + i))
+        # a controller subtree as the trainer would populate it
+        el.ctrl_state = {"blocks/fc0": jnp.float32(0.125),
+                         "blocks/fc1": jnp.float32(-0.5)}
+        ref_comm = jax.tree.map(np.asarray, el.comm_state)
+        ref_params = jax.tree.map(np.asarray, el.params)
+
+        for n in (2, 6):
+            el.resize(n)
+            assert el.n_nodes == n
+            for name, st in el.comm_state.items():
+                np.testing.assert_array_equal(
+                    np.asarray(st.residual), ref_comm[name].residual,
+                    err_msg=f"{name} @ n={n}")
+            assert float(el.ctrl_state["blocks/fc0"]) == 0.125
+            assert float(el.ctrl_state["blocks/fc1"]) == -0.5
+            for a, b in zip(jax.tree.leaves(el.params),
+                            jax.tree.leaves(ref_params)):
+                np.testing.assert_array_equal(np.asarray(a), b)
+        # and training continues at the new world size
+        m = el.step(self._batch(model, key), jax.random.fold_in(key, 999))
+        assert np.isfinite(float(m["loss"]))
+
+    def test_resize_snaps_hier_pods(self, tmp_path, key):
+        """A hier policy's pod axis follows the world size: 4 nodes/2 pods
+        resized to 6 keeps pods=2; resized to 3 collapses to flat."""
+        from repro.comm import CommPolicy
+
+        comm = CommPolicy(default="nsd", s=1.0, topology="hier", pods=2)
+        model, el = self._driver(tmp_path, 4, comm)
+        el.init(key)
+        assert el.active_comm_policy.pods == 2
+        el.step(self._batch(model, key), key)
+        el.resize(6)
+        assert el.active_comm_policy.pods == 2
+        el.resize(3)
+        assert el.active_comm_policy.pods == 1
+        m = el.step(self._batch(model, key), jax.random.fold_in(key, 1))
+        assert np.isfinite(float(m["loss"]))
+
+    def test_noop_resize_skips_checkpoint(self, tmp_path, key):
+        from repro.comm import CommPolicy
+
+        comm = CommPolicy(default="nsd", s=1.0)
+        model, el = self._driver(tmp_path, 2, comm)
+        el.init(key)
+        before = el.ckpt.latest_step()
+        el.resize(2)
+        assert el.ckpt.latest_step() == before
 
 
 class TestPreemption:

@@ -15,7 +15,7 @@ from repro.comm import (CommPolicy, RingConfig, compress_tree,
                         init_comm_state, pack_nsd, ring_allreduce_nsd,
                         topk_error_feedback, unpack_nsd, wireformat)
 from repro.core import nsd
-from repro.core import stats as statslib
+from repro.obs import metrics as statslib
 from repro.kernels.pack.pack import (bitmap_pack_blocked,
                                      bitmap_unpack_blocked)
 from repro.kernels.pack.ref import (bitmap_pack_blocked_ref,
@@ -306,7 +306,7 @@ class TestIntegration:
             model, opt, dcfg, DitherPolicy(variant="paper"),
             comm_policy=CommPolicy(default="nsd", s=1.0))
         state = init_opt_state(params, opt)
-        p2, s2, m = step_fn(params, state, shard_batch(batch, 4), key)
+        p2, s2, m, _ = step_fn(params, state, shard_batch(batch, 4), key)
         assert float(m["loss"]) > 0
         wire, dense = float(m["comm_wire_bytes"]), float(m["comm_dense_bytes"])
         assert 0 < wire < dense, (wire, dense)

@@ -12,7 +12,7 @@ import pytest
 
 from repro.configs import get_smoke_model
 from repro.core import DitherPolicy, nsd
-from repro.core import stats as statslib
+from repro.obs import metrics as statslib
 from repro.distributed import (SSGDConfig, int8_allreduce_sim, make_ssgd_step,
                                shard_batch, topk_error_feedback)
 from repro.optim import OptConfig, init_opt_state
@@ -50,7 +50,7 @@ class TestSSGD:
             for trial in range(n_trials):
                 state = init_opt_state(params, opt)
                 bk = jax.random.fold_in(key, 100 + trial)
-                _, st, _ = step_fn(params, state, sb, bk)
+                _, st, _, _ = step_fn(params, state, sb, bk)
                 grads.append(st["mu"])  # momentum buffer == grads at step 1
             flat = [jnp.concatenate([g.reshape(-1) for g in
                                      jax.tree.leaves(t)]) for t in grads]
@@ -99,7 +99,7 @@ class TestSSGD:
         losses = []
         for i in range(25):
             sb = shard_batch(token_batch(tcfg, i), 4)
-            params, state, m = step_fn(params, state, sb, key)
+            params, state, m, _ = step_fn(params, state, sb, key)
             losses.append(float(m["loss"]))
         assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.05, losses
 
@@ -208,7 +208,7 @@ class TestSSGDMemoryPolicy:
 
         bk = jax.random.fold_in(key, 7)
         st = init_opt_state(params, opt)
-        p_a, _, m_a = ssgd_fn(params, st, shard_batch(batch, 1), bk)
+        p_a, _, m_a, _ = ssgd_fn(params, st, shard_batch(batch, 1), bk)
         st = init_opt_state(params, opt)
         p_b, _, m_b = train_fn(params, st, batch, bk)
 
@@ -230,8 +230,8 @@ class TestSSGDMemoryPolicy:
         fn_fp32, _ = make_ssgd_step(model, opt, dcfg, pol)
         fn_int8, _ = make_ssgd_step(model, opt, dcfg, pol,
                                     memory="default=int8")
-        p_a, _, _ = fn_fp32(params, init_opt_state(params, opt), sb, bk)
-        p_b, _, _ = fn_int8(params, init_opt_state(params, opt), sb, bk)
+        p_a, _, _, _ = fn_fp32(params, init_opt_state(params, opt), sb, bk)
+        p_b, _, _, _ = fn_int8(params, init_opt_state(params, opt), sb, bk)
         diffs = [float(np.abs(np.asarray(a) - np.asarray(b)).max())
                  for a, b in zip(jax.tree.leaves(p_a), jax.tree.leaves(p_b))]
         assert max(diffs) > 0.0

@@ -6,7 +6,7 @@ import numpy as np
 
 from repro.core import (DitherCtx, DitherPolicy, conv2d, dense,
                         dithered_einsum, nsd)
-from repro.core import stats as statslib
+from repro.obs import metrics as statslib
 from repro.core import rowdither
 
 

@@ -200,7 +200,7 @@ class TestTopologyThreading:
                 comm_policy=CommPolicy(default="nsd", s=1.0,
                                        topology=topo, pods=pods))
             state = init_opt_state(params, opt)
-            _, _, m = step_fn(params, state, shard_batch(batch, 4), key)
+            _, _, m, _ = step_fn(params, state, shard_batch(batch, 4), key)
             assert float(m["loss"]) > 0, topo
             assert 0 < float(m["comm_wire_bytes"]) < \
                 float(m["comm_dense_bytes"]), topo
@@ -236,13 +236,15 @@ class TestTopologyThreading:
         with open(path) as f:
             loaded = json.load(f)
         by_topo = {r["topology"]: r for r in loaded["rows"]}
-        assert set(by_topo) == {"ring", "hier"}
+        assert set(by_topo) == {"ring", "hier", "butterfly"}
         for r in by_topo.values():  # the acceptance-criterion fields
             for field in ("wire_bytes", "ici_s", "dcn_s", "total_s",
                           "error_bound", "packs_per_segment"):
                 assert field in r, field
             stat_utils.assert_within_bound(r["max_err"], r["error_bound"])
-        assert "wire_dcn_bytes" in by_topo["hier"]
+        for topo in ("hier", "butterfly"):
+            assert "wire_dcn_bytes" in by_topo[topo]
+            assert "peak_dcn_bytes" in by_topo[topo]
 
 
 # --- sim vs shard_map differential tests (virtual multi-device) ---------

@@ -15,7 +15,7 @@ import pytest
 from repro.comm import wireformat
 from repro.core import (DitherCtx, DitherPolicy, Piecewise, PolicyProgram,
                         conv2d, dense, dithered_einsum, nsd)
-from repro.core import stats as statslib
+from repro.obs import metrics as statslib
 from repro.kernels import ops as kernelops
 from repro.kernels.bsp_matmul.bsp_matmul import (bsp_matmul, bsp_matmul_int8,
                                                  fetch_map)

@@ -9,7 +9,7 @@ import pytest
 from repro.core import (DitherCtx, DitherPolicy, PolicyProgram, Piecewise,
                         conv2d, dense, dithered_einsum, nsd,
                         quantize_cotangent)
-from repro.core import stats as statslib
+from repro.obs import metrics as statslib
 from repro.memory import (DEFAULT_NSD_S, MemoryPolicy, MemoryRule,
                           capacity_bytes, decode, dense_nbytes, encode,
                           footprint_totals, measured_bytes,

@@ -1,0 +1,156 @@
+"""Overlap-scheduled (bucketed) reduce: bucket planning, bit-exactness vs
+the blocking reduce, edge cases (oversize leaf, one-layer model), and the
+cost model's overlap pricing."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.comm import CommPolicy
+from repro.comm.overlap import BucketPlan, OverlapReducer, plan_buckets
+from repro.comm.reducer import reducer
+from repro.launch.costmodel import price_overlap
+
+
+def _grads(key, n_nodes=0):
+    ks = jax.random.split(key, 4)
+    tree = {
+        "emb": {"w": jax.random.normal(ks[0], (64, 32)) * 0.02},
+        "dense0": {"w": jax.random.normal(ks[1], (32, 32)) * 0.02,
+                   "b": jax.random.normal(ks[2], (32,)) * 0.02},
+        "lm_head": {"w": jax.random.normal(ks[3], (32, 16)) * 0.02},
+    }
+    if n_nodes:
+        tree = jax.tree.map(
+            lambda l: jnp.stack([l * (1 + 0.1 * i) for i in range(n_nodes)]),
+            tree)
+    return tree
+
+
+class TestBucketPlan:
+    def test_reverse_layer_order(self):
+        named = [("a/w", 400), ("b/w", 400), ("c/w", 400)]
+        plan = plan_buckets(named, bucket_bytes=800)
+        # reverse order: last layer's grads are ready first
+        assert plan.buckets == (("c/w", "b/w"), ("a/w",))
+        assert plan.bucket_bytes == (800, 400)
+        assert plan.n_buckets == 2 and plan.total_bytes == 1200
+
+    def test_oversize_leaf_gets_own_bucket(self):
+        named = [("small", 100), ("huge", 5000), ("tail", 100)]
+        plan = plan_buckets(named, bucket_bytes=1000)
+        assert ("huge",) in plan.buckets
+        assert plan.total_bytes == 5200
+
+    def test_single_leaf_larger_than_bucket(self):
+        """One layer bigger than bucket_bytes: the plan is one bucket and
+        the reduce must still be exact (no silent split/truncation)."""
+        plan = plan_buckets([("w", 1 << 20)], bucket_bytes=1024)
+        assert plan.buckets == (("w",),)
+
+    def test_invalid_bucket_bytes_raises(self):
+        with pytest.raises(ValueError):
+            plan_buckets([("a", 4)], bucket_bytes=0)
+
+    def test_empty_tree(self):
+        plan = plan_buckets([], bucket_bytes=1024)
+        assert plan == BucketPlan(buckets=(), bucket_bytes=())
+
+
+class TestOverlapEqualsBlocking:
+    @pytest.mark.parametrize("topo,n", [("ps", 1), ("ps", 4), ("hier", 4),
+                                        ("butterfly", 4)])
+    def test_bit_exact(self, key, topo, n):
+        """Per-leaf keys depend on the leaf path, not the bucket: the
+        bucketed reduce equals the blocking one to the last bit, for every
+        topology."""
+        pol = CommPolicy(default="nsd", s=2.0, topology=topo,
+                         pods=2 if topo != "ps" else 1, min_leaf_size=1)
+        stacked = n > 1
+        grads = _grads(key, n_nodes=n if stacked else 0)
+        blk = reducer(pol, n_nodes=n, stacked=stacked)
+        ovl = reducer(pol.replace(bucket_bytes=2048), n_nodes=n,
+                      stacked=stacked)
+        assert isinstance(ovl, OverlapReducer)
+        out_b, tele_b, _ = blk.reduce(grads, key, 0)
+        out_o, tele_o, _ = ovl.reduce(grads, key, 0)
+        for a, b in zip(jax.tree.leaves(out_b), jax.tree.leaves(out_o)):
+            assert float(jnp.max(jnp.abs(a - b))) == 0.0
+        assert float(tele_b.wire_bytes) == float(tele_o.wire_bytes)
+        assert float(tele_b.dense_bytes) == float(tele_o.dense_bytes)
+        assert tele_o.n_buckets > 1
+
+    def test_one_layer_model(self, key):
+        """A single-leaf tree: one bucket, still exact, telemetry sane."""
+        g = {"only": jax.random.normal(key, (128,)) * 0.01}
+        pol = CommPolicy(default="nsd", s=1.0, min_leaf_size=1)
+        blk = reducer(pol, n_nodes=1, stacked=False)
+        ovl = reducer(pol.replace(bucket_bytes=64), n_nodes=1, stacked=False)
+        out_b, tele_b, _ = blk.reduce(g, key, 0)
+        out_o, tele_o, _ = ovl.reduce(g, key, 0)
+        assert float(jnp.max(jnp.abs(out_b["only"] - out_o["only"]))) == 0.0
+        assert tele_o.n_buckets == 1
+        assert float(tele_b.wire_bytes) == float(tele_o.wire_bytes)
+
+    def test_ef_residuals_bucket_independent(self, key):
+        """Error-feedback state threads through buckets unchanged vs the
+        blocking reduce — two steps deep, so residuals feed back."""
+        pol = CommPolicy(default="topk_ef", topk_frac=0.25, min_leaf_size=1)
+        grads = _grads(key)
+        blk = reducer(pol, n_nodes=1, stacked=False)
+        ovl = reducer(pol.replace(bucket_bytes=2048), n_nodes=1,
+                      stacked=False)
+        sb, so = blk.init_state(grads), ovl.init_state(grads)
+        for step in range(2):
+            _, _, sb = blk.reduce(grads, key, step, sb)
+            _, _, so = ovl.reduce(grads, key, step, so)
+        for name in sb:
+            assert float(jnp.max(jnp.abs(
+                sb[name].residual - so[name].residual))) == 0.0, name
+
+    def test_jit_overlap_equals_jit_blocking(self, key):
+        """Under one jit the traced programs must agree exactly (the
+        contract the ssgd step relies on)."""
+        pol = CommPolicy(default="nsd", s=2.0, min_leaf_size=1)
+        grads = _grads(key)
+        blk = reducer(pol, n_nodes=1, stacked=False)
+        ovl = reducer(pol.replace(bucket_bytes=1024), n_nodes=1,
+                      stacked=False)
+        f_b = jax.jit(lambda g, k: blk.reduce(g, k, 0)[0])
+        f_o = jax.jit(lambda g, k: ovl.reduce(g, k, 0)[0])
+        for a, b in zip(jax.tree.leaves(f_b(grads, key)),
+                        jax.tree.leaves(f_o(grads, key))):
+            assert float(jnp.max(jnp.abs(a - b))) == 0.0
+
+
+class TestPriceOverlap:
+    def test_fully_hidden(self):
+        # both buckets ready and drained well before backward finishes
+        out = price_overlap([100, 100], [0.1, 0.1], bwd_s=10.0,
+                            ready_s=[0.0, 1.0])
+        assert out["exposed_s"] == 0.0
+        assert out["overlap_efficiency"] == 1.0
+        assert out["step_s"] == 10.0
+
+    def test_blocking_tail_exposed(self):
+        # all comm ready only at the end: everything is exposed
+        out = price_overlap([100], [2.0], bwd_s=1.0, ready_s=[1.0])
+        assert out["exposed_s"] == pytest.approx(2.0)
+        assert out["overlap_efficiency"] == pytest.approx(0.0)
+        assert out["serial_s"] == pytest.approx(3.0)
+
+    def test_queueing_serializes_link(self):
+        # bucket 1 ready at t=0 but the link is busy until t=2
+        out = price_overlap([100, 100], [2.0, 1.0], bwd_s=4.0,
+                            ready_s=[0.0, 0.0])
+        assert out["launch_s"] == [0.0, 2.0]
+        assert out["drain_s"] == [2.0, 3.0]
+        assert out["exposed_s"] == 0.0
+
+    def test_default_ready_proxy_monotone(self):
+        out = price_overlap([300, 100, 100], [0.5, 0.5, 0.5], bwd_s=3.0)
+        assert out["launch_s"] == sorted(out["launch_s"])
+        assert 0.0 <= out["overlap_efficiency"] <= 1.0
+
+    def test_mismatched_lengths_raise(self):
+        with pytest.raises(ValueError):
+            price_overlap([1, 2], [0.1], bwd_s=1.0)

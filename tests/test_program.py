@@ -1,0 +1,94 @@
+"""The unified ``--program`` launcher DSL: section splitting, round-trip,
+resolution into each subsystem's policy object, and the deprecated
+per-DSL flag merge."""
+import pytest
+
+from repro.launch.program import (LaunchSpec, format_program,
+                                  merge_legacy_flags, parse_program)
+
+FULL = ("dither: phase@0=off;phase@30=paper;rule lm_head:off "
+        "memory: default=nsd;rule fc0:int8 "
+        "comm: topology=butterfly;pods=4;bucket_bytes=1048576")
+
+
+class TestParse:
+    def test_sections_split(self):
+        spec = parse_program(FULL)
+        assert spec.dither == "phase@0=off;phase@30=paper;rule lm_head:off"
+        assert spec.memory == "default=nsd;rule fc0:int8"
+        assert spec.comm == "topology=butterfly;pods=4;bucket_bytes=1048576"
+
+    def test_clause_colons_do_not_open_sections(self):
+        """``rule lm_head:off`` stays inside the dither section — only the
+        three known prefixes start sections."""
+        spec = parse_program("dither: rule lm_head:off rule fc0:int8")
+        assert spec.dither == "rule lm_head:off rule fc0:int8"
+        assert spec.memory == "" and spec.comm == ""
+
+    def test_prefix_glued_to_first_token(self):
+        spec = parse_program("comm:topology=ring;s=2.0")
+        assert spec.comm == "topology=ring;s=2.0"
+
+    def test_single_section(self):
+        assert parse_program("memory: default=int8") == \
+            LaunchSpec(memory="default=int8")
+
+    def test_bare_spec_errors_with_migration_hint(self):
+        with pytest.raises(ValueError, match="--policy-program"):
+            parse_program("phase@0=off;phase@30=paper")
+
+    def test_duplicate_section_errors(self):
+        with pytest.raises(ValueError, match="duplicate"):
+            parse_program("dither: a=b dither: c=d")
+
+    def test_round_trip(self):
+        spec = parse_program(FULL)
+        assert parse_program(format_program(spec)) == spec
+        assert format_program(LaunchSpec()) == ""
+
+
+class TestResolution:
+    def test_dither_section_resolves(self):
+        from repro.core import DitherPolicy
+        base = DitherPolicy(variant="paper")
+        prog = parse_program(
+            "dither: phase@0=off;phase@2=paper").dither_program(base)
+        assert prog.phase_policy_at(0).variant == "off"
+        assert prog.phase_policy_at(5).variant == "paper"
+        assert parse_program("comm: s=1.0").dither_program(base) is None
+
+    def test_memory_section_resolves(self):
+        pol = parse_program("memory: default=nsd;rule fc0:int8") \
+            .memory_policy()
+        assert pol.mode_for("blocks/fc0/w") == "int8"
+        assert pol.mode_for("blocks/fc1/w") == "nsd"
+        assert parse_program("comm: s=1.0").memory_policy() is None
+
+    def test_comm_section_resolves(self):
+        pol = parse_program(FULL).comm_policy()
+        assert pol.topology == "butterfly"
+        assert pol.pods == 4 and pol.bucket_bytes == 1048576
+        assert parse_program("dither: rule a:off").comm_policy() is None
+
+
+class TestLegacyFlags:
+    def test_legacy_flags_warn_and_map(self):
+        with pytest.warns(DeprecationWarning, match="--policy-program"):
+            spec = merge_legacy_flags("", policy_program="phase@0=off")
+        assert spec.dither == "phase@0=off"
+        with pytest.warns(DeprecationWarning, match="--memory-program"):
+            spec = merge_legacy_flags("comm: s=2.0",
+                                      memory_program="default=int8")
+        assert spec.memory == "default=int8" and spec.comm == "s=2.0"
+
+    def test_conflict_is_hard_error(self):
+        with pytest.warns(DeprecationWarning):
+            with pytest.raises(ValueError, match="conflicts"):
+                merge_legacy_flags("dither: phase@0=off",
+                                   policy_program="phase@0=paper")
+
+    def test_no_flags_no_warning(self):
+        import warnings as _w
+        with _w.catch_warnings():
+            _w.simplefilter("error")
+            assert merge_legacy_flags("") == LaunchSpec()

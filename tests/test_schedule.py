@@ -8,7 +8,7 @@ import pytest
 from repro.core import (Const, DitherCtx, DitherPolicy, LayerRule, Linear,
                         PhaseSpec, Piecewise, PolicyProgram,
                         SparsityController, dense, meprop, parse_program)
-from repro.core import stats as statslib
+from repro.obs import metrics as statslib
 from repro.core.schedule import as_program, discover_layer_names
 
 

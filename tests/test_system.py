@@ -11,7 +11,7 @@ import numpy as np
 
 from repro.configs.paper_models import mlp_mnist
 from repro.core import DitherCtx, DitherPolicy
-from repro.core import stats as statslib
+from repro.obs import metrics as statslib
 from repro.data import ClassifConfig, classification_batch
 from repro.models.cnn import accuracy
 from repro.optim import OptConfig, init_opt_state, apply_updates
