@@ -1,0 +1,200 @@
+"""Serving-tier benchmark: throughput, latency, KV bytes, decode parity.
+
+A synthetic heavy-traffic trace (staggered arrivals, mixed prompt and
+generation lengths) drives the chunked-prefill engine on the gemma-2b
+smoke config, one arm per KV layout:
+
+* ``dense``  — per-slot fp32 buffers from ``Model.init_cache``.
+* ``fp32``   — paged pool, fp32 passthrough pages. Gated BIT-EXACT (token
+  level) against the ``greedy_generate`` reference: paging and chunked
+  prefill are layout changes, not numerics changes.
+* ``int8`` / ``nsd`` — quantized pages. Gated on a bounded
+  token-disagreement fraction vs the reference plus a >= 3x capacity
+  compression floor from the dual byte accounting on the ``serve`` stream
+  (encoded page capacity vs the dense fp32 counterfactual).
+* ``preempt`` — fp32 pages on a pool sized to force
+  preemption-and-recompute churn; gated on full completion AND bit-exact
+  outputs, so eviction is a performance event, never a correctness one.
+
+Wall-clock derived metrics (tokens/sec, p99 tick latency) carry wide
+bands — CI hosts are noisy and the model is tiny; the tight gates are the
+parity, completion, and byte-accounting invariants.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.bench import BenchResult, Gate
+from repro.configs import get_smoke_model
+from repro.obs.bus import MetricsBus, set_bus
+from repro.serve import Engine, Request, ServeConfig, greedy_generate
+
+
+def _trace(vocab: int, n_requests: int, seed: int = 0
+           ) -> List[Tuple[np.ndarray, int, int]]:
+    """(prompt, max_new, arrival_tick) synthetic trace: bursty arrivals,
+    prompt lengths 3..24, generation lengths 4..16."""
+    rng = np.random.default_rng(seed)
+    out = []
+    tick = 0
+    for _ in range(n_requests):
+        plen = int(rng.integers(3, 25))
+        nnew = int(rng.integers(4, 17))
+        prompt = rng.integers(0, vocab, size=plen).astype(np.int32)
+        out.append((prompt, nnew, tick))
+        if rng.random() < 0.4:  # burst boundary
+            tick += int(rng.integers(1, 4))
+    return out
+
+
+def _drive(model, params, cfg: ServeConfig, trace, max_ticks: int):
+    """Feed the trace by arrival tick; returns (results, tick_times_s,
+    engine). Requests not admitted by the queue bound are dropped (the
+    trace here is sized to never trip it)."""
+    eng = Engine(model, params, cfg, name=f"bench-{cfg.kv_mode}"
+                 f"{'-paged' if cfg.kv_page else ''}")
+    results: Dict[int, List[int]] = {}
+    times: List[float] = []
+    pending = sorted(range(len(trace)), key=lambda i: trace[i][2])
+    cursor = 0
+    for tick in range(max_ticks):
+        while cursor < len(pending) and trace[pending[cursor]][2] <= tick:
+            uid = pending[cursor]
+            prompt, nnew, _ = trace[uid]
+            assert eng.submit(Request(uid, prompt, max_new_tokens=nnew))
+            cursor += 1
+        t0 = time.perf_counter()
+        eng.step()
+        times.append(time.perf_counter() - t0)
+        results.update(eng._finished)
+        eng._finished = {}
+        if (cursor == len(pending) and eng.sched.queue_depth == 0
+                and all(s is None for s in eng._slots)):
+            break
+    return results, times, eng
+
+
+def _kv_bytes_per_token(bus: MetricsBus, tag: str) -> Tuple[float, float]:
+    """(kv_bytes per generated token, capacity compression x) from the
+    serve stream rows: mean live KV capacity over busy ticks divided by
+    mean live tokens is noisy, so integrate byte-ticks / token-ticks."""
+    rows = bus.rows_since("serve", tag, 0)
+    busy = rows[rows[:, 1] > 0]  # active_slots > 0
+    gen = float(busy[:, 4].sum())
+    byte_ticks = float(busy[:, 5].sum())
+    dense_ticks = float(busy[:, 6].sum())
+    per_tok = byte_ticks / max(gen, 1.0)
+    comp = dense_ticks / max(byte_ticks, 1.0)
+    return per_tok, comp
+
+
+def bench(quick: bool = True) -> List[BenchResult]:
+    n_requests = 24 if quick else 96
+    max_ticks = 4000
+    model = get_smoke_model("gemma-2b")
+    params, _ = model.init(jax.random.PRNGKey(0))
+    vocab = model.cfg.vocab
+    trace = _trace(vocab, n_requests)
+
+    refs = {uid: greedy_generate(model, params, p, n, max_len=64)
+            for uid, (p, n, _) in enumerate(trace)}
+    total_ref_tokens = sum(len(v) for v in refs.values())
+
+    arms = {
+        "dense": ServeConfig(max_batch=8, max_len=64, chunk=8),
+        "fp32": ServeConfig(max_batch=8, max_len=64, chunk=8,
+                            kv_mode="fp32", kv_page=16),
+        "int8": ServeConfig(max_batch=8, max_len=64, chunk=8,
+                            kv_mode="int8", kv_page=16),
+        "nsd": ServeConfig(max_batch=8, max_len=64, chunk=8,
+                           kv_mode="nsd", kv_page=16),
+        # pool sized for ~2.5 of 8 slots at worst case -> forced eviction
+        "preempt": ServeConfig(max_batch=8, max_len=64, chunk=8,
+                               kv_mode="fp32", kv_page=8, kv_pool_pages=14),
+    }
+
+    out: List[BenchResult] = []
+    for arm, cfg in arms.items():
+        bus = MetricsBus()
+        set_bus(bus)
+        try:
+            t0 = time.perf_counter()
+            results, times, eng = _drive(model, params, cfg, trace,
+                                         max_ticks)
+            wall = time.perf_counter() - t0
+        finally:
+            set_bus(None)
+
+        done_tokens = sum(len(v) for v in results.values())
+        completed = len(results) / len(trace)
+        mism = sum(1 for uid, toks in results.items()
+                   for a, b in zip(toks, refs[uid]) if a != b)
+        disagree = mism / max(total_ref_tokens, 1)
+        tok_s = done_tokens / max(wall, 1e-9)
+        # first ticks are dominated by jit compilation of the two step
+        # variants (prefill chunk + single-token); latency is gated on the
+        # steady state
+        steady = times[10:] if len(times) > 20 else times
+        p99_ms = float(np.percentile(np.asarray(steady), 99) * 1e3)
+        per_tok, comp = _kv_bytes_per_token(bus, eng.name)
+
+        derived = {
+            "completed_frac": completed,
+            "token_disagree_frac": disagree,
+            "tokens_per_sec": tok_s,
+            "p99_tick_ms": p99_ms,
+            "kv_bytes_per_token": per_tok,
+        }
+        gates = {
+            # every request must finish within the tick budget
+            "completed_frac": Gate(abs=0.0, direction="both"),
+            # throughput/latency recorded with wide noise-safe bands
+            "tokens_per_sec": Gate(rel=0.90, direction="low"),
+            "p99_tick_ms": Gate(rel=9.0, direction="high"),
+            # byte accounting is deterministic: tight relative band
+            "kv_bytes_per_token": Gate(rel=0.02, abs=1.0,
+                                       direction="high"),
+        }
+        if arm in ("dense", "fp32", "preempt"):
+            # layout changes only: token-level bit-exact vs the reference
+            gates["token_disagree_frac"] = Gate(abs=0.0, direction="both")
+        else:
+            # quantized pages flip near-tie argmaxes — pervasive on a
+            # random-init smoke model whose logit gaps are tiny, so the
+            # absolute damage bound is per-codec (the sparsifying NSD
+            # format is far more aggressive than affine int8) and drift
+            # beyond the committed baseline is gated separately
+            bound = {"int8": 0.15, "nsd": 0.60}[arm]
+            derived["disagree_bounded"] = 1.0 if disagree <= bound else 0.0
+            gates["disagree_bounded"] = Gate(abs=0.0, direction="both")
+            gates["token_disagree_frac"] = Gate(abs=0.10, direction="high")
+        if cfg.kv_page and arm in ("int8", "nsd"):
+            derived["kv_capacity_x"] = comp
+            derived["meets_3x_floor"] = 1.0 if comp >= 3.0 else 0.0
+            gates["meets_3x_floor"] = Gate(abs=0.0, direction="both")
+            gates["kv_capacity_x"] = Gate(rel=0.02, direction="low")
+        if arm == "preempt":
+            derived["preemptions"] = float(eng.preemptions)
+            derived["preempted_any"] = 1.0 if eng.preemptions > 0 else 0.0
+            gates["preempted_any"] = Gate(abs=0.0, direction="both")
+
+        out.append(BenchResult(
+            name=f"serve/{arm}",
+            value=wall * 1e6,
+            derived=derived,
+            gates=gates,
+            context={"requests": len(trace), "model": "gemma-2b-smoke",
+                     "kv_mode": cfg.kv_mode, "kv_page": cfg.kv_page,
+                     "pool_pages": cfg.kv_pool_pages,
+                     "chunk": cfg.chunk, "quick": quick},
+        ))
+    return out
+
+
+if __name__ == "__main__":
+    for r in bench(quick=True):
+        print(r.name, f"{r.value:.0f}us", r.derived)

@@ -31,6 +31,10 @@ class Model:
     init_cache: Optional[Callable] = None  # (batch, max_len) -> cache
     cache_specs: Optional[Callable] = None
     decode_step: Optional[Callable] = None  # (params, cache, token, t)
+    # (params, tokens (B,S), max_len, **extras) -> (logits, cache, t);
+    # extras: patch_embeds (vlm), frames (encdec). The reference path for
+    # serve.greedy_generate across every decoding family.
+    prefill: Optional[Callable] = None
     # dry-run/meta
     param_count: int = 0
     active_param_count: int = 0
@@ -58,6 +62,8 @@ def lm_model(cfg: tf_mod.LMConfig, family: str) -> Model:
         cache_specs=lambda b, s: tf_mod.cache_specs(cfg, b, s),
         decode_step=lambda p, c, tok, t, ctx=None: tf_mod.decode_step(
             p, cfg, c, tok, t, ctx=ctx),
+        prefill=lambda p, tokens, max_len, patch_embeds=None: tf_mod.prefill(
+            p, cfg, tokens, max_len, patch_embeds=patch_embeds),
         param_count=cfg.param_count,
         active_param_count=cfg.active_param_count,
         sub_quadratic=(cfg.window is not None),
@@ -97,6 +103,8 @@ def ssm_model(cfg: mamba_mod.SSMLMConfig) -> Model:
         cache_specs=lambda b, s: mamba_mod.cache_specs(cfg, b, s),
         decode_step=lambda p, c, tok, t, ctx=None: mamba_mod.decode_step(
             p, cfg, c, tok, t, ctx=ctx),
+        prefill=lambda p, tokens, max_len: mamba_mod.prefill(
+            p, cfg, tokens, max_len),
         param_count=cfg.param_count,
         active_param_count=cfg.active_param_count,
         sub_quadratic=True,
@@ -123,6 +131,8 @@ def hybrid_model(cfg: hybrid_mod.HybridConfig) -> Model:
         cache_specs=lambda b, s: hybrid_mod.cache_specs(cfg, b, s),
         decode_step=lambda p, c, tok, t, ctx=None: hybrid_mod.decode_step(
             p, cfg, c, tok, t, ctx=ctx),
+        prefill=lambda p, tokens, max_len: hybrid_mod.prefill(
+            p, cfg, tokens, max_len),
         param_count=cfg.param_count,
         active_param_count=cfg.active_param_count,
         sub_quadratic=True,
@@ -149,6 +159,8 @@ def encdec_model(cfg: encdec_mod.EncDecConfig) -> Model:
         cache_specs=lambda b, s: encdec_mod.cache_specs(cfg, b, s),
         decode_step=lambda p, c, tok, t, ctx=None: encdec_mod.decode_step(
             p, cfg, c, tok, t, ctx=ctx),
+        prefill=lambda p, tokens, max_len, frames=None: encdec_mod.prefill(
+            p, cfg, tokens, max_len, frames),
         param_count=cfg.param_count,
         active_param_count=cfg.active_param_count,
         sub_quadratic=False,

@@ -229,10 +229,12 @@ def decode_step(params, cfg: EncDecConfig, cache, token: jax.Array,
                 t: jax.Array, *, ctx=None):
     x = L.embed(params["embed"], token)
     pos_table = params["head"]["dec_pos"]
-    pos_idx = jnp.minimum(t, pos_table.shape[0] - 1)
-    x = x + jax.lax.dynamic_slice_in_dim(
-        pos_table, pos_idx, 1, axis=0)[None].astype(x.dtype)
-    positions = jnp.zeros((1,), jnp.int32) + t
+    t = jnp.asarray(t, jnp.int32)
+    # clip below too: per-slot decode uses t = -1 for inactive slots
+    pos_idx = jnp.clip(t, 0, pos_table.shape[0] - 1)
+    pe = pos_table[pos_idx].astype(x.dtype)  # scalar t -> (d,); (B,) -> (B,d)
+    x = x + (pe[None, None] if t.ndim == 0 else pe[:, None])
+    positions = L.decode_positions(t)
     new_cache = []
     for i in range(cfg.n_layers):
         p = L.layer_slice(params["dec"], i)
@@ -252,3 +254,27 @@ def decode_step(params, cfg: EncDecConfig, cache, token: jax.Array,
     x = _ln(x, params["head"], "ln_dec")
     logits = L.unembed(params["embed"], x)
     return logits, new_cache
+
+
+def prefill(params, cfg: EncDecConfig, tokens: jax.Array, max_len: int,
+            frames: jax.Array):
+    """Encoder pass + teacher-forced decoder scan into a decode cache.
+
+    tokens (B, S), frames (B, n_frames, d_model) ->
+    (logits (B, S, V), cache, t = S - 1).
+    """
+    B, S = tokens.shape
+    enc_out = encode(params, cfg, frames)
+    cross = precompute_cross_kv(params, cfg, enc_out)
+    cache = init_cache(cfg, B, max_len)
+    cache = [{"self": c["self"], "cross": cross[i]}
+             for i, c in enumerate(cache)]
+
+    def body(c, inp):
+        tok, pos = inp
+        logits, c = decode_step(params, cfg, c, tok[:, None], pos)
+        return c, logits[:, 0]
+
+    cache, logits_seq = jax.lax.scan(body, cache, (tokens.T, jnp.arange(S)))
+    return (jnp.moveaxis(logits_seq, 0, 1), cache,
+            jnp.asarray(S - 1, jnp.int32))

@@ -205,11 +205,14 @@ def cache_specs(cfg: HybridConfig, batch: int, max_len: int, dtype=None):
     return out
 
 
-def decode_step(params, cfg: HybridConfig, cache, token: jax.Array,
-                t: jax.Array, *, ctx=None):
-    """t is the position over (meta + text); callers start at n_meta_tokens."""
-    x = L.embed(params["embed"], token)
-    positions = jnp.zeros((1,), jnp.int32) + t
+def decode_step_x(params, cfg: HybridConfig, cache, x: jax.Array,
+                  t: jax.Array, *, ctx=None):
+    """Embedding-level decode step: x (B, 1, d_model) already embedded.
+
+    Shared by token decode, the meta-token cache bootstrap, and prefill.
+    Returns (hidden (B, 1, d_model), new_cache) — the caller norms/unembeds.
+    """
+    positions = L.decode_positions(t)
     new_cache = []
     for i in range(cfg.n_layers):
         p = L.layer_slice(params["layers"], i)
@@ -230,6 +233,53 @@ def decode_step(params, cfg: HybridConfig, cache, token: jax.Array,
                   name=f"L{i}.mlp")
         x = x + y
         new_cache.append({"kv": kv, "ssm": ssm_state})
+    return x, new_cache
+
+
+def decode_step(params, cfg: HybridConfig, cache, token: jax.Array,
+                t: jax.Array, *, ctx=None):
+    """t is the position over (meta + text); callers start at n_meta_tokens."""
+    x = L.embed(params["embed"], token)
+    x, new_cache = decode_step_x(params, cfg, cache, x, t, ctx=ctx)
     x = L.rms_norm(x, params["head"]["ln_f"])
     logits = L.unembed(params["embed"], x)
     return logits, new_cache
+
+
+def bootstrap_cache(params, cfg: HybridConfig, batch: int, max_len: int):
+    """Fresh decode cache with the learnable meta tokens replayed in.
+
+    Decode starts at position ``cfg.n_meta_tokens``; the meta prefix is fed
+    through the same decode step (embedding-level — meta tokens have no
+    vocabulary ids) so windowed layers pin it into their prefix slots.
+    """
+    cache = init_cache(cfg, batch, max_len)
+    meta = params["head"]["meta_tokens"].astype(cfg.dtype)  # (M, d)
+
+    def body(c, i):
+        x = jnp.broadcast_to(meta[i][None, None], (batch, 1, cfg.d_model))
+        _, c = decode_step_x(params, cfg, c, x, i)
+        return c, None
+
+    cache, _ = jax.lax.scan(body, cache, jnp.arange(cfg.n_meta_tokens))
+    return cache
+
+
+def prefill(params, cfg: HybridConfig, tokens: jax.Array, max_len: int):
+    """tokens (B, S) -> (logits (B, S, V), cache, t) via the decode path.
+
+    t is the position of the last prompt token over (meta + text), i.e.
+    ``n_meta_tokens + S - 1`` — pass ``t + 1`` to the next decode step.
+    """
+    B, S = tokens.shape
+    cache = bootstrap_cache(params, cfg, B, max_len)
+
+    def body(c, inp):
+        tok, pos = inp
+        logits, c = decode_step(params, cfg, c, tok[:, None], pos)
+        return c, logits[:, 0]
+
+    cache, logits_seq = jax.lax.scan(
+        body, cache, (tokens.T, cfg.n_meta_tokens + jnp.arange(S)))
+    return (jnp.moveaxis(logits_seq, 0, 1), cache,
+            jnp.asarray(cfg.n_meta_tokens + S - 1, jnp.int32))

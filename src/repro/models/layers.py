@@ -230,6 +230,20 @@ def _sdpa(q, k, v, mask, softcap=None):
     return out.reshape(B, Sq, H, D)
 
 
+def decode_positions(t: jax.Array) -> jax.Array:
+    """Rope/mask positions for one decode step from the cache index ``t``.
+
+    Scalar t (shared position) -> (1,), broadcast over the batch; vector t
+    (per-slot positions, (B,)) -> (B, 1). The trailing unit axis is what
+    keeps ``apply_rope`` broadcasting against (B, 1, H, D) tokens — a bare
+    (B,) vector would broadcast to (B, B, ...).
+    """
+    t = jnp.asarray(t, jnp.int32)
+    if t.ndim == 0:
+        return t[None]
+    return t[:, None]
+
+
 def ring_write_slot(t: jax.Array, s_buf: int, prefix: int) -> jax.Array:
     """Buffer slot for absolute position t. Slots [0, prefix) are pinned to
     the prefix (meta/visual tokens); the rest is a ring of size s_buf-prefix."""
@@ -284,19 +298,48 @@ def attention(params: Params, x: jax.Array, positions: jax.Array,
         k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_scaling)
 
     if kv_cache is not None:
-        K, V = kv_cache  # (B, S_buf, KV, hd)
-        s_buf = K.shape[1]
         t = jnp.asarray(cache_index, jnp.int32)
-        write_at = ring_write_slot(t, s_buf, cfg.prefix_len)
-        K = jax.lax.dynamic_update_slice(K, k.astype(K.dtype), (0, write_at, 0, 0))
-        V = jax.lax.dynamic_update_slice(V, v.astype(V.dtype), (0, write_at, 0, 0))
-        k_pos, valid = ring_slot_positions(t, s_buf, cfg.prefix_len)
-        k_pos_b = jnp.broadcast_to(k_pos, (B, s_buf))
-        valid_b = jnp.broadcast_to(valid, (B, s_buf))
-        q_pos_b = jnp.broadcast_to(t, (B, 1))
-        mask = attention_mask(q_pos_b, k_pos_b, cfg, valid_k=valid_b)
+        if hasattr(kv_cache, "update_and_view"):
+            # paged cache (repro.serve.kvcache.PagedKV): the cache object
+            # owns write/seal/decode; t is per-slot (B,), t < 0 = inactive
+            K, V, k_pos_b, valid_b, out_cache = kv_cache.update_and_view(
+                k, v, t)
+            q_pos_b = t[:, None]
+            mask = attention_mask(q_pos_b, k_pos_b, cfg, valid_k=valid_b)
+        elif t.ndim == 0:
+            K, V = kv_cache  # (B, S_buf, KV, hd)
+            s_buf = K.shape[1]
+            write_at = ring_write_slot(t, s_buf, cfg.prefix_len)
+            K = jax.lax.dynamic_update_slice(
+                K, k.astype(K.dtype), (0, write_at, 0, 0))
+            V = jax.lax.dynamic_update_slice(
+                V, v.astype(V.dtype), (0, write_at, 0, 0))
+            k_pos, valid = ring_slot_positions(t, s_buf, cfg.prefix_len)
+            k_pos_b = jnp.broadcast_to(k_pos, (B, s_buf))
+            valid_b = jnp.broadcast_to(valid, (B, s_buf))
+            q_pos_b = jnp.broadcast_to(t, (B, 1))
+            mask = attention_mask(q_pos_b, k_pos_b, cfg, valid_k=valid_b)
+            out_cache = (K, V)
+        else:
+            # per-slot positions t (B,); t < 0 marks an inactive slot — its
+            # write parks out of bounds (scatter drop) and its mask is all
+            # invalid (softmax goes uniform; callers discard the output)
+            K, V = kv_cache
+            s_buf = K.shape[1]
+            rows = jnp.arange(B)
+            write_at = ring_write_slot(t, s_buf, cfg.prefix_len)
+            write_at = jnp.where(t >= 0, write_at, s_buf)  # park inactive
+            K = K.at[rows, write_at].set(k[:, 0].astype(K.dtype),
+                                         mode="drop")
+            V = V.at[rows, write_at].set(v[:, 0].astype(V.dtype),
+                                         mode="drop")
+            k_pos_b, valid_b = jax.vmap(
+                lambda tt: ring_slot_positions(tt, s_buf, cfg.prefix_len))(t)
+            valid_b = valid_b & (t >= 0)[:, None]
+            q_pos_b = t[:, None]
+            mask = attention_mask(q_pos_b, k_pos_b, cfg, valid_k=valid_b)
+            out_cache = (K, V)
         y = _sdpa(q, K.astype(q.dtype), V.astype(q.dtype), mask, cfg.softcap)
-        out_cache = (K, V)
     else:
         pos_b = jnp.broadcast_to(positions, (B,) + positions.shape[-1:])
         if x_kv is None:

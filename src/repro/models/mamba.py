@@ -382,3 +382,25 @@ def decode_step(params, cfg: SSMLMConfig, cache, token: jax.Array,
     x = L.rms_norm(x, params["head"]["ln_f"])
     logits = L.unembed(params["embed"], x)
     return logits, new_cache
+
+
+def prefill(params, cfg: SSMLMConfig, tokens: jax.Array, max_len: int):
+    """Token-by-token prompt scan through the decode state.
+
+    tokens (B, S) -> (logits (B, S, V), cache, t = S - 1). The decode
+    recurrence IS the model here (no separate bulk path is needed for
+    correctness — the chunked SSD forward is a training-time optimization),
+    so prefill scans ``decode_step`` to keep serving numerics identical to
+    the decode loop that follows.
+    """
+    B, S = tokens.shape
+    cache = init_cache(cfg, B, max_len)
+
+    def body(c, tok):
+        logits, c = decode_step(params, cfg, c, tok[:, None],
+                                jnp.zeros((), jnp.int32))
+        return c, logits[:, 0]
+
+    cache, logits_seq = jax.lax.scan(body, cache, tokens.T)
+    return (jnp.moveaxis(logits_seq, 0, 1), cache,
+            jnp.asarray(S - 1, jnp.int32))

@@ -347,12 +347,13 @@ def cache_specs(cfg: LMConfig, batch: int, max_len: int, dtype=None):
 def decode_step(params: L.Params, cfg: LMConfig, cache,
                 token: jax.Array, t: jax.Array, *,
                 ctx: Optional[DitherCtx] = None):
-    """One decoding step. token: (B, 1) ids; t: scalar position. Returns
-    (logits (B, 1, V), new_cache)."""
+    """One decoding step. token: (B, 1) ids; t: scalar position shared by
+    the batch, or per-slot (B,) positions (t < 0 = inactive slot, see
+    ``L.attention``). Returns (logits (B, 1, V), new_cache)."""
     x = L.embed(params["embed"], token)
     if cfg.embed_scale:
         x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
-    positions = jnp.full((1,), 0, jnp.int32) + t
+    positions = L.decode_positions(t)
     new_cache = []
     for i in range(cfg.n_layers):
         p = L.layer_slice(params["layers"], i)

@@ -23,8 +23,8 @@ produces:
 from repro.obs.bus import MetricsBus, get_bus, register_stream, set_bus
 from repro.obs.monitor import (BoundMonitor, CommRatioMonitor, LossMonitor,
                                MemoryRatioMonitor, Monitor, MonitorAlert,
-                               MonitorEvent, MonitorSuite, SparsityMonitor,
-                               default_monitors)
+                               MonitorEvent, MonitorSuite, ServeMonitor,
+                               SparsityMonitor, default_monitors)
 from repro.obs.runlog import RunLog, RunObs, read_run, run_obs
 from repro.obs.streams import BUILTIN_STREAMS, MetricStream
 from repro.obs.trace import Tracer, annotate, get_tracer, set_step, span
@@ -43,6 +43,7 @@ __all__ = [
     "MonitorSuite",
     "RunLog",
     "RunObs",
+    "ServeMonitor",
     "SparsityMonitor",
     "Tracer",
     "annotate",

@@ -87,10 +87,14 @@ BOUND = MetricStream(
     "bound", ("step", "error_bound"),
     "per-step compressed-reduce pointwise error bound vs the dense mean")
 
-# one row per serving-engine tick
+# one row per serving-engine tick; tag = engine/worker name
 SERVE = MetricStream(
-    "serve", ("tick", "active_slots", "queue_depth"),
-    "serving engine occupancy per decode tick (repro.serve.engine)")
+    "serve", ("tick", "active_slots", "queue_depth", "fed_tokens",
+              "gen_tokens", "kv_bytes", "kv_dense_bytes"),
+    "serving engine occupancy + throughput per decode tick "
+    "(repro.serve.engine): prompt/decode tokens fed into the step, tokens "
+    "emitted, and KV-cache capacity bytes vs the dense fp32 counterfactual "
+    "(paged mode prices sealed pages through repro.memory.codec)")
 
 # one row per priced step of an overlap-scheduled reduce; tag = stats tag
 OVERLAP = MetricStream(

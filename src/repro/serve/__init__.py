@@ -1,3 +1,11 @@
 from repro.serve.engine import Engine, Request, ServeConfig, greedy_generate
+from repro.serve.kvcache import KV_MODES, PagedKV, init_paged, pages_for
+from repro.serve.scheduler import PagePool, Scheduler, SchedulerConfig
+from repro.serve.worker import Supervisor, Worker, WorkerHealth
 
-__all__ = ["Engine", "Request", "ServeConfig", "greedy_generate"]
+__all__ = [
+    "Engine", "Request", "ServeConfig", "greedy_generate",
+    "KV_MODES", "PagedKV", "init_paged", "pages_for",
+    "PagePool", "Scheduler", "SchedulerConfig",
+    "Supervisor", "Worker", "WorkerHealth",
+]

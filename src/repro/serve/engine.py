@@ -1,17 +1,30 @@
-"""Batched serving engine: slot-based continuous batching over the model
-zoo's prefill/decode steps.
+"""Throughput-oriented serving engine: chunked prefill + paged KV cache.
 
-A fixed pool of B slots runs one decode step per tick for every active slot
-(SPMD-friendly: the jitted step always sees the full (B, 1) token block).
-Finished/empty slots decode padding and are ignored. Prefill currently runs
-per request at the engine level (the dry-run covers the batched 32k prefill
-cell; fusing prefill into the decode ticks — chunked prefill — is left as a
-documented extension point).
+A fixed pool of B slots advances in SPMD-uniform jitted ticks. Each tick
+feeds up to ``chunk`` tokens per slot through a ``lax.scan`` of decode
+micro-steps: slots still consuming their prompt feed a prompt chunk
+(chunked prefill), slots in steady state feed the token they generated
+last tick, empty slots ride along fully masked. Every slot carries its own
+position counter — a request admitted at tick 40 writes cache position 0,
+not 40 — and inactive micro-steps are encoded as position ``t = -1``
+(writes park out of bounds and drop; attention masks the slot entirely;
+state-space caches are reselected to their old value).
+
+KV storage is either the dense per-slot buffers from ``Model.init_cache``
+(``kv_page=0``) or the paged, codec-quantized pool in
+``repro.serve.kvcache`` — admission, page allocation, and
+preemption-and-recompute on pool exhaustion live in
+``repro.serve.scheduler``. A preempted request requeues at the front with
+its generated tokens folded into the replay prompt, so greedy decoding
+completes with the same output it would have produced uninterrupted.
+
+Per-tick telemetry (occupancy, fed/generated tokens, KV capacity bytes vs
+the dense fp32 counterfactual) lands on the ``serve`` obs stream.
 """
 from __future__ import annotations
 
 import dataclasses
-import queue
+import functools
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -21,6 +34,8 @@ import numpy as np
 from repro.models.api import Model
 from repro.obs.bus import get_bus
 from repro.obs.trace import span
+from repro.serve import kvcache
+from repro.serve.scheduler import PagePool, Scheduler, SchedulerConfig
 from repro.utils import get_logger
 
 log = get_logger("serve")
@@ -39,96 +54,345 @@ class ServeConfig:
     max_batch: int = 8
     max_len: int = 512
     eos_id: int = -1  # -1: never stop early
+    chunk: int = 8  # prompt tokens fused into one tick (chunked prefill)
+    kv_mode: str = "fp32"  # fp32 | bf16 | int8 | nsd (paged mode only)
+    kv_page: int = 0  # tokens per KV page; 0 = dense per-slot buffers
+    kv_pool_pages: int = 0  # physical pages; 0 = auto (no oversubscription)
+    max_queue: int = 0  # pending-request bound; 0 = unbounded
+    max_active_tokens: int = 0  # admission token budget; 0 = unbounded
+
+
+def _is_paged(x) -> bool:
+    return hasattr(x, "update_and_view")
+
+
+def _select_cache(active: jax.Array, new, old):
+    """Per-slot cache select: keep ``old`` rows where the slot was inactive
+    this micro-step. Paged caches pass through — their writes are already
+    masked internally by the t < 0 convention (pool leaves are page-major,
+    not batch-major, so a tree-wide where would be wrong for them)."""
+    B = active.shape[0]
+
+    def sel(n, o):
+        if _is_paged(n):
+            return n
+        assert n.shape[0] == B, f"cache leaf not batch-major: {n.shape}"
+        return jnp.where(active.reshape((B,) + (1,) * (n.ndim - 1)), n, o)
+
+    return jax.tree.map(sel, new, old, is_leaf=_is_paged)
+
+
+def _copy_slot(cache, template, i: int):
+    """Reset slot ``i`` to the template row (fresh mamba state / hybrid
+    meta-bootstrapped KV). Paged leaves skip — replayed positions overwrite
+    and stale ones stay masked."""
+
+    def cp(c, tpl):
+        if _is_paged(c):
+            return c
+        return c.at[i].set(tpl[i])
+
+    return jax.tree.map(cp, cache, template, is_leaf=_is_paged)
 
 
 class Engine:
-    def __init__(self, model: Model, params: Any, cfg: ServeConfig):
+    def __init__(self, model: Model, params: Any, cfg: ServeConfig,
+                 name: str = "engine"):
         assert model.decode_step is not None, f"{model.name} cannot decode"
+        if model.family == "audio":
+            raise ValueError(
+                "encoder-decoder models need per-request encoder features; "
+                "serve them through greedy_generate(model, ..., frames=...)")
+        if cfg.chunk < 1:
+            raise ValueError("chunk must be >= 1")
         self.model = model
         self.params = params
         self.cfg = cfg
-        self._queue: "queue.Queue[Request]" = queue.Queue()
-        self._slots: List[Optional[Request]] = [None] * cfg.max_batch
-        self._remaining = np.zeros(cfg.max_batch, np.int32)
-        self.cache = model.init_cache(cfg.max_batch, cfg.max_len)
-        self.t = jnp.zeros((), jnp.int32)
-        self.tokens = jnp.zeros((cfg.max_batch, 1), jnp.int32)
-        self._tick = 0  # host-side tick counter for the "serve" stream
-        self._decode = jax.jit(
-            lambda p, c, tok, t: model.decode_step(p, c, tok, t))
+        self.name = name
+        B = cfg.max_batch
+        # position of text token 0 (hybrid prepends learnable meta tokens)
+        self._pos_base = int(getattr(model.cfg, "n_meta_tokens", 0))
 
-    # ------------------------------------------------------------------ API
-    def submit(self, req: Request) -> None:
+        pool = None
+        self._max_pages = 0
+        if cfg.kv_page > 0:
+            self._max_pages = kvcache.pages_for(cfg.max_len, cfg.kv_page)
+            n_pages = (cfg.kv_pool_pages
+                       or B * self._max_pages)
+            pool = PagePool(n_pages, cfg.kv_page)
+            self.cache = self._paged_cache(n_pages)
+            # paged leaves skip slot reset (replay overwrites, t-masking
+            # hides the rest), so the template is the cache itself
+            self._template = self.cache
+        else:
+            self._template = self._fresh_cache()
+            self.cache = self._template
+        self.sched = Scheduler(
+            SchedulerConfig(max_queue=cfg.max_queue,
+                            max_active_tokens=cfg.max_active_tokens),
+            B, self._max_pages, pool)
+
+        self._slots: List[Optional[Request]] = [None] * B
+        self._prompt: List[Optional[np.ndarray]] = [None] * B  # replay prompt
+        self._fed = np.zeros(B, np.int64)  # prompt tokens consumed
+        self._remaining = np.zeros(B, np.int64)
+        self._next_tok = np.zeros(B, np.int64)  # steady-state feed token
+        self._seq = np.zeros(B, np.int64)  # admission order (for preemption)
+        self._admit_counter = 0
+        self._tick = 0
+        self.preemptions = 0
+        self._finished: Dict[int, List[int]] = {}
+        self._table_pushed: Optional[np.ndarray] = None
+
+    # ------------------------------------------------------------ caches
+    def _fresh_cache(self):
+        """Per-slot reset template. Hybrid models replay their meta-token
+        prefix in (decode starts at position n_meta_tokens)."""
+        B, S = self.cfg.max_batch, self.cfg.max_len
+        if self.model.family == "hybrid":
+            from repro.models import hybrid as hy
+            return jax.jit(
+                lambda p: hy.bootstrap_cache(p, self.model.cfg, B, S)
+            )(self.params)
+        return self.model.init_cache(B, S)
+
+    def _paged_cache(self, n_pages: int):
+        cfg, mcfg = self.cfg, self.model.cfg
+        dense = self.model.init_cache(cfg.max_batch, cfg.max_len)
+        if not all(isinstance(c, tuple) and len(c) == 2 for c in dense):
+            raise ValueError(
+                f"paged KV needs per-layer (K, V) caches; {self.model.name} "
+                f"({self.model.family}) keeps other state — use kv_page=0")
+        if getattr(mcfg, "window", None) is not None:
+            raise ValueError(
+                "paged KV does not cover sliding-window ring buffers yet; "
+                "use kv_page=0 for windowed configs")
+        key = jax.random.PRNGKey(0x9A6E)
+        out = []
+        for i, (K, _) in enumerate(dense):
+            _, _, n_kv, hd = K.shape
+            out.append(kvcache.init_paged(
+                cfg.kv_mode, cfg.max_batch, cfg.max_len, n_pages,
+                cfg.kv_page, n_kv, hd, K.dtype, jax.random.fold_in(key, i)))
+        # dual byte accounting for telemetry: encoded capacity per sealed
+        # page vs its dense fp32 counterfactual, summed over layers
+        self._page_bytes = sum(
+            kvcache.page_stored_nbytes(cfg.kv_mode, cfg.kv_page, K.shape[2],
+                                       K.shape[3]) for K, _ in dense)
+        self._page_dense = sum(
+            kvcache.page_dense_nbytes(cfg.kv_page, K.shape[2], K.shape[3])
+            for K, _ in dense)
+        return out
+
+    def _push_table(self) -> None:
+        if self.cfg.kv_page <= 0:
+            return
+        table = self.sched.table()
+        if (self._table_pushed is not None
+                and np.array_equal(table, self._table_pushed)):
+            return
+        dev = jnp.asarray(table)
+        self.cache = [c.with_table(dev) if _is_paged(c) else c
+                      for c in self.cache]
+        self._table_pushed = table
+
+    def _kv_bytes(self) -> tuple:
+        """(capacity bytes, dense fp32 counterfactual) of live KV state."""
+        if self.cfg.kv_page > 0:
+            used = self.sched.pool.used_pages
+            return used * self._page_bytes, used * self._page_dense
+        n = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                for l in jax.tree.leaves(self.cache))
+        return n, n
+
+    # ------------------------------------------------------------ request API
+    def submit(self, req: Request) -> bool:
+        """Enqueue a request; False when the queue bound rejects it."""
         req.out_tokens = []
-        self._queue.put(req)
+        worst = len(req.prompt) + req.max_new_tokens
+        return self.sched.submit(req, tokens_worst_case=worst)
+
+    def _tokens_of(self, req: Request) -> int:
+        return len(req.prompt) + req.max_new_tokens
+
+    def _active_tokens(self) -> int:
+        return sum(self._tokens_of(r) for r in self._slots if r is not None)
 
     def _admit(self) -> None:
         for i in range(self.cfg.max_batch):
-            if self._slots[i] is None and not self._queue.empty():
-                req = self._queue.get()
-                self._slots[i] = req
-                self._remaining[i] = req.max_new_tokens
-                # teacher-forced "prefill": feed prompt tokens one step at a
-                # time into this slot (slot-aligned positions keep the step
-                # SPMD-uniform; bulk prefill is exercised by prefill_32k)
-                for tok in req.prompt:
-                    self.tokens = self.tokens.at[i, 0].set(int(tok))
+            if self._slots[i] is not None:
+                continue
+            req = self.sched.next_request(self._active_tokens(),
+                                          self._tokens_of)
+            if req is None:
+                return
+            if req.max_new_tokens - len(req.out_tokens) <= 0:
+                # nothing to generate: complete without occupying a slot
+                self._finish_tokens(req)
+                continue
+            self._slots[i] = req
+            # replay = original prompt + whatever a preempted run already
+            # generated; greedy decode reproduces the rest deterministically
+            self._prompt[i] = np.concatenate(
+                [np.asarray(req.prompt, np.int64),
+                 np.asarray(req.out_tokens, np.int64)])
+            self._fed[i] = 0
+            self._remaining[i] = req.max_new_tokens - len(req.out_tokens)
+            self._seq[i] = self._admit_counter
+            self._admit_counter += 1
+            self.cache = _copy_slot(self.cache, self._template, i)
+
+    def _finish_tokens(self, req: Request) -> None:
+        self._finished[req.uid] = req.out_tokens
+        log.info("request %d finished (%d tokens)", req.uid,
+                 len(req.out_tokens))
+
+    def _finish_slot(self, i: int) -> None:
+        self._finish_tokens(self._slots[i])
+        self._slots[i] = None
+        self._prompt[i] = None
+        self.sched.release(i)
+
+    def _preempt(self, i: int) -> None:
+        req = self._slots[i]
+        self.preemptions += 1
+        log.info("preempting request %d (slot %d, %d generated)", req.uid, i,
+                 len(req.out_tokens))
+        self._slots[i] = None
+        self._prompt[i] = None
+        self.sched.release(i)
+        self.sched.requeue_front(req)
+
+    # ------------------------------------------------------------ stepping
+    @functools.lru_cache(maxsize=None)
+    def _step_fn(self, C: int):
+        decode = self.model.decode_step
+
+        def step(params, cache, tok_block, n_feed, pos0):
+            def body(cache, i):
+                active = i < n_feed
+                t = jnp.where(active, pos0 + i, -1)
+                tok = jax.lax.dynamic_slice_in_dim(tok_block, i, 1, axis=1)
+                logits, new_cache = decode(params, cache, tok, t)
+                return _select_cache(active, new_cache, cache), logits[:, 0]
+
+            cache, logits_seq = jax.lax.scan(body, cache, jnp.arange(C))
+            idx = jnp.clip(n_feed - 1, 0, C - 1)
+            last = jnp.take_along_axis(
+                jnp.moveaxis(logits_seq, 0, 1), idx[:, None, None],
+                axis=1)[:, 0]
+            return jnp.argmax(last, axis=-1).astype(jnp.int32), cache
+
+        return jax.jit(step)
+
+    def _plan(self):
+        """Per-slot feed plan for this tick; allocates pages, preempting
+        the youngest slot when the pool runs dry."""
+        B, C = self.cfg.max_batch, self.cfg.chunk
+        plan = {}  # slot -> (tokens, n_feed, pos0)
+        order = sorted((s for s in range(B) if self._slots[s] is not None),
+                       key=lambda s: self._seq[s])
+        for s in order:
+            if self._slots[s] is None:  # preempted by an earlier iteration
+                continue
+            prompt, fed = self._prompt[s], int(self._fed[s])
+            if fed < len(prompt):
+                n = min(C, len(prompt) - fed)
+                toks = prompt[fed:fed + n]
+            else:
+                n = 1
+                toks = np.asarray([self._next_tok[s]], np.int64)
+            while not self.sched.ensure(s, fed + n):
+                victims = [v for v in range(B) if self._slots[v] is not None]
+                victim = max(victims, key=lambda v: self._seq[v])
+                self._preempt(victim)
+                plan.pop(victim, None)
+                if victim == s:
+                    break
+            if self._slots[s] is None:
+                continue
+            plan[s] = (toks, n, self._pos_base + fed)
+        return plan
 
     def step(self) -> None:
-        """One decode tick for all slots."""
+        """One engine tick: admit, plan pages, run the fused chunk."""
         with span("serve/admit"):
             self._admit()
-        # per-tick occupancy telemetry (host-side record; ticks are bounded
-        # by run()'s max_ticks, so the bus stays bounded too)
-        get_bus().record("serve", "engine", np.array(
-            [self._tick, sum(s is not None for s in self._slots),
-             self._queue.qsize()], np.float32))
+            plan = self._plan()
+            self._push_table()
+        B = self.cfg.max_batch
+        C = self.cfg.chunk if any(n > 1 for _, n, _ in plan.values()) else 1
+        tok_block = np.zeros((B, C), np.int32)
+        n_feed = np.zeros(B, np.int32)
+        pos0 = np.zeros(B, np.int32)
+        for s, (toks, n, p0) in plan.items():
+            tok_block[s, :n] = toks
+            n_feed[s] = n
+            pos0[s] = p0
+
+        active = sum(s is not None for s in self._slots)
+        gen = 0
+        if plan:
+            with span("serve/decode"):
+                nxt, self.cache = self._step_fn(C)(
+                    self.params, self.cache, jnp.asarray(tok_block),
+                    jnp.asarray(n_feed), jnp.asarray(pos0))
+            nxt_np = np.asarray(nxt)
+            for s in list(plan):
+                if self._slots[s] is None:
+                    continue
+                _, n, _ = plan[s]
+                self._fed[s] += n
+                if self._fed[s] < len(self._prompt[s]):
+                    continue  # still prefilling; no sample point yet
+                tok = int(nxt_np[s])
+                req = self._slots[s]
+                req.out_tokens.append(tok)
+                gen += 1
+                self._remaining[s] -= 1
+                self._next_tok[s] = tok
+                if self._remaining[s] <= 0 or tok == self.cfg.eos_id:
+                    self._finish_slot(s)
+
+        kv_bytes, kv_dense = self._kv_bytes()
+        get_bus().record("serve", self.name, np.array(
+            [self._tick, active, self.sched.queue_depth,
+             int(n_feed.sum()), gen, float(kv_bytes), float(kv_dense)],
+            np.float32))
         self._tick += 1
-        with span("serve/decode"):
-            logits, self.cache = self._decode(
-                self.params, self.cache, self.tokens, self.t)
-        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-        nxt_np = np.asarray(nxt)
-        for i, req in enumerate(self._slots):
-            if req is None:
-                continue
-            tok = int(nxt_np[i])
-            req.out_tokens.append(tok)
-            self._remaining[i] -= 1
-            if self._remaining[i] <= 0 or tok == self.cfg.eos_id:
-                log.info("request %d finished (%d tokens)", req.uid,
-                         len(req.out_tokens))
-                self._slots[i] = None
-        self.tokens = nxt[:, None]
-        self.t = self.t + 1
 
     def run(self, max_ticks: int = 64) -> Dict[int, List[int]]:
-        done: Dict[int, List[int]] = {}
+        """Tick until idle or ``max_ticks``; returns {uid: tokens} finished
+        during this call (requests still queued/active stay pending)."""
+        self._finished = {}
         for _ in range(max_ticks):
-            active_before = {r.uid: r for r in self._slots if r}
             self.step()
-            for uid, req in active_before.items():
-                if req not in self._slots:
-                    done[uid] = req.out_tokens
-            if all(s is None for s in self._slots) and self._queue.empty():
+            if (all(s is None for s in self._slots)
+                    and self.sched.queue_depth == 0):
                 break
-        return done
+        return self._finished
 
 
-def greedy_generate(model: Model, params, prompt: jax.Array,
-                    n_new: int, max_len: int = 256):
-    """Single-sequence reference path: prefill + greedy decode loop.
+def greedy_generate(model: Model, params, prompt, n_new: int,
+                    max_len: int = 256, **extras) -> List[int]:
+    """Single-sequence reference path: ``Model.prefill`` + greedy decode.
 
-    Used by tests to check prefill/decode consistency against the full
-    forward pass.
+    Covers every decoding family uniformly (transformer/ssm/hybrid via
+    their prefill; encoder-decoder via ``frames=...``). The engine's
+    fp32-page output is gated bit-exact against this in serve_bench.
     """
-    from repro.models import transformer as tf
-
-    logits, cache, t = tf.prefill(params, model.cfg, prompt, max_len)
+    if model.prefill is None:
+        raise ValueError(f"{model.name} has no prefill")
+    if n_new <= 0:
+        return []
+    prompt = jnp.asarray(prompt, jnp.int32)
+    if prompt.ndim == 1:
+        prompt = prompt[None]
+    logits, cache, t = model.prefill(params, prompt, max_len, **extras)
     tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
     out = [int(tok[0, 0])]
     step = jax.jit(lambda p, c, tk, tt: model.decode_step(p, c, tk, tt))
-    for i in range(n_new - 1):
+    for _ in range(n_new - 1):
         t = t + 1
         logits, cache = step(params, cache, tok, t)
         tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)

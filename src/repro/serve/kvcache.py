@@ -1,0 +1,176 @@
+"""Paged KV cache: fixed-size pages from a shared pool, codec-encoded.
+
+vLLM-style layout adapted to the repo's codec family: each attention layer
+owns a pool of ``n_pages`` physical pages, each holding ``page`` token
+positions of K and V. A slot's logical pages map to physical ids through a
+per-slot ``page_table`` (shared across layers — every layer sees the same
+token positions); the host-side free list lives in
+``repro.serve.scheduler.PagePool``.
+
+Pages are *sealed* through ``repro.memory.codec``: while a slot writes
+positions into its current page, the raw values sit in a per-slot fp
+``tail`` buffer; the micro-step that fills the page's last position encodes
+the tail (fp32 passthrough / bf16 / int8 affine-per-row / NSD wire format —
+the same bit-exact-tested family the residual store uses, the paper's
+§"8-bit compatibility" argument applied to inference memory) and scatters
+it into the pool. Reads gather the slot's pages, decode them, and overlay
+the raw tail, so the newest (unsealed) positions are always exact.
+
+Everything is shape-static and SPMD-uniform: inactive slots carry t < 0,
+their writes park one index out of bounds (JAX scatter drops them) and
+their key positions are masked invalid. ``update_and_view`` is the single
+hook ``repro.models.layers.attention`` calls — models never see the page
+math.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.memory import codec
+
+KV_MODES = ("fp32", "bf16", "int8", "nsd")
+
+
+def _encode_page(mode: str, x: jax.Array, key: jax.Array):
+    """Encode one (page, KV, hd) tail page; vmapped over pages."""
+    return codec.encode(mode, x, codec.resid_key(key))
+
+
+def _decode_page(mode: str, enc):
+    return codec.decode(mode, enc)
+
+
+def page_stored_nbytes(mode: str, page: int, n_kv: int, hd: int) -> int:
+    """Static capacity bytes of one encoded K+V page (fp32 accounting)."""
+    return 2 * codec.stored_nbytes(mode, (page, n_kv, hd), jnp.float32)
+
+
+def page_dense_nbytes(page: int, n_kv: int, hd: int) -> int:
+    """Dense fp32 counterfactual bytes of one K+V page."""
+    return 2 * codec.dense_nbytes((page, n_kv, hd), jnp.float32)
+
+
+def pages_for(n_tokens: int, page: int) -> int:
+    """Logical pages covering ``n_tokens`` positions."""
+    return -(-int(n_tokens) // page)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PagedKV:
+    """One attention layer's paged K/V state (jit-safe pytree).
+
+    ``pool_k``/``pool_v`` are the codec-encoded page stores: for fp32 a raw
+    (n_pages, page, KV, hd) array, otherwise the codec's container with an
+    added leading n_pages axis (built by vmapped encode, so the static
+    shape metadata stays per-page). ``page_table`` maps (slot, logical
+    page) -> physical id, -1 for unmapped.
+    """
+
+    pool_k: object
+    pool_v: object
+    tail_k: jax.Array  # (B, page, KV, hd) raw current-page buffer
+    tail_v: jax.Array
+    page_table: jax.Array  # (B, max_pages) int32
+    key: jax.Array  # base PRNG key; per-page streams fold in the page id
+    mode: str = dataclasses.field(metadata=dict(static=True), default="fp32")
+    page: int = dataclasses.field(metadata=dict(static=True), default=16)
+    n_pages: int = dataclasses.field(metadata=dict(static=True), default=0)
+
+    @property
+    def max_pages(self) -> int:
+        return self.page_table.shape[1]
+
+    @property
+    def view_len(self) -> int:
+        return self.max_pages * self.page
+
+    def with_table(self, table: jax.Array) -> "PagedKV":
+        return dataclasses.replace(
+            self, page_table=jnp.asarray(table, jnp.int32))
+
+    def update_and_view(self, k: jax.Array, v: jax.Array, t: jax.Array
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                   jax.Array, "PagedKV"]:
+        """Write one token per slot, seal filled pages, return the view.
+
+        k/v: (B, 1, KV, hd) new projections; t: (B,) absolute positions,
+        t < 0 for inactive slots. Returns (K, V, k_pos, valid, new_cache)
+        with K/V (B, max_pages*page, KV, hd) and valid masking both unused
+        view positions and inactive slots.
+        """
+        B = t.shape[0]
+        page, n_pages, P = self.page, self.n_pages, self.max_pages
+        rows = jnp.arange(B)
+        active = t >= 0
+        off = jnp.where(active, t % page, page)  # park inactive (drop)
+        cur = jnp.clip(jnp.where(active, t // page, 0), 0, P - 1)
+
+        tail_k = self.tail_k.at[rows, off].set(
+            k[:, 0].astype(self.tail_k.dtype), mode="drop")
+        tail_v = self.tail_v.at[rows, off].set(
+            v[:, 0].astype(self.tail_v.dtype), mode="drop")
+
+        # seal: the write that fills a page encodes + scatters it; rows not
+        # sealing park at pid == n_pages (dropped). Encoding all B tails is
+        # wasted work on non-seal ticks but keeps the step SPMD-uniform.
+        mapped = self.page_table[rows, cur]
+        seal = active & (t % page == page - 1) & (mapped >= 0)
+        pid = jnp.where(seal, mapped, n_pages)
+        keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(self.key, pid)
+        enc_k = jax.vmap(lambda x, kk: _encode_page(self.mode, x, kk))(
+            tail_k.astype(jnp.float32), keys)
+        enc_v = jax.vmap(lambda x, kk: _encode_page(self.mode, x, kk))(
+            tail_v.astype(jnp.float32), keys)
+        pool_k = jax.tree.map(
+            lambda pool, new: pool.at[pid].set(new, mode="drop"),
+            self.pool_k, enc_k)
+        pool_v = jax.tree.map(
+            lambda pool, new: pool.at[pid].set(new, mode="drop"),
+            self.pool_v, enc_v)
+
+        # view: gather + decode this slot's pages, overlay the raw tail
+        ids = jnp.clip(self.page_table, 0, max(n_pages - 1, 0))  # (B, P)
+        dec = jax.vmap(jax.vmap(lambda e: _decode_page(self.mode, e)))
+        K = dec(jax.tree.map(lambda a: a[ids], pool_k))
+        V = dec(jax.tree.map(lambda a: a[ids], pool_v))
+        K = K.reshape(B, P * page, *K.shape[3:])
+        V = V.reshape(B, P * page, *V.shape[3:])
+        overlay = jax.vmap(
+            lambda full, tail, c: jax.lax.dynamic_update_slice(
+                full, tail.astype(full.dtype), (c * page, 0, 0)))
+        K = overlay(K, tail_k, cur)
+        V = overlay(V, tail_v, cur)
+
+        k_pos = jnp.broadcast_to(jnp.arange(P * page), (B, P * page))
+        valid = (k_pos <= t[:, None]) & active[:, None]
+        new = dataclasses.replace(self, pool_k=pool_k, pool_v=pool_v,
+                                  tail_k=tail_k, tail_v=tail_v)
+        return K, V, k_pos, valid, new
+
+
+def init_paged(mode: str, batch: int, max_len: int, n_pages: int, page: int,
+               n_kv: int, hd: int, dtype, key: jax.Array) -> PagedKV:
+    """Zero-initialized paged cache for one layer.
+
+    ``max_len`` bounds the logical pages per slot; ``n_pages`` is the
+    shared physical pool (oversubscription is the scheduler's job).
+    """
+    if mode not in KV_MODES:
+        raise ValueError(f"kv mode {mode!r}: one of {KV_MODES}")
+    if page < 1 or n_pages < 1:
+        raise ValueError("page and n_pages must be >= 1")
+    max_pages = pages_for(max_len, page)
+    zero = jnp.zeros((page, n_kv, hd), jnp.float32)
+    enc_one = _encode_page(mode, zero, key)
+    pool = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_pages,) + a.shape).copy(), enc_one)
+    tail = jnp.zeros((batch, page, n_kv, hd), dtype)
+    table = jnp.full((batch, max_pages), -1, jnp.int32)
+    return PagedKV(pool_k=pool, pool_v=pool, tail_k=tail, tail_v=tail,
+                   page_table=table, key=key, mode=mode, page=page,
+                   n_pages=n_pages)
