@@ -21,16 +21,22 @@ def train_classifier(model: Model,
                      steps: int = 60, batch: int = 64, lr: float = 0.05,
                      seed: int = 0, noise: float = 0.5,
                      img: Optional[Tuple[int, int]] = None,
-                     n_classes: int = 10, memory=None) -> Dict[str, float]:
+                     n_classes: int = 10, memory=None,
+                     opt_overrides: Optional[Dict] = None
+                     ) -> Dict[str, float]:
     """Paper-recipe SGD training on the synthetic classification set.
 
     ``policy`` may be a full PolicyProgram (phases retrace at their
     boundaries; knob schedules and the controller ride the compiled step).
     ``memory`` is a repro.memory MemoryPolicy (or spec string) selecting
-    each dithered layer's residual codec / remat. Returns acc%, mean
-    dither sparsity%, worst-case bits, us/step (+ the measured residual
-    compression when telemetry is on and a memory policy is set).
+    each dithered layer's residual codec / remat. ``opt_overrides``
+    replaces fields of the recipe OptConfig (e.g. ``{"name": "adamw"}`` or
+    moment codecs ``{"mu_codec": "m8"}``) without forking the harness.
+    Returns acc%, mean dither sparsity%, worst-case bits, us/step (+ the
+    measured residual compression when telemetry is on and a memory policy
+    is set).
     """
+    import dataclasses
     from repro.memory.policy import as_memory_policy
 
     program = as_program(policy)
@@ -46,6 +52,8 @@ def train_classifier(model: Model,
                         grad_clip=None, schedule="step",
                         step_decay_every=max(steps // 2, 1),
                         step_decay_rate=0.1)
+    if opt_overrides:
+        opt_cfg = dataclasses.replace(opt_cfg, **opt_overrides)
     state = init_opt_state(params, opt_cfg)
     dcfg = ClassifConfig(n_classes=n_classes, img_size=img_size,
                          channels=channels, noise=noise, seed=seed)

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.bench import BenchResult, Gate
-from repro.comm.wireformat import tile_mask_from_bitmap
+from repro.quant.wire import tile_mask_from_bitmap
 from repro.core.rowdither import row_dither_compact
 from repro.kernels.bsp_matmul.bsp_matmul import bsp_matmul, bsp_matmul_int8
 from repro.kernels.bsp_matmul.ref import (bsp_matmul_blocked_ref,

@@ -13,7 +13,7 @@ Four claims, gated on every PR:
   (``meets_3p5_floor`` is a hard zero-band gate on that floor, on top of
   the banded ratio itself); the int8 ratio is banded alongside, and so is
   the HBM-resident *capacity* ratio (what the live buffers actually
-  shrink by — see repro.memory.codec on measured vs capacity).
+  shrink by — see repro.quant on measured vs capacity).
 * **convergence** — int8- and NSD-residual training lands within the
   committed accuracy band of fp32-residual training on the same harness
   (the paper's thesis extended to the saved activations: only the
@@ -30,9 +30,10 @@ import jax.numpy as jnp
 
 from repro.bench import BenchResult, Gate
 from repro.configs import paper_models as pm
-from repro.core import DitherPolicy, nsd
+from repro.core import DitherPolicy
 from repro.obs import metrics as statslib
-from repro.memory import DEFAULT_NSD_S, decode, encode, resid_key
+from repro.quant import (DEFAULT_NSD_S, decode, encode, nsd_fakequant,
+                         resid_key)
 
 from benchmarks.harness import train_classifier
 
@@ -54,7 +55,7 @@ def roundtrip_metrics(seed: int = 0) -> Dict[str, float]:
         x = jax.nn.relu(jax.random.normal(kx, shape, jnp.float32))
         kr = resid_key(jax.random.fold_in(kx, 1))
         dec = decode("nsd", encode("nsd", x, kr))
-        ref = nsd.nsd_quantize(x, kr, DEFAULT_NSD_S)
+        ref = nsd_fakequant(x, kr, DEFAULT_NSD_S)
         out[label] = float(jnp.max(jnp.abs(dec - ref)))
     x = jax.random.normal(jax.random.fold_in(key, 7), (32, 128)) * 3.0
     enc = encode("int8", x, key)

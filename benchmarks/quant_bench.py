@@ -1,0 +1,215 @@
+"""Quant-engine suite: the `repro.quant` registry acceptance gates.
+
+Races every registered codec through the one front door and gates the
+claims that make the registry trustworthy:
+
+* **registry_race** — for EVERY codec in ``codec_names()``: encode ->
+  decode round-trips within the codec's own ``error_bound`` (zero-width
+  band on the worst bound violation across codecs); ``nsd`` decode is
+  BIT-EXACT against the ``nsd_fakequant`` reference (zero-width band);
+  fp32/remat are identity. Per-codec compression ratios
+  (dense/stored_nbytes) are banded so a layout change cannot silently
+  fatten a format.
+* **compute_on_packed** — the nsd packed-domain backward products (jnp
+  backend) match decode-then-matmul within float tolerance; recorded with
+  a tight band.
+* **encode_timing** — per-codec encode+decode wall clock, recorded
+  UNGATED (shared-runner wall clock is noise).
+* **grad_codec_int4** — training with the registry codec ``int4@g32``
+  swapped onto the cotangent (``DitherPolicy.grad_codec``) converges
+  within the committed band of the paper NSD arm.
+* **moments** — adamw with ``mu_codec=m8`` / ``nu_codec=u8`` (8-bit
+  stored moments through the registry) lands within the committed
+  accuracy band of fp32-moment adamw on the same harness; sgd momentum
+  with ``m8`` alongside.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench import BenchResult, Gate
+from repro.configs import paper_models as pm
+from repro.core import DitherPolicy
+from repro.quant import (codec_names, decode, dense_nbytes, encode,
+                         error_bound, get_codec, nsd_fakequant, parse_spec,
+                         resid_key, stored_nbytes)
+
+from benchmarks.harness import train_classifier
+
+# every registered codec raced as SPEC strings (parameterized forms
+# exercise the grammar, not just the bare names)
+RACE_SPECS = ("fp32", "remat", "bf16", "int8", "nsd", "nsd@0.5",
+              "int8_absmax", "int4@g32", "int4@g64", "m8", "u8")
+
+
+def _test_tensor(spec: str, key) -> jax.Array:
+    x = jax.random.normal(key, (64, 256), jnp.float32) * 3.0
+    if parse_spec(spec).codec == "u8":
+        return jnp.square(x)  # second moments are non-negative
+    return x
+
+
+def registry_race(seed: int = 0) -> Dict[str, float]:
+    """Round-trip every codec; worst bound violation + compression."""
+    raced = set()
+    out: Dict[str, float] = {"worst_err_over_bound": 0.0}
+    for i, spec in enumerate(RACE_SPECS):
+        raced.add(parse_spec(spec).codec)
+        key = resid_key(jax.random.fold_in(jax.random.PRNGKey(seed), i))
+        x = _test_tensor(spec, key)
+        enc = encode(spec, x, key)
+        dec = decode(spec, enc)
+        label = spec.replace("@", "_")
+        out[f"{label}_compression_x"] = (
+            dense_nbytes(x.shape, x.dtype)
+            / stored_nbytes(spec, x.shape, x.dtype))
+        if parse_spec(spec).codec in ("fp32", "remat"):
+            out[f"{label}_max_abs_diff"] = float(jnp.max(jnp.abs(dec - x)))
+            continue
+        if parse_spec(spec).codec == "nsd":
+            ref = nsd_fakequant(x, key, parse_spec(spec).param)
+            out[f"{label}_max_abs_diff"] = float(jnp.max(jnp.abs(dec - ref)))
+        bound = error_bound(spec, enc)
+        over = float(jnp.max(jnp.abs(dec - x) / (bound + 1e-12)))
+        out[f"{label}_err_over_bound"] = over
+        out["worst_err_over_bound"] = max(out["worst_err_over_bound"], over)
+    missing = set(codec_names()) - raced
+    if missing:  # a newly registered codec MUST join the race
+        raise AssertionError(f"codecs registered but not raced: {missing}")
+    return out
+
+
+def packed_compute_metrics(seed: int = 0) -> Dict[str, float]:
+    key = jax.random.PRNGKey(seed)
+    g = jax.random.normal(key, (32, 256), jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (32, 128), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 2), (128, 256), jnp.float32)
+    enc = encode("nsd", g, key)
+    codec, spec = get_codec("nsd"), parse_spec("nsd")
+    dx, dw = codec.compute_on_packed(spec, enc, x, w, backend="jnp")
+    g_hat = decode("nsd", enc)
+    dx_ref, dw_ref = g_hat @ w.T, x.T @ g_hat
+    def rel(a, b):
+        return float(jnp.max(jnp.abs(a - b)) / (jnp.max(jnp.abs(b)) + 1e-12))
+
+    return {"dx_rel_err": rel(dx, dx_ref), "dw_rel_err": rel(dw, dw_ref)}
+
+
+def timing_metrics(seed: int = 0, reps: int = 20) -> Dict[str, float]:
+    key = jax.random.PRNGKey(seed)
+    out: Dict[str, float] = {}
+    for spec in RACE_SPECS:
+        x = _test_tensor(spec, key)
+        enc_fn = jax.jit(lambda v, s=spec: encode(s, v, resid_key(key)))
+        dec_fn = jax.jit(lambda e, s=spec: decode(s, e))
+        enc = jax.block_until_ready(enc_fn(x))  # compile outside the clock
+        jax.block_until_ready(dec_fn(enc))
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(dec_fn(enc_fn(x)))
+        out[f"{spec.replace('@', '_')}_roundtrip_us"] = (
+            (time.perf_counter() - t0) / reps * 1e6)
+    return out
+
+
+def run(quick: bool = True) -> Dict[str, Dict]:
+    steps = 40 if quick else 120
+    model = pm.lenet300100()
+    arms: Dict[str, Dict[str, float]] = {}
+    arms["paper"] = train_classifier(
+        model, DitherPolicy(variant="paper", s=2.0), steps=steps)
+    arms["grad_int4"] = train_classifier(
+        model, DitherPolicy(variant="paper", s=2.0, grad_codec="int4@g32"),
+        steps=steps)
+    arms["sgd_m8"] = train_classifier(
+        model, DitherPolicy(variant="paper", s=2.0), steps=steps,
+        opt_overrides={"mu_codec": "m8"})
+    adamw = {"name": "adamw", "lr": 3e-3}
+    arms["adamw_fp32"] = train_classifier(
+        model, DitherPolicy(variant="paper", s=2.0), steps=steps,
+        opt_overrides=adamw)
+    arms["adamw_m8u8"] = train_classifier(
+        model, DitherPolicy(variant="paper", s=2.0), steps=steps,
+        opt_overrides=dict(adamw, mu_codec="m8", nu_codec="u8"))
+    return {"arms": arms, "race": registry_race(),
+            "packed": packed_compute_metrics(), "timing": timing_metrics()}
+
+
+def bench(quick: bool = True) -> List[BenchResult]:
+    out = run(quick=quick)
+    arms, race = out["arms"], out["race"]
+    results = [
+        BenchResult(
+            name="quant_bench/registry_race",
+            value=race["worst_err_over_bound"], unit="x",
+            derived=dict(race),
+            gates={
+                # nsd through the registry == the fakequant reference,
+                # bit for bit; identity codecs exact — zero-width bands
+                "nsd_max_abs_diff": Gate(abs=0.0, direction="both"),
+                "nsd_0.5_max_abs_diff": Gate(abs=0.0, direction="both"),
+                "fp32_max_abs_diff": Gate(abs=0.0, direction="both"),
+                "remat_max_abs_diff": Gate(abs=0.0, direction="both"),
+                # every codec honors its own characterized bound (<= 1,
+                # small fp headroom)
+                "worst_err_over_bound": Gate(abs=0.05, direction="high"),
+                # layout accounting: a format change that fattens storage
+                # must show up here
+                "int8_compression_x": Gate(rel=0.02, direction="low"),
+                "int4_g32_compression_x": Gate(rel=0.02, direction="low"),
+                "bf16_compression_x": Gate(abs=0.0, direction="both"),
+                "m8_compression_x": Gate(rel=0.02, direction="low"),
+                "u8_compression_x": Gate(rel=0.02, direction="low"),
+            },
+        ),
+        BenchResult(
+            name="quant_bench/compute_on_packed",
+            value=out["packed"]["dw_rel_err"], unit="x",
+            derived=dict(out["packed"]),
+            gates={"dx_rel_err": Gate(abs=1e-5, direction="high"),
+                   "dw_rel_err": Gate(abs=1e-5, direction="high")},
+        ),
+        BenchResult(
+            name="quant_bench/encode_timing",
+            value=out["timing"]["nsd_roundtrip_us"], unit="us",
+            derived=dict(out["timing"]),
+            gates={},  # wall clock on shared runners: trajectory only
+        ),
+        BenchResult(
+            name="quant_bench/grad_codec_int4",
+            value=arms["grad_int4"]["us_per_step"], unit="us/step",
+            derived={
+                "acc": arms["grad_int4"]["acc"],
+                "dacc": arms["grad_int4"]["acc"] - arms["paper"]["acc"],
+                "paper_acc": arms["paper"]["acc"],
+                "final_loss": arms["grad_int4"]["final_loss"],
+            },
+            gates={"acc": Gate(abs=10.0, direction="low"),
+                   "dacc": Gate(abs=8.0, direction="low")},
+        ),
+        BenchResult(
+            name="quant_bench/moments",
+            value=arms["adamw_m8u8"]["us_per_step"], unit="us/step",
+            derived={
+                "adamw_m8u8_acc": arms["adamw_m8u8"]["acc"],
+                "adamw_fp32_acc": arms["adamw_fp32"]["acc"],
+                "adamw_dacc": (arms["adamw_m8u8"]["acc"]
+                               - arms["adamw_fp32"]["acc"]),
+                "sgd_m8_acc": arms["sgd_m8"]["acc"],
+                "sgd_m8_dacc": arms["sgd_m8"]["acc"] - arms["paper"]["acc"],
+            },
+            gates={"adamw_m8u8_acc": Gate(abs=10.0, direction="low"),
+                   "adamw_dacc": Gate(abs=8.0, direction="low"),
+                   "sgd_m8_dacc": Gate(abs=8.0, direction="low")},
+        ),
+    ]
+    return results
+
+
+if __name__ == "__main__":
+    for r in bench(quick=True):
+        print(r.name, f"{r.value:.2f}{r.unit}", r.derived_str())

@@ -44,7 +44,8 @@ def _suite_fns() -> Dict[str, callable]:
     from benchmarks import (complexity, convergence, distributed_nodes,
                             hillclimb, kernel_bench, layer_sparsity,
                             memory_bench, meprop_compare, obs_bench,
-                            roofline_table, serve_bench, table1_sparsity)
+                            quant_bench, roofline_table, serve_bench,
+                            table1_sparsity)
 
     def meprop_both(quick: bool = True):
         return (meprop_compare.bench(quick=quick)
@@ -63,13 +64,14 @@ def _suite_fns() -> Dict[str, callable]:
         "hillclimb": hillclimb.bench,
         "obs_bench": obs_bench.bench,
         "serve_bench": serve_bench.bench,
+        "quant_bench": quant_bench.bench,
     }
 
 
 SUITE_NAMES = ("table1_sparsity", "layer_sparsity", "memory_bench",
                "convergence", "meprop_compare", "distributed_nodes",
                "kernel_bench", "complexity", "roofline_table", "hillclimb",
-               "obs_bench", "serve_bench")
+               "obs_bench", "serve_bench", "quant_bench")
 
 
 def result_path(suite: str, results_dir: str = RESULTS_DIR) -> str:

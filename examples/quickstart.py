@@ -47,8 +47,10 @@ program = PolicyProgram(
 )
 
 # Residual memory: store fc1's saved activations in the NSD wire layout
-# (bit-exact vs the nsd operator; ~4-6x smaller) and fc2's as affine int8.
-memory = parse_memory_program("default=nsd;rule fc2:int8")
+# (bit-exact vs the nsd operator; ~4-6x smaller) and fc2's in the
+# registry's grouped 4-bit codec — any spec from repro.quant.codec_names()
+# works here (the memory DSL resolves through the one codec registry).
+memory = parse_memory_program("default=nsd;rule fc2:int4@g32")
 
 
 def loss_fn(p, ctx):

@@ -1,7 +1,8 @@
 """repro.comm — NSD gradients as a first-class wire format.
 
-wireformat.py   packed (deltas + bitmap + non-zero int8 levels) layout,
-                jnp pack/unpack references, measured wire bytes
+wireformat.py   DEPRECATED shim over ``repro.quant.wire`` — the packed
+                (deltas + bitmap + non-zero int8 levels) layout is the
+                registered ``nsd`` codec's wire backend now
 reduce_base.py  segmenting / hop-key / wire+bound accounting shared by
                 the reduce topologies (sim and shard_map paths)
 ring.py         flat compressed ring all-reduce (re-dithered partial
@@ -76,7 +77,7 @@ from repro.comm.ring import (
     make_ring_allreduce,
     ring_allreduce_nsd,
 )
-from repro.comm.wireformat import (
+from repro.quant.wire import (
     DEFAULT_CHUNK,
     PackedNSD,
     pack_bitmap,

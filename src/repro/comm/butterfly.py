@@ -57,7 +57,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.comm import wireformat as wf
+from repro.quant import wire as wf
 from repro.comm.hierarchy import (_INTRA_SALT, _TREE_DOWN_SALT, _hier_shape,
                                   _mesh_axes, tree_rounds)
 from repro.comm.reduce_base import PackCounter, hop_key, seg_len, segment

@@ -6,8 +6,13 @@ wire in a data-parallel exchange:
     dense    f32 passthrough                       (4 bytes/elem)
     int8     NSD -> (int8 k, f32 Delta), dense k   (1 byte/elem + 4)
     nsd      NSD -> packed wire format             (bitmap + non-zero levels;
-                                                    see comm.wireformat)
+                                                    see repro.quant.wire)
     topk_ef  top-k sparsification + error feedback (8 bytes/kept elem)
+
+Any registered quant codec spec (``repro.quant``, e.g. ``"int4@g32"``) is
+also a valid per-leaf mode: it rides the registry branch of
+``compress_leaf`` with the codec's own measured wire bytes, so new formats
+reach the wire without touching this module.
 
 The NSD modes are the paper's operator on the comm side: unbiased, bounded
 error, nothing to tune beyond ``s``. ``topk_ef`` is the meProp-lineage
@@ -28,8 +33,9 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.comm import wireformat as wf
-from repro.core import nsd
+from repro.quant import wire as wf
+from repro.quant import codecs as qc
+from repro.quant.registry import parse_spec
 from repro.core.policy import name_salt
 from repro.utils.pytree import flatten_with_names, tree_map_with_path_str
 
@@ -37,7 +43,20 @@ MODE_DENSE = "dense"
 MODE_INT8 = "int8"
 MODE_NSD = "nsd"
 MODE_TOPK_EF = "topk_ef"
+# The historical comm modes; any registered quant codec spec (e.g.
+# "int4@g32") is ALSO a valid wire mode now — it rides the registry
+# branch of ``compress_leaf`` with measured bytes from the codec.
 MODES = (MODE_DENSE, MODE_INT8, MODE_NSD, MODE_TOPK_EF)
+
+
+def _valid_comm_mode(mode: str) -> bool:
+    if mode in MODES:
+        return True
+    try:
+        parse_spec(mode)
+        return True
+    except ValueError:
+        return False
 
 # How the data-parallel reduce itself is organized (repro.comm.ring /
 # repro.comm.hierarchy / repro.comm.butterfly). "ps" is the parameter-
@@ -104,8 +123,10 @@ class CommPolicy:
 
     def __post_init__(self):
         for m in (self.default,) + tuple(m for _, m in self.overrides):
-            if m not in MODES:
-                raise ValueError(f"unknown comm mode {m!r}; one of {MODES}")
+            if not _valid_comm_mode(m):
+                raise ValueError(
+                    f"unknown comm mode {m!r}; one of {MODES} or a "
+                    f"registered quant codec spec (repro.quant)")
         if self.topology not in TOPOLOGIES:
             raise ValueError(f"unknown comm topology {self.topology!r}; "
                              f"one of {TOPOLOGIES}")
@@ -162,7 +183,7 @@ def compress_leaf(g: jax.Array, key: jax.Array, mode: str,
     if mode == MODE_DENSE:
         return g, jnp.int32(dense_bytes), state
     if mode == MODE_INT8:
-        q = nsd.nsd_quantize_int8(g, key, policy.s)
+        q = qc.nsd_int8(g, key, policy.s)
         return (q.dequantize(g.dtype),
                 jnp.int32(g.size + 4 + wf.HEADER_BYTES), state)
     if mode == MODE_NSD:
@@ -173,7 +194,11 @@ def compress_leaf(g: jax.Array, key: jax.Array, mode: str,
         k = max(1, int(policy.topk_frac * g.size))
         # int32 index + f32 value per kept element
         return sent, jnp.int32(8 * k + wf.HEADER_BYTES), new_state
-    raise ValueError(mode)
+    # any registered quant codec spec (e.g. "int4@g32"): encode/decode
+    # through the registry with the codec's own measured wire bytes
+    enc = qc.encode(mode, g, key)
+    g_hat = qc.decode(mode, enc).astype(g.dtype)
+    return g_hat, qc.measured_bytes(mode, enc), state
 
 
 def init_comm_state(grads: Any, policy: CommPolicy) -> Dict[str, Any]:

@@ -56,7 +56,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.comm import wireformat as wf
+from repro.quant import wire as wf
 from repro.comm.reduce_base import PackCounter, hop_key, seg_len, segment
 from repro.parallel.axes import shard_map_compat
 

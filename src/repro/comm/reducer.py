@@ -48,7 +48,7 @@ from repro.comm.compression import (MODE_DENSE, MODE_TOPK_EF, TOPO_BUTTERFLY,
                                     init_comm_state, topk_error_feedback)
 from repro.comm.hierarchy import HierConfig, hier_allreduce_nsd
 from repro.comm.ring import RingConfig, ring_allreduce_nsd
-from repro.comm import wireformat as wf
+from repro.quant import wire as wf
 from repro.core.policy import name_salt
 from repro.utils.pytree import tree_map_with_path_str
 

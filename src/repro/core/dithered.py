@@ -75,11 +75,11 @@ from repro.core.policy import (
 # --------------------------------------------------------------------------
 
 def _residlib():
-    # lazy: repro.memory imports repro.comm which imports repro.core — a
-    # module-level import here would run mid-way through core/__init__
-    from repro.memory import codec
+    # lazy: repro.quant imports repro.core — a module-level import here
+    # would run mid-way through core/__init__
+    from repro import quant
 
-    return codec
+    return quant
 
 
 def encode_residual(x: jax.Array, key: jax.Array, spec: StaticSpec,
@@ -87,7 +87,7 @@ def encode_residual(x: jax.Array, key: jax.Array, spec: StaticSpec,
     """Encode a saved forward residual under the layer's static mode and,
     when telemetry is on, record its measured / capacity / dense byte
     counts (wire-equivalent occupancy, HBM-resident buffers, legacy fp32
-    store — see repro.memory.codec for the distinction)."""
+    store — see repro.quant for the distinction)."""
     codec = _residlib()
     if spec.residual in ("fp32", "remat"):
         enc = x  # identity: the residual tuple matches the legacy trace
@@ -178,7 +178,23 @@ def quantize_cotangent(
 
     ``knobs`` is the traced [s, meprop_k_frac, row_alpha] vector; ``spec``
     carries the static variant/telemetry switches.
+
+    When ``spec.grad_codec`` is set, the registered quant codec replaces
+    the variant's built-in quantizer: the cotangent takes the codec's
+    fake-quant round trip (e.g. ``"int4@g32"`` grouped-scale), so new
+    formats reach gradients without a new variant.
     """
+    if spec.grad_codec is not None:
+        quant = _residlib()
+        out = quant.quantize(spec.grad_codec, g, key).astype(g.dtype)
+        if spec.collect_stats:
+            zero = 1.0 - jnp.mean((out != 0).astype(jnp.float32))
+            bits = quant.parse_spec(spec.grad_codec).bits
+            statslib.emit(
+                spec.stats_tag + name,
+                nsd.QuantStats(zero, jnp.float32(bits), jnp.float32(0)),
+            )
+        return out
     if spec.variant in (VARIANT_PAPER, VARIANT_INT8, VARIANT_KERNEL):
         delta = nsd.compute_delta(g, knobs[KNOB_S])
         k = nsd.nsd_indices(g, key, delta)
@@ -376,7 +392,8 @@ def _make_dithered_op(primal_fn: Callable,
     def bwd(spec, name, res, g):
         enc, w, key, knobs = res
         x = decode_residual(enc, spec)
-        if spec.variant == VARIANT_KERNEL and kernel_bwd is not None:
+        if spec.variant == VARIANT_KERNEL and kernel_bwd is not None \
+                and spec.grad_codec is None:
             out = kernel_bwd(x, w, key, knobs, spec, name, g)
             if out is not None:
                 dx, dw = out
@@ -419,7 +436,9 @@ def _dd_bwd(spec, name, res, g):
     x2d = x.reshape(-1, kdim)
     g2d = g.reshape(-1, g.shape[-1])
 
-    if spec.variant == VARIANT_KERNEL:
+    # a grad_codec overrides the variant's built-in quantizer: skip the
+    # NSD-specific kernel/int8 fast paths and take the generic route below
+    if spec.variant == VARIANT_KERNEL and spec.grad_codec is None:
         # Pallas path: fused NSD quantize + tile-skipping int8 matmuls
         # (interpret mode on CPU; compiled VMEM kernels on TPU). Any layer
         # shape: operands are zero-padded to tile multiples, the padding
@@ -427,15 +446,15 @@ def _dd_bwd(spec, name, res, g):
         dx, dw = _dense_kernel_bwd(x, w, key, knobs, spec, name, g)
         return dx, dw, None, None
 
-    if spec.variant == VARIANT_INT8:
+    if spec.variant == VARIANT_INT8 and spec.grad_codec is None:
         # NSD indices ARE an int8 tensor; x and w get absmax int8. Both
         # backward products then run on the int8 MXU path (2x bf16 on v5e).
         delta = nsd.compute_delta(g2d, s)
         k = nsd.nsd_indices(g2d, key, delta).astype(jnp.int8)
         if spec.collect_stats:
             statslib.emit(spec.stats_tag + name, nsd.quant_stats(k, delta))
-        xq = int8lib.quantize_int8(x2d)
-        wq = int8lib.quantize_int8(w)
+        xq = int8lib._quantize_int8(x2d)
+        wq = int8lib._quantize_int8(w)
         # dx = g~ @ W^T : contract over the output dim
         dx2d = jax.lax.dot_general(
             k, wq.q, dimension_numbers=(((1,), (1,)), ((), ())),

@@ -25,7 +25,7 @@ def absmax_scale(x: jax.Array) -> jax.Array:
     return jnp.maximum(amax, jnp.finfo(jnp.float32).tiny) / 127.0
 
 
-def quantize_int8(x: jax.Array, key: Optional[jax.Array] = None) -> QuantTensor:
+def _quantize_int8(x: jax.Array, key: Optional[jax.Array] = None) -> QuantTensor:
     """Absmax int8; stochastic rounding when ``key`` is given (grad-friendly)."""
     scale = absmax_scale(x)
     v = x.astype(jnp.float32) / scale
@@ -33,6 +33,21 @@ def quantize_int8(x: jax.Array, key: Optional[jax.Array] = None) -> QuantTensor:
         v = v + jax.random.uniform(key, x.shape, jnp.float32, -0.5, 0.5)
     q = jnp.clip(jnp.round(v), -127, 127).astype(jnp.int8)
     return QuantTensor(q=q, scale=scale)
+
+
+def quantize_int8(x: jax.Array, key: Optional[jax.Array] = None) -> QuantTensor:
+    """DEPRECATED: use :func:`repro.quant.absmax_int8` (same math).
+
+    The canonical home moved to the quant engine (the ``int8_absmax``
+    codec); this wrapper stays bit-exact via the local primitive.
+    """
+    import warnings
+
+    warnings.warn(
+        "repro.core.int8.quantize_int8 is deprecated; use "
+        "repro.quant.absmax_int8 (bit-exact, same signature)",
+        DeprecationWarning, stacklevel=2)
+    return _quantize_int8(x, key)
 
 
 def int8_matmul(xq: QuantTensor, wq: QuantTensor,
@@ -53,7 +68,7 @@ def int8_dense_ste(x: jax.Array, w: jax.Array) -> jax.Array:
     This is the Banner-style forward; pairing it with dithered backprop on
     the *same* layer happens in ``core.dithered.dense`` which owns the bwd.
     """
-    return int8_matmul(quantize_int8(x), quantize_int8(w), out_dtype=x.dtype)
+    return int8_matmul(_quantize_int8(x), _quantize_int8(w), out_dtype=x.dtype)
 
 
 def _fwd(x, w):

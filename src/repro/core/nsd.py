@@ -55,7 +55,17 @@ def nsd_indices(x: jax.Array, key: jax.Array, delta: jax.Array) -> jax.Array:
 
 
 def nsd_quantize(x: jax.Array, key: jax.Array, s: float) -> jax.Array:
-    """Paper-faithful NSD: returns the dequantized tensor Delta * k in x.dtype."""
+    """DEPRECATED: use :func:`repro.quant.nsd_fakequant` (same math).
+
+    The canonical home moved to the quant engine; this wrapper composes
+    the (undeprecated) primitives above, so it stays bit-exact.
+    """
+    import warnings
+
+    warnings.warn(
+        "repro.core.nsd.nsd_quantize is deprecated; use "
+        "repro.quant.nsd_fakequant (bit-exact, same signature)",
+        DeprecationWarning, stacklevel=2)
     delta = compute_delta(x, s)
     k = nsd_indices(x, key, delta)
     return (k.astype(jnp.float32) * delta).astype(x.dtype)
@@ -72,7 +82,16 @@ class QuantizedGrad(NamedTuple):
 
 
 def nsd_quantize_int8(x: jax.Array, key: jax.Array, s: float) -> QuantizedGrad:
-    """NSD to the compact (int8 k, f32 Delta) form used by the int8 backward path."""
+    """DEPRECATED: use :func:`repro.quant.nsd_int8` (same math).
+
+    Composes the (undeprecated) primitives above, so it stays bit-exact.
+    """
+    import warnings
+
+    warnings.warn(
+        "repro.core.nsd.nsd_quantize_int8 is deprecated; use "
+        "repro.quant.nsd_int8 (bit-exact, same signature)",
+        DeprecationWarning, stacklevel=2)
     delta = compute_delta(x, s)
     k = nsd_indices(x, key, delta)
     return QuantizedGrad(k=k.astype(jnp.int8), delta=delta)

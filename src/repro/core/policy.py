@@ -102,11 +102,17 @@ class StaticSpec:
     stats_tag: str = ""
     meprop_k_static: Optional[float] = None
     # residual-memory mode for the layer's saved forward residual (see
-    # repro.memory.codec.MODES): "fp32" is the legacy dense store; "remat"
+    # repro.quant; any registered codec spec): "fp32" is the legacy dense
+    # store; "remat"
     # wraps the op in jax.checkpoint; the codecs store x compressed. Static
     # per layer by construction — stamped from MemoryPolicy rules at trace
     # time in DitherCtx.resolve, so knob schedules cannot touch it.
     residual: str = "fp32"
+    # registered quant codec spec (repro.quant, e.g. "int4@g32") applied to
+    # the pre-activation cotangent INSTEAD of the variant's built-in NSD
+    # quantizer; None keeps the variant's own path. Static per layer: codec
+    # choice shapes the trace, its parameters live in the spec string.
+    grad_codec: Optional[str] = None
 
 
 class Resolved(NamedTuple):
@@ -132,12 +138,20 @@ class DitherPolicy:
     collect_stats: bool = False  # io_callback telemetry (single-host only)
     exclude: tuple = ()  # layer-name substrings exempted from dithering
     stats_tag: str = ""  # prefix for telemetry records
+    # registered quant codec spec for the cotangent (see StaticSpec); None
+    # keeps the variant's built-in NSD quantizer
+    grad_codec: Optional[str] = None
 
     def __post_init__(self):
         if self.variant not in VARIANTS:
             raise ValueError(f"unknown variant {self.variant!r}; one of {VARIANTS}")
         validate_knob_values(self.s, self.meprop_k_frac, self.row_alpha,
                              owner="DitherPolicy")
+        if self.grad_codec is not None:
+            # lazy: repro.quant imports repro.core at module level
+            from repro.quant.registry import validate_spec
+
+            validate_spec(self.grad_codec)
 
     @property
     def enabled(self) -> bool:
@@ -157,7 +171,8 @@ class DitherPolicy:
                           stats_tag=self.stats_tag,
                           meprop_k_static=(self.meprop_k_frac
                                            if self.variant == VARIANT_MEPROP
-                                           else None))
+                                           else None),
+                          grad_codec=self.grad_codec)
 
     def knobs(self) -> jax.Array:
         return knobs_array(self.s, self.meprop_k_frac, self.row_alpha)

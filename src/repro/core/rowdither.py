@@ -101,7 +101,9 @@ def row_then_nsd(
     """Row dither followed by elementwise NSD on the survivors."""
     k1, k2 = jax.random.split(key)
     rd = row_dither(g, k1, alpha)
-    return nsd.nsd_quantize(rd, k2, s)
+    delta = nsd.compute_delta(rd, s)
+    k = nsd.nsd_indices(rd, k2, delta)
+    return (k.astype(jnp.float32) * delta).astype(rd.dtype)
 
 
 def row_sparsity(g: jax.Array, key: jax.Array, alpha: float) -> jax.Array:

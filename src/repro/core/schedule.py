@@ -430,7 +430,8 @@ class PolicyProgram:
             elif not isinstance(kf, _SCHEDULE_TYPES):
                 kf_static = float(kf)
         spec = StaticSpec(variant=variant, collect_stats=base.collect_stats,
-                          stats_tag=base.stats_tag, meprop_k_static=kf_static)
+                          stats_tag=base.stats_tag, meprop_k_static=kf_static,
+                          grad_codec=base.grad_codec)
         return Resolved(spec=spec, knobs=knobs, key=ctx.key_for(name))
 
     def replace(self, **kw) -> "PolicyProgram":

@@ -32,12 +32,12 @@ import jax.numpy as jnp
 from repro.comm.compression import (TOPO_PS, CommPolicy, ErrorFeedbackState,
                                     topk_error_feedback)
 from repro.comm.reducer import reducer as comm_reducer
-from repro.core import nsd
 from repro.core.policy import DitherCtx, DitherPolicy
 from repro.core.schedule import PolicyProgram, as_program
 from repro.obs.trace import annotate
 from repro.models.api import Model
 from repro.optim import OptConfig, apply_updates
+from repro import quant
 
 __all__ = ["SSGDConfig", "ErrorFeedbackState", "int8_allreduce_sim",
            "make_ssgd_step", "shard_batch", "topk_error_feedback"]
@@ -231,7 +231,7 @@ def int8_allreduce_sim(grads_per_node: List, key: jax.Array):
     n = len(grads_per_node)
     acc = None
     for i, g in enumerate(grads_per_node):
-        q = nsd.nsd_quantize_int8(g, jax.random.fold_in(key, i), s=1.0)
+        q = quant.nsd_int8(g, jax.random.fold_in(key, i), 1.0)
         deq = q.dequantize()
         acc = deq if acc is None else acc + deq
     return acc / n

@@ -5,6 +5,9 @@ nsd_quant/   fused NSD quantize -> (int8 k, tile-occupancy map)
 bsp_matmul/  tile-skipping quantized matmuls (dequant + full-int8 variants;
              masked tiles skip MXU issue AND operand DMA via fetch maps)
 pack/        occupancy-bitmap pack/unpack for the comm wire format
+levels/      chunk-local compact/expand of the wire's non-zero int8 levels
+             (butterfly routing network; replaces the jnp full-cumsum
+             compact behind repro.quant.wire's pallas backend)
 ops.py       jit'd high-level wrappers: the full dithered backward pipeline
              (fused NSD -> wire bitmap -> bitmap-derived tile mask ->
              tile-skipping backward products) for any layer shape
@@ -14,8 +17,11 @@ from repro.kernels.nsd_quant.nsd_quant import nsd_quantize_blocked
 from repro.kernels.bsp_matmul.bsp_matmul import (bsp_matmul, bsp_matmul_int8,
                                                  fetch_map)
 from repro.kernels.pack.pack import bitmap_pack_blocked, bitmap_unpack_blocked
+from repro.kernels.levels.levels import (levels_compact_blocked,
+                                         levels_expand_blocked)
 from repro.kernels import ops
 
 __all__ = ["default_interpret", "on_tpu", "nsd_quantize_blocked",
            "bsp_matmul", "bsp_matmul_int8", "fetch_map",
-           "bitmap_pack_blocked", "bitmap_unpack_blocked", "ops"]
+           "bitmap_pack_blocked", "bitmap_unpack_blocked",
+           "levels_compact_blocked", "levels_expand_blocked", "ops"]

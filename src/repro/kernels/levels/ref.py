@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the chunk-local levels compact/expand kernels."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compact_columns_ref(kt: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Column-local stable compaction via per-column cumsum (the oracle)."""
+    L = kt.shape[0]
+
+    def one(col):
+        nz = col != 0
+        pos = jnp.cumsum(nz.astype(jnp.int32)) - 1
+        tgt = jnp.where(nz, pos, L)
+        out = jnp.zeros((L,), jnp.int8).at[tgt].set(col, mode="drop")
+        return out, jnp.sum(nz.astype(jnp.int32))
+
+    out, cnt = jax.vmap(one, in_axes=1, out_axes=(1, 0))(kt)
+    return out, cnt
+
+
+def expand_columns_ref(lv: jax.Array, mask: jax.Array) -> jax.Array:
+    """Column-local inverse of :func:`compact_columns_ref`."""
+
+    def one(col, m):
+        m = m != 0
+        pos = jnp.cumsum(m.astype(jnp.int32)) - 1
+        return jnp.where(m, col[jnp.clip(pos, 0, None)],
+                         jnp.zeros((), jnp.int8))
+
+    return jax.vmap(one, in_axes=1, out_axes=1)(lv, mask)

@@ -26,13 +26,13 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.comm import wireformat
-from repro.core import int8 as int8lib
 from repro.core import nsd
 from repro.kernels.backend import default_interpret
 from repro.kernels.bsp_matmul.bsp_matmul import bsp_matmul, bsp_matmul_int8
 from repro.kernels.nsd_quant.nsd_quant import nsd_quantize_blocked
 from repro.kernels.pack.pack import bitmap_pack_blocked
+from repro.quant import wire as wireformat
+from repro.quant.codecs import absmax_int8
 
 # Trace-time counter of structural kernel-path fallbacks (unsupported
 # einsum form, grouped/dilated conv, ...). Keyed by reason string; tests
@@ -156,8 +156,8 @@ def bsp_backward_from_quantized(
     x2d = _pad_to(x.reshape(-1, K), block, block)
 
     if int8_operands:
-        wq = int8lib.quantize_int8(w)
-        xq = int8lib.quantize_int8(x.reshape(-1, K))
+        wq = absmax_int8(w)
+        xq = absmax_int8(x.reshape(-1, K))
         # dx = g~ @ w^T : tiles of g~ index rows; mask transposes with g~
         dx = bsp_matmul_int8(
             q.k, _pad_to(wq.q.T, block, block), q.delta * wq.scale, q.mask,

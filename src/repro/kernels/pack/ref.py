@@ -1,6 +1,6 @@
 """Pure-jnp oracles for the bitmap pack/unpack kernels.
 
-Semantics are shared with ``repro.comm.wireformat.pack_bitmap`` /
+Semantics are shared with ``repro.quant.wire.pack_bitmap`` /
 ``unpack_bitmap`` (the wire-format reference); these wrappers only add the
 blocked nnz map so kernel outputs compare exactly.
 """
@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.comm.wireformat import pack_bitmap, unpack_bitmap
+from repro.quant.wire import pack_bitmap, unpack_bitmap
 
 
 def bitmap_pack_blocked_ref(k: jax.Array, *, bm: int = 128, bn: int = 128):

@@ -7,17 +7,19 @@ module unifies them behind a single spec with section prefixes::
 
     --program "dither: phase@0=off;phase@30=paper;rule lm_head:off \
                memory: default=nsd;rule fc0:int8 \
-               comm: topology=butterfly;pods=4;bucket_bytes=1048576"
+               comm: topology=butterfly;pods=4;bucket_bytes=1048576 \
+               quant: grad=int4@g32;mu=m8;nu=u8"
 
 A section starts at a whitespace-separated token beginning with one of
-``dither:`` / ``memory:`` / ``comm:``; everything until the next section
-marker belongs to it and is handed VERBATIM to that subsystem's existing
-parser (``repro.core.schedule.parse_program``,
+``dither:`` / ``memory:`` / ``comm:`` / ``quant:``; everything until the
+next section marker belongs to it and is handed VERBATIM to that
+subsystem's existing parser (``repro.core.schedule.parse_program``,
 ``repro.memory.policy.parse_memory_program``,
-``repro.comm.reducer.parse_comm_program``) — this module owns only the
+``repro.comm.reducer.parse_comm_program``,
+``repro.quant.parse_quant_program``) — this module owns only the
 splitting, so each DSL's grammar stays where it lives. Colons inside
 clauses (``rule lm_head:off``) never start a section because only the
-three known prefixes do.
+known prefixes do.
 
 ``--policy-program`` / ``--memory-program`` remain as deprecated aliases
 (merged into the corresponding section; collisions are errors), see
@@ -29,7 +31,7 @@ import dataclasses
 import warnings
 from typing import Optional
 
-SECTIONS = ("dither", "memory", "comm")
+SECTIONS = ("dither", "memory", "comm", "quant")
 
 __all__ = ["SECTIONS", "LaunchSpec", "format_program", "merge_legacy_flags",
            "parse_program"]
@@ -37,11 +39,12 @@ __all__ = ["SECTIONS", "LaunchSpec", "format_program", "merge_legacy_flags",
 
 @dataclasses.dataclass(frozen=True)
 class LaunchSpec:
-    """The three raw DSL sections of one ``--program`` spec."""
+    """The raw DSL sections of one ``--program`` spec."""
 
     dither: str = ""
     memory: str = ""
     comm: str = ""
+    quant: str = ""
 
     def dither_program(self, base):
         """Resolve the dither section to a PolicyProgram over ``base``."""
@@ -61,6 +64,13 @@ class LaunchSpec:
             return None
         from repro.comm.reducer import parse_comm_program
         return parse_comm_program(self.comm, base)
+
+    def quant_overrides(self):
+        """Resolve the quant section to a QuantProgram (None if empty)."""
+        if not self.quant:
+            return None
+        from repro.quant import parse_quant_program
+        return parse_quant_program(self.quant)
 
 
 def parse_program(spec: str) -> LaunchSpec:

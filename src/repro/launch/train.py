@@ -64,13 +64,16 @@ def main() -> None:
     ap.add_argument("--s", type=float, default=2.0)
     ap.add_argument("--program", default="",
                     help="unified run program with 'dither:'/'memory:'/"
-                    "'comm:' sections, e.g. \"dither: phase@0=off;"
+                    "'comm:'/'quant:' sections, e.g. \"dither: phase@0=off;"
                     "phase@30=paper;rule lm_head:off memory: default=nsd;"
                     "rule fc0:int8 comm: topology=butterfly;pods=4;"
-                    "bucket_bytes=1048576\" (see repro.launch.program). "
+                    "bucket_bytes=1048576 quant: grad=int4@g32;mu=m8;"
+                    "nu=u8\" (see repro.launch.program). "
                     "The dither section builds on --dither/--s as the "
                     "base policy; the comm section attaches a gradient "
-                    "CommPolicy to the trainer.")
+                    "CommPolicy to the trainer; the quant section picks "
+                    "registered codecs per surface (grad/wire/resid/mu/nu, "
+                    "see repro.quant.program).")
     ap.add_argument("--policy-program", default="",
                     help="DEPRECATED: use --program \"dither: ...\". "
                     "Per-layer/step policy program spec "
@@ -100,8 +103,14 @@ def main() -> None:
         args.arch)
     spec = merge_legacy_flags(args.program, args.policy_program,
                               args.memory_program)
+    qo = spec.quant_overrides()
     policy = (None if args.dither == "off"
               else DitherPolicy(variant=args.dither, s=args.s))
+    if qo is not None and qo.grad is not None:
+        # applied to the BASE policy so dither-program phases/rules inherit
+        # the cotangent codec (schedule.resolve_layer carries base.grad_codec)
+        policy = ((policy or DitherPolicy(variant="off", s=args.s))
+                  .replace(grad_codec=qo.grad))
     if spec.dither:
         # --dither off stays off as the base: only explicit program clauses
         # (phases / rule variants) re-enable dithering
@@ -109,6 +118,20 @@ def main() -> None:
                 else DitherPolicy(variant="off", s=args.s))
         policy = spec.dither_program(base)
     comm_policy = spec.comm_policy()
+    memory_program = spec.memory
+    if qo is not None:
+        if qo.wire is not None:
+            from repro.comm import CommPolicy
+
+            comm_policy = (comm_policy.replace(default=qo.wire)
+                           if comm_policy is not None
+                           else CommPolicy(default=qo.wire))
+        if qo.resid is not None:
+            if memory_program:
+                raise ValueError(
+                    "quant: resid= conflicts with the 'memory:' section "
+                    "(its default= clause); specify one")
+            memory_program = f"default={qo.resid}"
     obs = None
     if args.run_dir:
         from repro.obs import run_obs
@@ -124,14 +147,16 @@ def main() -> None:
         model,
         OptConfig(name="adamw", lr=args.lr, schedule="cosine",
                   warmup_steps=max(args.steps // 20, 1),
-                  total_steps=args.steps),
+                  total_steps=args.steps,
+                  mu_codec=qo.mu if qo is not None else None,
+                  nu_codec=qo.nu if qo is not None else None),
         TrainerConfig(total_steps=args.steps, grad_accum=args.grad_accum,
                       log_every=max(args.steps // 10, 1),
                       ckpt_dir=args.ckpt_dir,
                       ckpt_every=args.ckpt_every),
         policy=policy,
         comm_policy=comm_policy,
-        memory_policy=spec.memory or None,
+        memory_policy=memory_program or None,
         obs=obs,
     )
     fn = batch_fn_for(model, args.batch, args.seq)

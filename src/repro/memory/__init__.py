@@ -1,13 +1,16 @@
 """repro.memory — compressed residual store & per-layer rematerialization.
 
-codec.py       ResidualCodec family (fp32 / bf16 / int8 affine per-row /
-               nsd in the comm wire layout) + remat, with the static and
-               measured byte accountings
+codec.py       DEPRECATED shim over ``repro.quant`` — the residual formats
+               are registered codecs in the one quantization engine now
 policy.py      MemoryPolicy per-layer rules + the --memory-program DSL
 accounting.py  eval_shape residual-footprint reports for the dry-run grid
+
+The re-exports below come straight from ``repro.quant`` (bit-exact, same
+API), so ``repro.memory.encode`` etc. keep working without the deprecation
+warning that importing ``repro.memory.codec`` itself raises.
 """
 from repro.memory.accounting import footprint_totals, residual_report
-from repro.memory.codec import (
+from repro.quant.codecs import (
     DEFAULT_NSD_S,
     MODE_BF16,
     MODE_FP32,

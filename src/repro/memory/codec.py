@@ -1,225 +1,28 @@
-"""Residual codecs: compressed storage of forward residuals (paper §3.5).
+"""DEPRECATED shim: the residual codecs moved to :mod:`repro.quant`.
 
-The paper's thesis is that backward-pass signals tolerate aggressive
-stochastic quantization; the custom_vjp layers in ``repro.core.dithered``
-nevertheless used to save their forward residual — the activation ``x``
-that the weight-gradient product needs — as dense fp32, so activation
-memory, not compute, capped batch size on the dry-run grid. A
-``ResidualCodec`` encodes that residual at ``fwd`` time into a compact
-jit-safe pytree and decodes it in ``bwd``:
+The fp32/bf16/int8/nsd/remat residual formats are now registered codecs in
+the one quantization engine (``repro.quant.codecs``), resolved through the
+same spec strings this module accepted (numerics pinned bit-for-bit by
+tests/test_quant.py and the ``memory_bench`` zero-band gates — and the
+grammar widened: any registered codec, e.g. ``"int4@g32"``, is now a valid
+residual mode). Importing this module warns once per process; update
+imports::
 
-    fp32      identity passthrough (the legacy behavior; the parity arm)
-    bf16      2-byte truncation, exact round trip of the bf16-representable
-              values
-    int8      affine per-row: q = round((x - min_row)/scale_row) - 128 with
-              scale_row = range_row/255 — the reconstruction error is
-              BOUNDED by scale_row/2 per element (characterized, not exact;
-              pinned by tests/test_memory*.py)
-    nsd       the paper's own operator in the comm wire layout
-              (``repro.comm.wireformat``: per-chunk delta + occupancy
-              bitmap + compacted int8 levels). encode->decode is BIT-EXACT
-              against ``nsd.nsd_quantize`` for the same key, i.e. the only
-              loss is the (unbiased, eq. 5/6-bounded) NSD quantization
-              itself. ``"nsd@S"`` selects the dither scale (default
-              ``DEFAULT_NSD_S``; residuals want fidelity, so it is gentler
-              than the gradient-side default s=2).
-    remat     no codec: the op is wrapped in ``jax.checkpoint`` and the
-              VJP recomputes the forward from the op inputs instead of
-              consuming stored derived residuals. At op granularity the
-              checkpoint inputs are the activations themselves, so this is
-              the recompute-vs-decode *reference arm* (the ungated
-              ``memory_bench`` timing row), not a storage win — span-level
-              remat is a ROADMAP follow-up.
-
-Codec selection is per layer and STATIC (it rides ``StaticSpec.residual``
-through the custom_vjp), so knob schedules never recompile because of it
-(compile-counter pins in tests/test_memory.py). Two byte accountings are
-exposed: ``stored_nbytes`` is the shape-static capacity the encoded pytree
-occupies in HBM (what the dry-run max-batch estimate prices), and
-``measured_bytes`` is the traced occupancy-aware figure (for ``nsd``, the
-wire-format bytes a byte-true compacted store would hold) that the
-``repro.core.stats`` memory telemetry records.
+    from repro.memory import codec        # old
+    from repro import quant as codec      # new (same functions)
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Tuple
+import warnings
 
-import jax
-import jax.numpy as jnp
+from repro.quant.codecs import (  # noqa: F401
+    DEFAULT_NSD_S, MODE_BF16, MODE_FP32, MODE_INT8, MODE_NSD, MODE_REMAT,
+    MODES, RESID_SALT, Bf16Residual, Int8Residual, capacity_bytes, decode,
+    encode, measured_bytes, parse_mode, quantize, resid_key, stored_nbytes,
+    validate_mode)
+from repro.quant.registry import _nelems, dense_nbytes  # noqa: F401
 
-MODE_FP32 = "fp32"
-MODE_BF16 = "bf16"
-MODE_INT8 = "int8"
-MODE_NSD = "nsd"
-MODE_REMAT = "remat"
-MODES = (MODE_FP32, MODE_BF16, MODE_INT8, MODE_NSD, MODE_REMAT)
-
-# "nsd" residuals want fidelity (they feed the weight-gradient product),
-# so the default dither scale is gentler than the gradient-side s=2.
-DEFAULT_NSD_S = 1.0
-
-# Salt folded into the layer key for the residual encode so the activation
-# dither draws an RNG stream independent of the backward's cotangent dither.
-RESID_SALT = 0x4E5D
-
-
-def resid_key(key: jax.Array) -> jax.Array:
-    """The residual-encode RNG stream for a layer's per-step key."""
-    return jax.random.fold_in(key, RESID_SALT)
-
-
-@functools.lru_cache(maxsize=None)
-def parse_mode(mode: str) -> Tuple[str, float]:
-    """``"nsd@0.5"`` -> ("nsd", 0.5); plain modes get their default param."""
-    kind, _, param = mode.partition("@")
-    if kind not in MODES:
-        raise ValueError(
-            f"unknown residual mode {mode!r}; one of {MODES} "
-            f"(nsd may carry a scale: 'nsd@0.5')")
-    if param and kind != MODE_NSD:
-        raise ValueError(
-            f"residual mode {mode!r}: only 'nsd' takes an @-parameter")
-    if kind == MODE_NSD:
-        s = float(param) if param else DEFAULT_NSD_S
-        if not s > 0:
-            raise ValueError(f"residual mode {mode!r}: s must be > 0")
-        return kind, s
-    return kind, 0.0
-
-
-def validate_mode(mode: str) -> str:
-    parse_mode(mode)
-    return mode
-
-
-def _nelems(shape) -> int:
-    n = 1
-    for d in shape:
-        n *= int(d)
-    return n
-
-
-def dense_nbytes(shape, dtype) -> int:
-    """Bytes the dense residual occupies (what the codec replaces)."""
-    return _nelems(shape) * jnp.dtype(dtype).itemsize
-
-
-# ---------------------------------------------------------------------------
-# encoded-residual containers (jit-safe: static shape/dtype metadata)
-# ---------------------------------------------------------------------------
-
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass(frozen=True)
-class Bf16Residual:
-    data: jax.Array  # bf16, original shape
-    dtype: str = dataclasses.field(metadata=dict(static=True),
-                                   default="float32")
-
-
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass(frozen=True)
-class Int8Residual:
-    """Affine per-row int8: value ~= (q + 128) * scale + lo, row-wise."""
-
-    q: jax.Array  # int8 (rows, cols) — rows = prod(shape[:-1])
-    scale: jax.Array  # f32 (rows, 1): range / 255 (guarded > 0)
-    lo: jax.Array  # f32 (rows, 1): per-row minimum
-    shape: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True),
-                                               default=())
-    dtype: str = dataclasses.field(metadata=dict(static=True),
-                                   default="float32")
-
-
-# ---------------------------------------------------------------------------
-# encode / decode dispatch
-# ---------------------------------------------------------------------------
-
-def encode(mode: str, x: jax.Array, key: jax.Array):
-    """Encode a residual under ``mode``; fp32/remat return ``x`` itself."""
-    kind, param = parse_mode(mode)
-    if kind in (MODE_FP32, MODE_REMAT):
-        return x
-    if kind == MODE_BF16:
-        return Bf16Residual(data=x.astype(jnp.bfloat16),
-                            dtype=jnp.dtype(x.dtype).name)
-    if kind == MODE_INT8:
-        cols = x.shape[-1] if x.ndim else 1
-        x2 = x.astype(jnp.float32).reshape(-1, cols)
-        lo = jnp.min(x2, axis=1, keepdims=True)
-        hi = jnp.max(x2, axis=1, keepdims=True)
-        scale = jnp.maximum(hi - lo, jnp.finfo(jnp.float32).tiny) / 255.0
-        q = jnp.round((x2 - lo) / scale) - 128.0
-        q = jnp.clip(q, -128, 127).astype(jnp.int8)
-        return Int8Residual(q=q, scale=scale, lo=lo, shape=tuple(x.shape),
-                            dtype=jnp.dtype(x.dtype).name)
-    # nsd: the comm wire layout, bit-exact vs repro.core.nsd for this key
-    from repro.comm import wireformat
-
-    return wireformat.pack_nsd(x, key, param)
-
-
-def decode(mode: str, enc):
-    """Inverse of :func:`encode` (exact for fp32/bf16-representable/nsd's
-    quantized values; within scale/2 per element for int8)."""
-    kind, _ = parse_mode(mode)
-    if kind in (MODE_FP32, MODE_REMAT):
-        return enc
-    if kind == MODE_BF16:
-        return enc.data.astype(jnp.dtype(enc.dtype))
-    if kind == MODE_INT8:
-        x2 = (enc.q.astype(jnp.float32) + 128.0) * enc.scale + enc.lo
-        return x2.reshape(enc.shape).astype(jnp.dtype(enc.dtype))
-    from repro.comm import wireformat
-
-    return wireformat.unpack_nsd(enc)
-
-
-# ---------------------------------------------------------------------------
-# byte accounting
-# ---------------------------------------------------------------------------
-
-def stored_nbytes(mode: str, shape, dtype) -> int:
-    """Shape-static bytes the encoded residual occupies in HBM (capacity:
-    the ``nsd`` levels buffer keeps worst-case room, see wireformat)."""
-    kind, _ = parse_mode(mode)
-    n = _nelems(shape)
-    if kind in (MODE_FP32, MODE_REMAT):
-        # remat saves the raw op inputs across the checkpoint boundary —
-        # honest accounting: same bytes as fp32, zero decode cost.
-        return dense_nbytes(shape, dtype)
-    if kind == MODE_BF16:
-        return n * 2
-    if kind == MODE_INT8:
-        rows = n // int(shape[-1]) if shape else 1
-        return n + rows * 8  # q int8 + per-row (scale, lo) f32
-    from repro.comm import wireformat
-
-    chunk = wireformat.DEFAULT_CHUNK
-    padded = ((n + chunk - 1) // chunk) * chunk
-    n_chunks = padded // chunk
-    # levels capacity + bitmap + per-chunk deltas + nnz scalar
-    return padded + padded // 8 + 4 * n_chunks + 4
-
-
-def capacity_bytes(mode: str, enc) -> int:
-    """Static HBM-resident bytes of an encoded residual (the buffers that
-    actually stay live between fwd and bwd — for ``nsd`` the worst-case
-    levels capacity, NOT the occupancy figure). This is the number to size
-    batch headroom from; :func:`measured_bytes` is the tighter
-    wire-equivalent figure a byte-true compacted store would hold."""
-    kind, _ = parse_mode(mode)
-    if kind == MODE_BF16:
-        return _nelems(enc.data.shape) * 2
-    return stored_nbytes(mode, enc.shape, enc.dtype)
-
-
-def measured_bytes(mode: str, enc) -> jax.Array:
-    """Occupancy-aware bytes (traced i32): for ``nsd`` the wire-format
-    figure (bitmap + live levels prefix + deltas), static capacity for
-    every other mode."""
-    kind, _ = parse_mode(mode)
-    if kind == MODE_NSD:
-        return enc.wire_bytes()
-    return jnp.int32(capacity_bytes(mode, enc))
+warnings.warn(
+    "repro.memory.codec is deprecated; import repro.quant instead "
+    "(same API, bit-exact, over the codec registry)",
+    DeprecationWarning, stacklevel=2)

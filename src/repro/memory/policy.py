@@ -2,7 +2,8 @@
 
 ``MemoryPolicy`` mirrors the rule machinery of
 ``repro.core.schedule.LayerRule`` — ordered glob/substring patterns, last
-match wins — but selects a *residual mode* (``repro.memory.codec.MODES``)
+match wins — but selects a *residual mode* (any registered quant codec
+spec, ``repro.quant``; the legacy five are ``MODES``)
 instead of dither knobs. Resolution happens by static layer name at trace
 time through :meth:`repro.core.policy.DitherCtx.resolve`, which stamps the
 mode onto the resolved ``StaticSpec.residual``; the choice is therefore
@@ -23,7 +24,8 @@ clauses separated by ';':
   default=MODE          base mode for every dithered layer (default fp32)
   rule PATTERN:MODE     per-layer override; glob when the pattern contains
                         */?/[, substring otherwise; last match wins
-MODE: fp32 | bf16 | int8 | nsd | nsd@S | remat
+MODE: any registered quant codec spec (repro.quant.codec_names()),
+      e.g. fp32 | bf16 | int8 | nsd | nsd@S | int4@gG | m8 | remat
 """
 from __future__ import annotations
 
@@ -31,7 +33,7 @@ import dataclasses
 from typing import Optional, Tuple, Union
 
 from repro.core.schedule import pattern_matches
-from repro.memory.codec import MODE_FP32, validate_mode
+from repro.quant.codecs import MODE_FP32, validate_mode
 
 # a literal, not a __doc__ slice: -OO strips docstrings (schedule.py idiom)
 _SPEC_DOC = """\
@@ -39,7 +41,8 @@ clauses separated by ';':
   default=MODE          base mode for every dithered layer (default fp32)
   rule PATTERN:MODE     per-layer override; glob when the pattern contains
                         */?/[, substring otherwise; last match wins
-MODE: fp32 | bf16 | int8 | nsd | nsd@S | remat
+MODE: any registered quant codec spec (repro.quant.codec_names()),
+      e.g. fp32 | bf16 | int8 | nsd | nsd@S | int4@gG | m8 | remat
 """
 
 

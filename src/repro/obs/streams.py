@@ -94,7 +94,7 @@ SERVE = MetricStream(
     "serving engine occupancy + throughput per decode tick "
     "(repro.serve.engine): prompt/decode tokens fed into the step, tokens "
     "emitted, and KV-cache capacity bytes vs the dense fp32 counterfactual "
-    "(paged mode prices sealed pages through repro.memory.codec)")
+    "(paged mode prices sealed pages through repro.quant)")
 
 # one row per priced step of an overlap-scheduled reduce; tag = stats tag
 OVERLAP = MetricStream(

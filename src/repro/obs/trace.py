@@ -14,7 +14,12 @@ The span taxonomy used by the built-in drivers:
                     the caller performs inside)
 * ``controller``  — the sparsity-controller host tick (includes the
                     effects-barrier telemetry drain)
-* ``checkpoint``  — checkpoint save/wait
+* ``checkpoint``  — checkpoint save/wait (train-loop side)
+* ``ckpt_gather`` / ``ckpt_drain`` / ``ckpt_wait`` — checkpoint
+                    device->host transfer / backpressure join / final join
+* ``ckpt_write``  — the async writer thread's disk work, with nested
+                    ``serialize`` / ``commit`` / ``rotate`` phases (its own
+                    root path: span stacks are thread-local)
 * ``monitor``     — health-monitor evaluation (repro.obs.monitor)
 * ``admit`` / ``decode`` — serving-engine tick phases
 * ``lower`` / ``compile`` — dry-run cell phases

@@ -5,6 +5,15 @@ SGD-momentum matches the paper's training recipe (momentum 0.9, weight decay
 optimizer state (mixed-precision convention), f32 params update in place.
 Optimizer state mirrors the parameter sharding specs, so TP/DP sharding of
 the train step extends to the moments automatically.
+
+Moments can live *encoded* through the quant engine: ``mu_codec`` /
+``nu_codec`` name a deterministic registered codec spec (``repro.quant``,
+e.g. ``"m8"`` per-row absmax int8 momentum, ``"u8"`` sqrt-domain uint8
+second moment, or ``"int4@g32"``). The moment is decoded at the top of
+``apply_updates``, updated in f32, and re-encoded before it lands back in
+the state, so the optimizer math itself never changes; only storage does.
+Dithered codecs (needs_key) are rejected — moments re-encode every step
+with no RNG stream, and a biased re-quantization cycle wants determinism.
 """
 from __future__ import annotations
 
@@ -31,6 +40,23 @@ class OptConfig:
     step_decay_every: int = 100  # paper: lr-decay 0.1/100
     step_decay_rate: float = 0.1
     min_lr_ratio: float = 0.1
+    # deterministic quant codec specs for stored moments (None = dense f32)
+    mu_codec: Optional[str] = None
+    nu_codec: Optional[str] = None  # adamw only
+
+    def __post_init__(self):
+        for field, mode in (("mu_codec", self.mu_codec),
+                            ("nu_codec", self.nu_codec)):
+            if mode is None:
+                continue
+            # lazy: repro.quant imports repro.core at module level
+            from repro.quant.registry import get_codec, parse_spec
+
+            spec = parse_spec(mode)
+            if get_codec(spec.codec).needs_key:
+                raise ValueError(
+                    f"{field}={mode!r}: moment codecs must be deterministic "
+                    f"(re-encoded every step without an RNG stream)")
 
 
 def schedule_lr(cfg: OptConfig, step: jax.Array) -> jax.Array:
@@ -63,36 +89,83 @@ def _needs_master(p) -> bool:
     return p.dtype in (jnp.bfloat16, jnp.float16)
 
 
+def _enc_moment(mode: Optional[str], x: jax.Array):
+    if mode is None:
+        return x
+    from repro import quant
+
+    return quant.encode(mode, x)
+
+
+def _dec_moment(mode: Optional[str], enc) -> jax.Array:
+    if mode is None:
+        return enc
+    from repro import quant
+
+    return quant.decode(mode, enc)
+
+
 def init_opt_state(params, cfg: OptConfig) -> Dict[str, Any]:
     def master(p):
         return p.astype(jnp.float32) if _needs_master(p) else jnp.zeros((), jnp.int8)
+
+    def zeros_mu(p):
+        return _enc_moment(cfg.mu_codec, jnp.zeros(p.shape, jnp.float32))
+
+    def zeros_nu(p):
+        return _enc_moment(cfg.nu_codec, jnp.zeros(p.shape, jnp.float32))
 
     state: Dict[str, Any] = {
         "step": jnp.zeros((), jnp.int32),
         "master": jax.tree.map(master, params),
     }
     if cfg.name == "adamw":
-        state["mu"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-        state["nu"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        state["mu"] = jax.tree.map(zeros_mu, params)
+        state["nu"] = jax.tree.map(zeros_nu, params)
     elif cfg.name == "sgd":
-        state["mu"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        state["mu"] = jax.tree.map(zeros_mu, params)
     else:
         raise ValueError(cfg.name)
     return state
 
 
+def _moment_spec_template(mode: str):
+    """Replicated (all-None) spec subtree shaped like the codec container.
+
+    Container structure is shape-independent, so one eval_shape template
+    covers every param; encoded moments are small and replicate fine.
+    """
+    from repro import quant
+
+    template = jax.eval_shape(
+        lambda: quant.encode(mode, jnp.zeros((2, 2), jnp.float32)))
+    return jax.tree.map(lambda _: None, template)
+
+
 def opt_state_specs(param_specs, cfg: OptConfig):
-    """Logical-axis spec tree mirroring init_opt_state's structure."""
+    """Logical-axis spec tree mirroring init_opt_state's structure.
+
+    Encoded moments (``mu_codec`` / ``nu_codec``) swap each param's spec
+    leaf for a container-shaped subtree of None (replicated) so the tree
+    still matches the state leaf-for-leaf.
+    """
     def is_spec(s):
         return s is None or (isinstance(s, tuple) and all(
             a is None or isinstance(a, str) for a in s))
+
+    def moment_specs(mode: Optional[str]):
+        if mode is None:
+            return jax.tree.map(lambda s: s, param_specs, is_leaf=is_spec)
+        sub = _moment_spec_template(mode)
+        return jax.tree.map(lambda s: sub, param_specs, is_leaf=is_spec)
+
     scalar = ()
     master = jax.tree.map(lambda s: s, param_specs, is_leaf=is_spec)
     out = {"step": scalar, "master": master}
     if cfg.name in ("adamw", "sgd"):
-        out["mu"] = jax.tree.map(lambda s: s, param_specs, is_leaf=is_spec)
+        out["mu"] = moment_specs(cfg.mu_codec)
     if cfg.name == "adamw":
-        out["nu"] = jax.tree.map(lambda s: s, param_specs, is_leaf=is_spec)
+        out["nu"] = moment_specs(cfg.nu_codec)
     return out
 
 
@@ -111,14 +184,31 @@ def apply_updates(params, grads, state, cfg: OptConfig
 
     masters = jax.tree.map(get_master, params, state["master"])
 
+    # encoded moments: decode -> f32 update -> re-encode (storage only;
+    # the optimizer math below is unchanged)
+    def dec_tree(mode, tree, template):
+        # template (the params tree) supplies the leaf positions; tree.map
+        # hands each corresponding codec-container SUBTREE to the decode
+        if mode is None:
+            return tree
+        return jax.tree.map(lambda _, enc: _dec_moment(mode, enc),
+                            template, tree)
+
+    def enc_tree(mode, tree):
+        if mode is None:
+            return tree
+        return jax.tree.map(lambda m: _enc_moment(mode, m), tree)
+
     if cfg.name == "adamw":
         b1, b2 = cfg.b1, cfg.b2
         t = (step + 1).astype(jnp.float32)
+        mu_in = dec_tree(cfg.mu_codec, state["mu"], params)
+        nu_in = dec_tree(cfg.nu_codec, state["nu"], params)
         mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
-                          state["mu"], grads)
+                          mu_in, grads)
         nu = jax.tree.map(
             lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
-            state["nu"], grads)
+            nu_in, grads)
         bc1 = 1 - b1 ** t
         bc2 = 1 - b2 ** t
 
@@ -129,14 +219,18 @@ def apply_updates(params, grads, state, cfg: OptConfig
                              + cfg.weight_decay * w)
 
         new_masters = jax.tree.map(upd, masters, mu, nu)
-        new_state = dict(state, step=step + 1, mu=mu, nu=nu)
+        new_state = dict(state, step=step + 1,
+                         mu=enc_tree(cfg.mu_codec, mu),
+                         nu=enc_tree(cfg.nu_codec, nu))
     elif cfg.name == "sgd":
+        mu_in = dec_tree(cfg.mu_codec, state["mu"], params)
         mu = jax.tree.map(
             lambda m, g, w: cfg.momentum * m + g.astype(jnp.float32)
             + cfg.weight_decay * w,
-            state["mu"], grads, masters)
+            mu_in, grads, masters)
         new_masters = jax.tree.map(lambda w, m: w - lr * m, masters, mu)
-        new_state = dict(state, step=step + 1, mu=mu)
+        new_state = dict(state, step=step + 1,
+                         mu=enc_tree(cfg.mu_codec, mu))
     else:
         raise ValueError(cfg.name)
 

@@ -1,0 +1,82 @@
+"""repro.quant — the one quantization engine.
+
+Every quantized representation in the repo resolves through this package:
+gradient cotangents (``repro.core``), the reduce wire format
+(``repro.comm``), the residual store (``repro.memory``), KV-cache pages
+(``repro.serve``) and optimizer moments (``repro.optim``) all parse spec
+strings with :func:`parse_spec` and call the capabilities below — no
+subsystem carries private encode/decode code anymore.
+
+    spec.py      QuantSpec IR: dtype/bits, scale granularity, dither mode,
+                 sparsity layout
+    registry.py  Codec base class + registration; parse_spec front door
+    codecs.py    the built-in formats (fp32/remat/bf16/int8/nsd/
+                 int8_absmax/int4/m8/u8) + the facade dispatch
+    wire.py      the packed NSD wire layout (moved from
+                 ``repro.comm.wireformat``), jnp + Pallas backends
+
+The legacy entry points (``repro.memory.codec``, ``repro.comm.wireformat``,
+``repro.core.nsd.nsd_quantize*``, ``repro.core.int8.quantize_int8``) are
+deprecation shims over this package, pinned bit-exact by
+tests/test_quant.py.
+"""
+from repro.quant.codecs import (
+    DEFAULT_INT4_GROUP,
+    DEFAULT_NSD_S,
+    MODE_BF16,
+    MODE_FP32,
+    MODE_INT8,
+    MODE_NSD,
+    MODE_REMAT,
+    MODES,
+    RESID_SALT,
+    Bf16Residual,
+    Int4Grouped,
+    Int8Residual,
+    RowQuant8,
+    SqrtRowQuant8,
+    absmax_int8,
+    capacity_bytes,
+    decode,
+    encode,
+    error_bound,
+    measured_bytes,
+    nsd_fakequant,
+    nsd_int8,
+    packed_layout,
+    parse_mode,
+    quantize,
+    resid_key,
+    stored_nbytes,
+    validate_mode,
+)
+from repro.quant.program import (
+    QuantProgram,
+    format_quant_program,
+    parse_quant_program,
+)
+from repro.quant.registry import (
+    Codec,
+    codec_names,
+    dense_nbytes,
+    get_codec,
+    parse_spec,
+    register,
+    validate_spec,
+)
+from repro.quant.spec import QuantSpec
+from repro.quant import wire
+
+__all__ = [
+    "DEFAULT_INT4_GROUP", "DEFAULT_NSD_S", "MODE_BF16", "MODE_FP32",
+    "MODE_INT8", "MODE_NSD", "MODE_REMAT", "MODES", "RESID_SALT",
+    "Bf16Residual", "Int4Grouped", "Int8Residual", "RowQuant8",
+    "SqrtRowQuant8", "absmax_int8", "capacity_bytes", "decode", "encode",
+    "error_bound", "measured_bytes", "nsd_fakequant", "nsd_int8",
+    "packed_layout", "parse_mode", "quantize", "resid_key",
+    "stored_nbytes", "validate_mode",
+    "Codec", "codec_names", "dense_nbytes", "get_codec", "parse_spec",
+    "register", "validate_spec",
+    "QuantProgram", "format_quant_program", "parse_quant_program",
+    "QuantSpec", "wire",
+]

@@ -1,0 +1,82 @@
+"""The ``quant:`` section of the unified ``--program`` DSL.
+
+One place to pick codecs for every quantization surface of a run::
+
+    quant: grad=int4@g32;wire=nsd@1;resid=int8;mu=m8;nu=u8
+
+keys (each optional, ';'-separated, every value a registered codec spec):
+  grad=SPEC    cotangent codec (DitherPolicy.grad_codec — replaces the
+               variant's built-in NSD quantizer on dithered layers)
+  wire=SPEC    default per-leaf comm mode (CommPolicy.default)
+  resid=SPEC   default residual mode (shorthand for
+               ``memory: default=SPEC``; conflicts with an explicit
+               memory section are an error, not a silent preference)
+  mu=SPEC      stored first-moment codec (OptConfig.mu_codec;
+               deterministic codecs only)
+  nu=SPEC      stored second-moment codec (OptConfig.nu_codec)
+
+The KV-cache surface is not here: serving picks its page codec at engine
+build time (``--serve kv=...`` / ``init_paged``), which accepts the same
+registered specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.quant.registry import get_codec, parse_spec, validate_spec
+
+_KEYS = ("grad", "wire", "resid", "mu", "nu")
+
+# a literal, not a __doc__ slice: -OO strips docstrings (schedule.py idiom)
+_SPEC_DOC = """\
+';'-separated key=SPEC clauses; keys: grad (cotangent codec), wire (comm
+default mode), resid (residual default mode), mu / nu (stored optimizer
+moment codecs, deterministic only). Every SPEC is a registered quant codec
+spec, e.g. int4@g32, nsd@0.5, m8, u8.
+"""
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantProgram:
+    """Parsed ``quant:`` section; None = surface not overridden."""
+
+    grad: Optional[str] = None
+    wire: Optional[str] = None
+    resid: Optional[str] = None
+    mu: Optional[str] = None
+    nu: Optional[str] = None
+
+    def __bool__(self) -> bool:
+        return any(getattr(self, k) is not None for k in _KEYS)
+
+
+def parse_quant_program(spec: str) -> QuantProgram:
+    """Parse ``grad=...;wire=...;...`` into a validated QuantProgram."""
+    out = {}
+    for clause in spec.split(";"):
+        clause = clause.strip()
+        if not clause:
+            continue
+        key, sep, value = clause.partition("=")
+        key = key.strip()
+        value = value.strip()
+        if not sep or not value or key not in _KEYS:
+            raise ValueError(
+                f"cannot parse quant clause {clause!r}; expected key=SPEC "
+                f"with key in {_KEYS}\n{_SPEC_DOC}")
+        if key in out:
+            raise ValueError(f"duplicate quant key {key!r}")
+        validate_spec(value)
+        if key in ("mu", "nu") and get_codec(parse_spec(value).codec).needs_key:
+            raise ValueError(
+                f"quant clause {clause!r}: moment codecs must be "
+                f"deterministic (no RNG stream at re-encode)")
+        out[key] = value
+    return QuantProgram(**out)
+
+
+def format_quant_program(qp: QuantProgram) -> str:
+    """Render back to section text (parse round-trips)."""
+    return ";".join(f"{k}={getattr(qp, k)}" for k in _KEYS
+                    if getattr(qp, k) is not None)

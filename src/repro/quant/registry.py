@@ -1,0 +1,150 @@
+"""The codec registry: one entry point from spec strings to capabilities.
+
+A :class:`Codec` owns every capability of one quantization format:
+
+    make_spec(param)             "@param" grammar -> QuantSpec
+    encode(spec, x, key)         tensor -> encoded container (jit-safe pytree)
+    decode(spec, enc)            inverse (exact or bounded, see error_bound)
+    quantize(spec, x, key)       decode(encode(x)) — the fake-quant form
+    stored_nbytes(spec, shape, dtype)   static HBM capacity of the encoding
+    capacity_bytes(spec, enc)    static bytes of a concrete encoding
+    measured_bytes(spec, enc)    traced occupancy-aware bytes (wire figure)
+    error_bound(spec, enc)       per-element |decode - x| upper bound, or
+                                 None when the round trip is exact
+    packed_layout(spec, shape, dtype)   buffer inventory of the encoding
+    compute_on_packed(...)       optional: consume the packed form directly
+                                 (int8 MXU matmul, bsp tile-skip backward)
+
+Each capability may carry per-backend implementations in ``backends``
+(``{"capability": {"jnp": fn, "pallas": fn | None}}``); the method itself
+is the ``jnp`` reference. Registration is module-import-time
+(``repro.quant.codecs`` registers the built-ins); downstream code resolves
+spec strings through :func:`parse_spec` and never hard-codes a format.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.spec import QuantSpec
+
+
+def _nelems(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n
+
+
+def dense_nbytes(shape, dtype) -> int:
+    """Bytes the dense tensor occupies (what an encoding replaces)."""
+    return _nelems(shape) * jnp.dtype(dtype).itemsize
+
+
+class Codec:
+    """Base class: one registered quantization format (see module doc).
+
+    Subclasses must implement ``make_spec`` / ``encode`` / ``decode`` /
+    ``stored_nbytes``; everything else has honest defaults. ``needs_key``
+    declares whether encode requires an RNG key (dithered codecs) — codecs
+    with ``needs_key=False`` are deterministic and usable for optimizer
+    moments, which re-encode every step without an RNG stream.
+    """
+
+    name: str = ""
+    needs_key: bool = True
+    backends: Dict[str, Dict[str, Optional[callable]]] = {}
+
+    def make_spec(self, param: str) -> QuantSpec:
+        raise NotImplementedError
+
+    def encode(self, spec: QuantSpec, x: jax.Array,
+               key: Optional[jax.Array]):
+        raise NotImplementedError
+
+    def decode(self, spec: QuantSpec, enc) -> jax.Array:
+        raise NotImplementedError
+
+    def quantize(self, spec: QuantSpec, x: jax.Array,
+                 key: Optional[jax.Array]) -> jax.Array:
+        return self.decode(spec, self.encode(spec, x, key))
+
+    def stored_nbytes(self, spec: QuantSpec, shape, dtype) -> int:
+        raise NotImplementedError
+
+    def capacity_bytes(self, spec: QuantSpec, enc) -> int:
+        return self.stored_nbytes(spec, enc.shape, enc.dtype)
+
+    def measured_bytes(self, spec: QuantSpec, enc) -> jax.Array:
+        return jnp.int32(self.capacity_bytes(spec, enc))
+
+    def error_bound(self, spec: QuantSpec, enc) -> Optional[jax.Array]:
+        """Per-element upper bound on |decode(enc) - x|; None = exact."""
+        return None
+
+    def packed_layout(self, spec: QuantSpec, shape, dtype
+                      ) -> Dict[str, object]:
+        """Buffer inventory of the encoding for ``shape``/``dtype``."""
+        x = jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32) if self.needs_key \
+            else None
+        enc = jax.eval_shape(functools.partial(self.encode, spec), x, key)
+        flat, _ = jax.tree_util.tree_flatten_with_path(enc)
+        buffers: List[Tuple[str, tuple, str]] = []
+        for path, leaf in flat:
+            pname = "".join(str(p) for p in path).lstrip(".") or "data"
+            buffers.append((pname, tuple(leaf.shape),
+                            jnp.dtype(leaf.dtype).name))
+        return {"codec": self.name, "layout": spec.layout,
+                "buffers": buffers,
+                "capacity_bytes": self.stored_nbytes(spec, shape, dtype),
+                "dense_bytes": dense_nbytes(shape, dtype)}
+
+    def compute_on_packed(self, spec: QuantSpec, enc, *operands,
+                          backend: str = "jnp"):
+        raise NotImplementedError(
+            f"codec {self.name!r} has no compute_on_packed capability")
+
+
+_REGISTRY: Dict[str, Codec] = {}
+
+
+def register(codec: Codec) -> Codec:
+    if not codec.name:
+        raise ValueError("codec must set a name")
+    if codec.name in _REGISTRY:
+        raise ValueError(f"codec {codec.name!r} already registered")
+    _REGISTRY[codec.name] = codec
+    return codec
+
+
+def get_codec(name: str) -> Codec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown codec {name!r}; registered: {codec_names()}") from None
+
+
+def codec_names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+@functools.lru_cache(maxsize=None)
+def parse_spec(mode: str) -> QuantSpec:
+    """Resolve a spec string (``"nsd@0.5"``, ``"int4@g32"``) to a QuantSpec.
+
+    The codec before ``@`` must be registered; the codec's own
+    ``make_spec`` owns the parameter grammar, so new formats bring their
+    parameters without touching this front door.
+    """
+    kind, _, param = mode.partition("@")
+    return get_codec(kind).make_spec(param)
+
+
+def validate_spec(mode: str) -> str:
+    parse_spec(mode)
+    return mode

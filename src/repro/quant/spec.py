@@ -1,0 +1,66 @@
+"""`QuantSpec` — the quantization IR every codec resolves to.
+
+A spec string like ``"int8"``, ``"nsd@0.5"`` or ``"int4@g32"`` parses (via
+the codec registry, ``repro.quant.registry.parse_spec``) into one frozen
+:class:`QuantSpec` describing *what* the encoded representation is:
+
+    codec        registry name ("fp32", "bf16", "int8", "nsd", "int4", ...)
+    bits         payload bits per element (32, 16, 8, 4)
+    granularity  scale granularity: "tensor" | "row" | "group" | "chunk"
+    group        elements per scale group (granularity == "group")
+    dither       "none" | "uniform" (NSD-style subtractive-free dither) |
+                 "stochastic-round" (absmax int8 with a key)
+    layout       "dense" | "row-affine" | "grouped" | "bitmap+levels"
+    param        the codec's @-parameter (NSD scale s, int4 group size)
+    chunk        wire chunk size (layout == "bitmap+levels")
+
+The spec is pure data — hashable, static, safe to stamp into
+``StaticSpec`` / custom_vjp static arguments. All behavior (encode /
+decode / byte accounting / error bounds / compute-on-packed) lives on the
+registered :class:`repro.quant.registry.Codec` the spec names.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+GRANULARITIES = ("tensor", "row", "group", "chunk")
+DITHERS = ("none", "uniform", "stochastic-round")
+LAYOUTS = ("dense", "row-affine", "grouped", "bitmap+levels")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """One quantization format, fully resolved (see module docstring)."""
+
+    codec: str
+    bits: int = 32
+    granularity: str = "tensor"
+    group: int = 0
+    dither: str = "none"
+    layout: str = "dense"
+    param: float = 0.0
+    chunk: int = 0
+
+    def __post_init__(self):
+        if self.granularity not in GRANULARITIES:
+            raise ValueError(
+                f"granularity {self.granularity!r}: one of {GRANULARITIES}")
+        if self.dither not in DITHERS:
+            raise ValueError(f"dither {self.dither!r}: one of {DITHERS}")
+        if self.layout not in LAYOUTS:
+            raise ValueError(f"layout {self.layout!r}: one of {LAYOUTS}")
+        if self.granularity == "group" and self.group < 1:
+            raise ValueError(
+                f"group granularity needs group >= 1, got {self.group}")
+
+    @property
+    def mode(self) -> str:
+        """The canonical spec string this parses back from."""
+        if self.codec == "nsd":
+            return f"nsd@{self.param:g}"
+        if self.codec == "int4":
+            return f"int4@g{self.group}"
+        return self.codec
+
+    def replace(self, **kw) -> "QuantSpec":
+        return dataclasses.replace(self, **kw)

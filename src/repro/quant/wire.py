@@ -1,0 +1,305 @@
+"""Packed wire representation of an NSD-quantized tensor.
+
+The paper's distributed argument (§3.6) is that NSD gradients are cheap to
+*communicate*, not just to compute with: at the operating points of Table 1
+(~80-95% exact zeros, <=8-bit non-zeros) almost all of a dense f32 gradient
+is wire waste. This module defines the wire format that realizes that:
+
+    header        4 bytes   (element count)
+    deltas        4 bytes per chunk   (f32 step size; per-chunk so future
+                                       block-wise scaling rides for free —
+                                       NSD fills every entry with the same
+                                       per-tensor Delta)
+    bitmap        chunk/8 bytes per chunk  (1 bit per element: non-zero?)
+    levels        1 byte per NON-ZERO element (int8 k, compacted in order)
+
+so wire bytes = 4 + n_chunks*(4 + chunk/8) + nnz — measured, not estimated.
+At the paper's ~92% sparsity point with chunk=256 this is ~5-6% of dense
+f32 (bitmap 1/32 + levels 0.08/4 + per-chunk overhead), comfortably under
+the 25% acceptance bar.
+
+``pack_nsd``/``unpack_nsd`` are the jnp reference implementation; the
+bitmap halves are mirrored by the Pallas kernel pair in
+``repro.kernels.pack`` and the levels compact/expand halves by
+``repro.kernels.levels`` (select with ``backend="pallas"`` on
+``pack_indices``/``unpack_nsd`` — bit-exact vs the jnp path, which does a
+full-length cumsum per compact). The round trip is bit-exact against
+``repro.core.nsd``: for the same PRNG key, ``unpack_nsd(pack_nsd(x, key,
+s)) == nsd.nsd_quantize_int8(x, key, s).dequantize()`` with zero tolerance
+(tests/test_comm.py).
+
+Everything is shape-static so it jits and rides through ``shard_map`` /
+``ppermute``: the ``levels`` buffer keeps capacity for the all-nonzero worst
+case with the live prefix length in ``nnz``; only ``wire_bytes`` (a traced
+scalar) reflects what would actually cross a link.
+
+This module lived at ``repro.comm.wireformat`` before the quant subsystem
+unified the codec paths; that name remains as a deprecated re-export shim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nsd
+
+DEFAULT_CHUNK = 256  # elements per chunk; must be a multiple of 8
+HEADER_BYTES = 4
+_BIT_WEIGHTS = (1, 2, 4, 8, 16, 32, 64, 128)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PackedNSD:
+    """An NSD-quantized tensor in wire layout (shape-static, jit-safe)."""
+
+    levels: jax.Array  # int8 (n_chunks * chunk,) — non-zero ks compacted
+    #                    to the front in flat row-major order, zero padded
+    bitmap: jax.Array  # uint8 (n_chunks, chunk // 8) — LSB-first occupancy
+    deltas: jax.Array  # f32 (n_chunks,) — step size per chunk
+    nnz: jax.Array  # int32 scalar — live prefix length of ``levels``
+    shape: Tuple[int, ...] = dataclasses.field(
+        metadata=dict(static=True), default=())
+    dtype: str = dataclasses.field(metadata=dict(static=True), default="float32")
+    chunk: int = dataclasses.field(metadata=dict(static=True),
+                                   default=DEFAULT_CHUNK)
+
+    @property
+    def n_chunks(self) -> int:
+        return self.bitmap.shape[0]
+
+    def wire_bytes(self) -> jax.Array:
+        """Bytes this tensor occupies on the wire (traced int32 scalar)."""
+        fixed = HEADER_BYTES + self.n_chunks * (4 + self.chunk // 8)
+        return jnp.int32(fixed) + self.nnz
+
+    def dense_bytes(self) -> int:
+        """Bytes of the dense f32 tensor this replaces (static)."""
+        n = 1
+        for d in self.shape:
+            n *= int(d)
+        return n * 4
+
+
+def _padded_size(n: int, chunk: int) -> int:
+    return ((n + chunk - 1) // chunk) * chunk
+
+
+def pack_bitmap(bits: jax.Array) -> jax.Array:
+    """(..., 8m) bool/int occupancy -> (..., m) uint8, LSB-first.
+
+    This is the jnp reference for ``repro.kernels.pack.bitmap_pack_blocked``.
+    """
+    b = (bits != 0).astype(jnp.int32)
+    b8 = b.reshape(bits.shape[:-1] + (bits.shape[-1] // 8, 8))
+    w = jnp.asarray(_BIT_WEIGHTS, jnp.int32)
+    return jnp.sum(b8 * w, axis=-1).astype(jnp.uint8)
+
+
+def unpack_bitmap(bitmap: jax.Array) -> jax.Array:
+    """(..., m) uint8 -> (..., 8m) bool, inverse of ``pack_bitmap``."""
+    shifts = jnp.arange(8, dtype=jnp.int32)
+    bits = (bitmap[..., None].astype(jnp.int32) >> shifts) & 1
+    return bits.reshape(bitmap.shape[:-1] + (bitmap.shape[-1] * 8,)) != 0
+
+
+def popcount_u8(x: jax.Array) -> jax.Array:
+    """Per-byte population count (SWAR, int32 math) of a uint8 array."""
+    v = x.astype(jnp.int32)
+    v = v - ((v >> 1) & 0x55)
+    v = (v & 0x33) + ((v >> 2) & 0x33)
+    return (v + (v >> 4)) & 0x0F
+
+
+def _pad2d(x: jax.Array, m: int, n: int) -> jax.Array:
+    M, N = x.shape
+    pm, pn = (-M) % m, (-N) % n
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+def tile_nnz_from_bitmap(bitmap: jax.Array, bm: int = 128, bk: int = 128
+                         ) -> jax.Array:
+    """Per-tile non-zero counts straight from a packed 2-D occupancy bitmap.
+
+    ``bitmap``: (M, K//8) uint8 as produced by
+    ``repro.kernels.pack.bitmap_pack_blocked`` (byte b of row i covers
+    elements 8b..8b+7). Returns int32 (ceil(M/bm), ceil(K/8/(bk/8))) tile
+    counts via a popcount reduction — the bitmap is never expanded to
+    element bits, so this is the 1/8th-bandwidth path the backward matmul
+    uses to derive its tile mask from the *wire* representation.
+    """
+    assert bk % 8 == 0, bk
+    bkb = bk // 8
+    pc = _pad2d(popcount_u8(bitmap), bm, bkb)
+    M, KB = pc.shape
+    return pc.reshape(M // bm, bm, KB // bkb, bkb).sum((1, 3))
+
+
+def tile_mask_from_bitmap(bitmap: jax.Array, bm: int = 128, bk: int = 128
+                          ) -> jax.Array:
+    """(M//bm, K//bk) int32 tile-occupancy mask from a packed 2-D bitmap.
+
+    Any-bit-set reduction (a byte is occupied iff non-zero); shapes that
+    are not tile multiples are zero-padded, so padded tiles read 0 =
+    skip. Equals ``dense tile mask of the int8 k tensor`` bit-exactly
+    (pinned by tests/test_kernels.py).
+    """
+    assert bk % 8 == 0, bk
+    bkb = bk // 8
+    nz = _pad2d((bitmap != 0).astype(jnp.int32), bm, bkb)
+    M, KB = nz.shape
+    tiles = nz.reshape(M // bm, bm, KB // bkb, bkb).sum((1, 3))
+    return (tiles > 0).astype(jnp.int32)
+
+
+def tile_mask_from_packed(p: PackedNSD, bm: int = 128, bk: int = 128
+                          ) -> jax.Array:
+    """Tile mask for a 2-D tensor directly from its wire-format bitmap.
+
+    Routes through a (M, K//8) byte view when rows are byte-aligned
+    (K % 8 == 0) — no bit expansion; otherwise falls back to unpacking
+    the bitmap to element bits (bytes straddle rows). Either way the
+    result equals the dense-computed tile mask for any shape, including
+    all-zero, non-chunk-multiple and single-tile cases (property-tested).
+    """
+    assert len(p.shape) == 2, p.shape
+    M, K = (int(d) for d in p.shape)
+    flat = p.bitmap.reshape(-1)
+    if K % 8 == 0:
+        b2d = flat[: M * K // 8].reshape(M, K // 8)
+        return tile_mask_from_bitmap(b2d, bm, bk)
+    bits = unpack_bitmap(flat)[: M * K].reshape(M, K)
+    occ = _pad2d(bits.astype(jnp.int32), bm, bk)
+    Mp, Kp = occ.shape
+    tiles = occ.reshape(Mp // bm, bm, Kp // bk, bk).sum((1, 3))
+    return (tiles > 0).astype(jnp.int32)
+
+
+def _compact(k_flat: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Move the non-zeros of an int8 vector to the front, in order."""
+    n = k_flat.shape[0]
+    nz = k_flat != 0
+    pos = jnp.cumsum(nz.astype(jnp.int32)) - 1
+    tgt = jnp.where(nz, pos, n)  # out-of-bounds for zeros -> dropped
+    levels = jnp.zeros((n,), jnp.int8).at[tgt].set(k_flat, mode="drop")
+    return levels, jnp.sum(nz.astype(jnp.int32))
+
+
+def _expand(levels: jax.Array, mask_flat: jax.Array) -> jax.Array:
+    """Inverse of ``_compact`` given the occupancy mask."""
+    pos = jnp.cumsum(mask_flat.astype(jnp.int32)) - 1
+    return jnp.where(mask_flat, levels[jnp.clip(pos, 0, None)],
+                     jnp.zeros((), jnp.int8))
+
+
+def _compact_pallas(k_flat: jax.Array, chunk: int
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """``_compact`` via the chunk-local Pallas kernel + a short assembly.
+
+    The kernel compacts each 256-element chunk independently (column-local
+    butterfly routing in VMEM, no global cumsum); the global levels buffer
+    is then assembled with a cumsum over the *per-chunk counts* — n/256x
+    shorter than the jnp path's element cumsum — and one scatter. Stable
+    order per chunk + chunks concatenated in order == the jnp result
+    bit-exactly (pinned in tests/test_levels_kernel.py).
+    """
+    from repro.kernels.levels.levels import levels_compact_blocked
+
+    n = k_flat.shape[0]
+    n_chunks = n // chunk
+    local_t, counts = levels_compact_blocked(
+        k_flat.reshape(n_chunks, chunk).T)
+    starts = jnp.cumsum(counts) - counts
+    i = jnp.arange(chunk, dtype=jnp.int32)[:, None]
+    tgt = jnp.where(i < counts[None, :], starts[None, :] + i, n)
+    levels = jnp.zeros((n,), jnp.int8).at[tgt.T.reshape(-1)].set(
+        local_t.T.reshape(-1), mode="drop")
+    return levels, jnp.sum(counts)
+
+
+def _expand_pallas(levels: jax.Array, mask_flat: jax.Array, chunk: int
+                   ) -> jax.Array:
+    """``_expand`` via the chunk-local Pallas kernel (see _compact_pallas)."""
+    from repro.kernels.levels.levels import levels_expand_blocked
+
+    n = mask_flat.shape[0]
+    n_chunks = n // chunk
+    m2 = mask_flat.reshape(n_chunks, chunk)
+    counts = jnp.sum(m2.astype(jnp.int32), axis=1)
+    starts = jnp.cumsum(counts) - counts
+    i = jnp.arange(chunk, dtype=jnp.int32)[None, :]
+    idx = starts[:, None] + i
+    local = jnp.where(i < counts[:, None],
+                      levels[jnp.clip(idx, 0, n - 1)],
+                      jnp.zeros((), jnp.int8))
+    out_t = levels_expand_blocked(local.T, m2.T.astype(jnp.int8))
+    return out_t.T.reshape(-1)
+
+
+def pack_indices(k: jax.Array, delta: jax.Array, shape: Tuple[int, ...],
+                 dtype, chunk: int = DEFAULT_CHUNK, *,
+                 backend: str = "jnp") -> PackedNSD:
+    """Pack precomputed NSD indices (int8/int32 k) + scalar delta.
+
+    Split out from ``pack_nsd`` so callers that already ran the fused
+    quantization kernel (which emits k directly) can skip requantizing.
+    ``backend="pallas"`` compacts the levels through
+    ``repro.kernels.levels`` (chunk must be 256), bit-exact vs the jnp
+    full-cumsum path.
+    """
+    assert chunk % 8 == 0, chunk
+    flat = k.astype(jnp.int8).reshape(-1)
+    padded = _padded_size(flat.shape[0], chunk)
+    flat = jnp.pad(flat, (0, padded - flat.shape[0]))
+    n_chunks = padded // chunk
+    if backend == "pallas" and chunk == 256:
+        levels, nnz = _compact_pallas(flat, chunk)
+    else:
+        levels, nnz = _compact(flat)
+    bitmap = pack_bitmap((flat != 0).reshape(n_chunks, chunk))
+    deltas = jnp.broadcast_to(delta.astype(jnp.float32), (n_chunks,))
+    return PackedNSD(levels=levels, bitmap=bitmap, deltas=deltas, nnz=nnz,
+                     shape=tuple(shape), dtype=jnp.dtype(dtype).name,
+                     chunk=chunk)
+
+
+def pack_nsd(x: jax.Array, key: jax.Array, s: float,
+             chunk: int = DEFAULT_CHUNK, *, backend: str = "jnp"
+             ) -> PackedNSD:
+    """NSD-quantize ``x`` and lay it out in wire format.
+
+    Uses the exact ``repro.core.nsd`` operator (per-tensor Delta = s*std,
+    dither noise drawn over the ORIGINAL shape) so the round trip is
+    bit-identical to ``nsd.nsd_quantize_int8(x, key, s).dequantize()``.
+    """
+    delta = nsd.compute_delta(x, s)
+    k = nsd.nsd_indices(x, key, delta)
+    return pack_indices(k, delta, x.shape, x.dtype, chunk, backend=backend)
+
+
+def unpack_nsd(p: PackedNSD, *, backend: str = "jnp") -> jax.Array:
+    """Reconstruct the dequantized tensor from wire layout alone."""
+    mask = unpack_bitmap(p.bitmap).reshape(-1)
+    if backend == "pallas" and p.chunk == 256:
+        k = _expand_pallas(p.levels, mask, p.chunk)
+    else:
+        k = _expand(p.levels, mask)
+    vals = (k.astype(jnp.float32).reshape(p.n_chunks, p.chunk)
+            * p.deltas[:, None]).reshape(-1)
+    n = 1
+    for d in p.shape:
+        n *= int(d)
+    return vals[:n].reshape(p.shape).astype(jnp.dtype(p.dtype))
+
+
+def wire_bytes_dense(shape, dtype=jnp.float32) -> int:
+    """Bytes a dense tensor of this shape/dtype occupies on the wire."""
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n * jnp.dtype(dtype).itemsize

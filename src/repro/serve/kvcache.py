@@ -7,7 +7,8 @@ per-slot ``page_table`` (shared across layers — every layer sees the same
 token positions); the host-side free list lives in
 ``repro.serve.scheduler.PagePool``.
 
-Pages are *sealed* through ``repro.memory.codec``: while a slot writes
+Pages are *sealed* through the quant engine (``repro.quant``): while a
+slot writes
 positions into its current page, the raw values sit in a per-slot fp
 ``tail`` buffer; the micro-step that fills the page's last position encodes
 the tail (fp32 passthrough / bf16 / int8 affine-per-row / NSD wire format —
@@ -30,8 +31,11 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.memory import codec
+from repro import quant as codec
 
+# The documented common set; any registered quant codec spec (e.g.
+# "int4@g32") is a valid page mode — init_paged validates through the
+# registry, so new codecs reach KV pages with zero code here.
 KV_MODES = ("fp32", "bf16", "int8", "nsd")
 
 
@@ -160,8 +164,11 @@ def init_paged(mode: str, batch: int, max_len: int, n_pages: int, page: int,
     ``max_len`` bounds the logical pages per slot; ``n_pages`` is the
     shared physical pool (oversubscription is the scheduler's job).
     """
-    if mode not in KV_MODES:
-        raise ValueError(f"kv mode {mode!r}: one of {KV_MODES}")
+    try:
+        codec.validate_spec(mode)
+    except ValueError:
+        raise ValueError(f"kv mode {mode!r}: one of {KV_MODES} or a "
+                         f"registered quant codec spec") from None
     if page < 1 or n_pages < 1:
         raise ValueError("page and n_pages must be >= 1")
     max_pages = pages_for(max_len, page)

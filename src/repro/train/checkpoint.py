@@ -12,6 +12,13 @@ Layout (one directory per step):
 The write path is crash-consistent: data first, marker last, rotation after.
 Async mode pushes the (already host-local numpy) arrays to a writer thread
 so the train loop only blocks for device->host transfer, not disk.
+
+The async path is observable: the writer thread records ``ckpt_write``
+spans (nested ``serialize`` / ``commit`` / ``rotate``) on the phase stream,
+and the loop side records ``ckpt_gather`` (device->host), ``ckpt_drain``
+(backpressure join on the previous in-flight write) and ``ckpt_wait``.
+Span stacks are thread-local, so writer spans never nest under whatever
+span the train loop is in when the write completes.
 """
 from __future__ import annotations
 
@@ -25,6 +32,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.obs.trace import span
 from repro.utils import get_logger
 from repro.utils.pytree import flatten_with_names
 
@@ -67,11 +75,13 @@ class CheckpointManager:
 
     def save(self, step: int, tree: Any) -> None:
         flat = flatten_with_names(tree)
-        # device -> host (blocking part; disk write can go async)
-        host_flat = [(name, self._to_savable(np.asarray(leaf)))
-                     for name, leaf in flat]
+        with span("ckpt_gather"):
+            # device -> host (blocking part; disk write can go async)
+            host_flat = [(name, self._to_savable(np.asarray(leaf)))
+                         for name, leaf in flat]
         if self._pending is not None:
-            self._pending.join()  # one checkpoint in flight at a time
+            with span("ckpt_drain"):
+                self._pending.join()  # one checkpoint in flight at a time
             self._pending = None
         if self.async_write:
             t = threading.Thread(
@@ -83,33 +93,44 @@ class CheckpointManager:
 
     def wait(self) -> None:
         if self._pending is not None:
-            self._pending.join()
+            with span("ckpt_wait"):
+                self._pending.join()
             self._pending = None
 
     def _write(self, step: int, host_flat: List[Tuple[str, np.ndarray]]):
+        with span("ckpt_write"):
+            self._write_spanned(step, host_flat)
+
+    def _write_spanned(self, step: int,
+                       host_flat: List[Tuple[str, np.ndarray]]):
         d = _step_dir(self.base, step)
         tmp = d + ".tmp"
-        shutil.rmtree(tmp, ignore_errors=True)
-        os.makedirs(tmp, exist_ok=True)
-        payload = {name: arr for name, arr in host_flat}
-        shard_path = os.path.join(tmp, f"shard_{jax.process_index():05d}.npz")
-        np.savez(shard_path, **payload)
-        manifest = {
-            "step": step,
-            "leaves": [
-                {"name": n, "shape": list(a.shape), "dtype": str(a.dtype),
-                 "crc": zlib.crc32(np.ascontiguousarray(a).tobytes()) & 0xFFFFFFFF}
-                for n, a in host_flat
-            ],
-        }
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
-        with open(os.path.join(tmp, _MARKER), "w") as f:
-            f.write("ok")
-        shutil.rmtree(d, ignore_errors=True)
-        os.rename(tmp, d)
+        with span("serialize"):
+            shutil.rmtree(tmp, ignore_errors=True)
+            os.makedirs(tmp, exist_ok=True)
+            payload = {name: arr for name, arr in host_flat}
+            shard_path = os.path.join(
+                tmp, f"shard_{jax.process_index():05d}.npz")
+            np.savez(shard_path, **payload)
+            manifest = {
+                "step": step,
+                "leaves": [
+                    {"name": n, "shape": list(a.shape), "dtype": str(a.dtype),
+                     "crc": zlib.crc32(
+                         np.ascontiguousarray(a).tobytes()) & 0xFFFFFFFF}
+                    for n, a in host_flat
+                ],
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+        with span("commit"):
+            with open(os.path.join(tmp, _MARKER), "w") as f:
+                f.write("ok")
+            shutil.rmtree(d, ignore_errors=True)
+            os.rename(tmp, d)
         log.info("saved checkpoint step=%d (%d leaves)", step, len(host_flat))
-        self._rotate()
+        with span("rotate"):
+            self._rotate()
 
     def _rotate(self):
         steps = list_steps(self.base)

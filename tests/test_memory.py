@@ -124,9 +124,12 @@ class TestMemoryPolicy:
         with pytest.raises(ValueError, match="rule syntax"):
             parse_memory_program("rule fc0")
         with pytest.raises(ValueError, match="unknown residual mode"):
-            parse_memory_program("default=int4")
+            parse_memory_program("default=fp64")
         with pytest.raises(ValueError, match=r"MemoryRule\('fc'\)"):
-            parse_memory_program("rule fc:int4")
+            parse_memory_program("rule fc:fp64")
+        # registry-widened grammar: any registered quant codec is a mode
+        pol = parse_memory_program("default=int4@g32;rule fc:m8")
+        assert pol.default == "int4@g32"
 
     def test_policy_is_hashable(self):
         a = parse_memory_program("default=nsd;rule fc:int8")

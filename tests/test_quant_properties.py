@@ -1,0 +1,142 @@
+"""Hypothesis property tests over the quant registry.
+
+Kept separate from test_quant.py: hypothesis ships in the [test] extra,
+not as a hard dependency (same policy as test_memory_properties.py).
+Adversarial surface: arbitrary shapes (including sizes that are no
+multiple of the wire chunk or the int4 group), extreme scales, all-zero
+tensors, and clip saturation — raced over EVERY registered codec through
+the one front door, with each codec judged against its own
+``error_bound``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.quant import (decode, encode, error_bound, nsd_fakequant,  # noqa: E402
+                         parse_spec, quantize, resid_key, stored_nbytes)
+
+# parameterized spec strings so the grammar is part of the raced surface
+BOUNDED_SPECS = ("bf16", "int8", "int8_absmax", "int4@g32", "int4@g64",
+                 "m8", "nsd@0.5", "nsd@2")
+EXACT_SPECS = ("fp32", "remat")
+
+
+def _tensor(spec, rows, cols, scale, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols),
+                          jnp.float32) * scale
+    if parse_spec(spec).codec == "u8":
+        return jnp.square(x)
+    return x
+
+
+@settings(max_examples=20, deadline=None)
+@given(spec=st.sampled_from(BOUNDED_SPECS + ("u8",)),
+       rows=st.integers(1, 9), cols=st.integers(1, 67),
+       scale=st.floats(1e-3, 1e3), seed=st.integers(0, 2**31 - 1))
+def test_property_roundtrip_within_own_bound(spec, rows, cols, scale, seed):
+    """decode(encode(x)) deviates from x by at most the codec's declared
+    per-element error_bound — for ANY shape and scale."""
+    x = _tensor(spec, rows, cols, scale, seed)
+    key = resid_key(jax.random.PRNGKey(seed))
+    enc = encode(spec, x, key)
+    err = np.asarray(jnp.abs(decode(spec, enc) - x))
+    bound = np.asarray(error_bound(spec, enc))
+    assert (err <= bound * (1 + 1e-4) + 1e-12).all(), \
+        (spec, float((err / (bound + 1e-12)).max()))
+
+
+@settings(max_examples=10, deadline=None)
+@given(spec=st.sampled_from(EXACT_SPECS), rows=st.integers(1, 9),
+       cols=st.integers(1, 67), seed=st.integers(0, 2**31 - 1))
+def test_property_identity_codecs_exact(spec, rows, cols, seed):
+    x = _tensor(spec, rows, cols, 1.0, seed)
+    key = resid_key(jax.random.PRNGKey(seed))
+    np.testing.assert_array_equal(np.asarray(decode(spec, encode(spec, x, key))),
+                                  np.asarray(x))
+    assert error_bound(spec, encode(spec, x, key)) is None
+
+
+@settings(max_examples=15, deadline=None)
+@given(rows=st.integers(1, 9), cols=st.integers(1, 41),
+       s=st.floats(0.25, 4.0), seed=st.integers(0, 2**31 - 1))
+def test_property_nsd_registry_bit_exact(rows, cols, s, seed):
+    """The registry's nsd codec IS the paper operator: bit-exact against
+    the fakequant reference for any shape and scale, same key."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (rows, cols), jnp.float32)
+    k = resid_key(jax.random.fold_in(key, 1))
+    spec = f"nsd@{s}"
+    np.testing.assert_array_equal(
+        np.asarray(decode(spec, encode(spec, x, k))),
+        np.asarray(nsd_fakequant(x, k, s)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(spec=st.sampled_from(BOUNDED_SPECS + EXACT_SPECS + ("u8",)),
+       n=st.integers(1, 300), seed=st.integers(0, 2**31 - 1))
+def test_property_all_zero_decodes_to_zero(spec, n, seed):
+    """Zero is representable in every format: an all-zero tensor survives
+    any codec exactly (the re-encode fixed point moments rely on)."""
+    x = jnp.zeros((n,), jnp.float32)
+    key = resid_key(jax.random.PRNGKey(seed))
+    np.testing.assert_array_equal(
+        np.asarray(decode(spec, encode(spec, x, key))),
+        np.zeros((n,), np.float32))
+
+
+@settings(max_examples=15, deadline=None)
+@given(spec=st.sampled_from(BOUNDED_SPECS), rows=st.integers(1, 5),
+       cols=st.integers(2, 33), outlier=st.floats(1e4, 1e7),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_outlier_saturation_stays_finite(spec, rows, cols, outlier,
+                                                  seed):
+    """A huge outlier saturates the integer range but never produces
+    non-finite decodes, and the outlier's own reconstruction still honors
+    the (outlier-widened) bound."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (rows, cols), jnp.float32)
+    x = x.at[0, 0].set(jnp.float32(outlier))
+    k = resid_key(jax.random.fold_in(key, 1))
+    enc = encode(spec, x, k)
+    dec = np.asarray(decode(spec, enc))
+    assert np.isfinite(dec).all(), spec
+    err = np.abs(dec - np.asarray(x))
+    bound = np.asarray(error_bound(spec, enc))
+    assert (err <= bound * (1 + 1e-4) + 1e-12).all(), spec
+
+
+@settings(max_examples=15, deadline=None)
+@given(spec=st.sampled_from(BOUNDED_SPECS + ("u8",)),
+       rows=st.integers(1, 9), cols=st.integers(1, 67),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_quantize_matches_encode_decode(spec, rows, cols, seed):
+    """The fake-quant shortcut is exactly the round trip."""
+    x = _tensor(spec, rows, cols, 2.0, seed)
+    key = resid_key(jax.random.PRNGKey(seed))
+    np.testing.assert_array_equal(
+        np.asarray(quantize(spec, x, key)),
+        np.asarray(decode(spec, encode(spec, x, key))))
+
+
+@settings(max_examples=15, deadline=None)
+@given(spec=st.sampled_from(BOUNDED_SPECS + ("u8",)),
+       rows=st.integers(1, 9), cols=st.integers(1, 67))
+def test_property_stored_nbytes_beats_dense_above_threshold(spec, rows,
+                                                            cols):
+    """Static byte accounting: every sub-32-bit codec stores strictly
+    fewer bytes than dense fp32 once the tensor amortizes its scale
+    metadata (one full group/row/chunk)."""
+    from repro.quant import dense_nbytes
+
+    ps = parse_spec(spec)
+    n = rows * cols
+    amortized = {"group": ps.group or 1, "chunk": 512,
+                 "row": 4 * cols, "tensor": 8}[ps.granularity]
+    if n < amortized:
+        return  # metadata-dominated sizes may legitimately exceed dense
+    assert (stored_nbytes(spec, (rows, cols), jnp.float32)
+            < dense_nbytes((rows, cols), jnp.float32)), spec
